@@ -1,0 +1,33 @@
+"""Fig. 10: scheduling policy vs load — affinity vs Hit-Only vs Load-Only
+vs round-robin, mean TTFT under rising QPS."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+from repro.configs import registry as REG
+from repro.core import cost_model as CM
+from repro.core import simulator as SIM
+
+
+def run(out_dir: str = "results/bench", quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = REG.ARCHS["rcllm-qwen3-8b"]
+    k = 8
+    loads = [10, 30] if quick else [10, 20, 30, 40, 60]
+    out = {}
+    for qps in loads:
+        reqs, placement, _ = SIM.make_sim_setup(
+            k=k, n_requests=800, qps=float(qps), n_items=4000, seed=30)
+        row = {}
+        for pol in ("affinity", "hit_only", "load_only", "round_robin"):
+            res = SIM.simulate(cfg, CM.V5E_1, reqs, placement,
+                               SIM.SimConfig(mode="rcllm", policy=pol))
+            row[pol] = {"mean": float(res.ttft_s.mean()),
+                        "hit": float(res.hit_rates.mean())}
+            emit(f"fig10/qps={qps}/{pol}", 0.0,
+                 f"mean={row[pol]['mean']:.3f}s hit={row[pol]['hit']:.3f}")
+        out[qps] = row
+    with open(os.path.join(out_dir, "fig10_scheduling.json"), "w") as f:
+        json.dump(out, f, indent=1)

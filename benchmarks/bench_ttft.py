@@ -1,0 +1,48 @@
+"""Fig. 6: TTFT CDF at K=40 instances — RcLLM vs Prefix-Cache vs
+Full-Recompute, for the 8B-class (single-chip instances) and 72B-class
+(TP=4 instances) cost models, across the three dataset profiles."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.configs import registry as REG
+from repro.configs.base import LMConfig
+from repro.core import cost_model as CM
+from repro.core import simulator as SIM
+
+QWEN72B = LMConfig(name="qwen-72b", n_layers=80, d_model=8192, n_heads=64,
+                   n_kv_heads=8, head_dim=128, d_ff=29568,
+                   vocab_size=152064, mlp_type="swiglu")
+
+
+def run(out_dir: str = "results/bench", k: int = 40, n_requests: int = 1500,
+        quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    cfgs = {"qwen3-8b": (REG.ARCHS["rcllm-qwen3-8b"], CM.V5E_1, 30.0),
+            "qwen-72b": (QWEN72B, CM.V5E_TP4, 12.0)}
+    profiles = ["amazon"] if quick else ["amazon", "yelp", "goodreads"]
+    results = {}
+    for prof in profiles:
+        reqs, placement, _ = SIM.make_sim_setup(
+            profile_name=prof, k=k, n_requests=n_requests,
+            qps=30.0 * k / 8, n_items=4000, seed=10)
+        for mname, (cfg, hw, _q) in cfgs.items():
+            row = {}
+            for mode in ("rcllm", "prefix", "full"):
+                us = time_call(lambda m=mode, c=cfg, h=hw: SIM.simulate(
+                    c, h, reqs, placement, SIM.SimConfig(mode=m)), repeats=1)
+                res = SIM.simulate(cfg, hw, reqs, placement,
+                                   SIM.SimConfig(mode=mode))
+                row[mode] = res.summary()
+                emit(f"fig6/{prof}/{mname}/{mode}", us,
+                     f"p50={row[mode]['p50']:.3f}s p99={row[mode]['p99']:.3f}s")
+            for pct in ("p50", "p99"):
+                sp = row["prefix"][pct] / row["rcllm"][pct]
+                emit(f"fig6/{prof}/{mname}/speedup_{pct}", 0.0, f"{sp:.2f}x")
+            results[f"{prof}/{mname}"] = row
+    with open(os.path.join(out_dir, "fig6_ttft.json"), "w") as f:
+        json.dump(results, f, indent=1)

@@ -1,0 +1,21 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows; `derived`
+carries the paper-facing quantity (speedup, hit rate, NDCG, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def time_call(fn: Callable, repeats: int = 3) -> float:
+    fn()                                     # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats * 1e6

@@ -1,0 +1,64 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sweeps (CI);
+default sizes reproduce the paper's structure in full.
+
+  fig6        TTFT CDF, K=40, RcLLM vs Prefix vs Full (8B + 72B)
+  fig8_9      speedup / hit-rate / footprint vs cluster size K
+  fig10       scheduling policies under rising load
+  fig11       recompute budget r vs TTFT
+  tableIII    ranking accuracy: Full vs RcLLM vs CacheBlend vs EPIC
+  kernels     Pallas kernel probes + analytic FLOP reductions
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import sys
+import time
+
+print = functools.partial(print, flush=True)   # keep CSV ordered through pipes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help="fig6|fig8_9|fig10|fig11|tableIII|kernels|all")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--planted", action="store_true",
+                    help="tableIII: train the planted-preference ranker")
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    jobs = {
+        "fig6": lambda: __import__(
+            "benchmarks.bench_ttft", fromlist=["run"]).run(
+                args.out, quick=args.quick),
+        "fig8_9": lambda: __import__(
+            "benchmarks.bench_scalability", fromlist=["run"]).run(
+                args.out, quick=args.quick),
+        "fig10": lambda: __import__(
+            "benchmarks.bench_scheduling", fromlist=["run"]).run(
+                args.out, quick=args.quick),
+        "fig11": lambda: __import__(
+            "benchmarks.bench_recompute", fromlist=["run"]).run(
+                args.out, quick=args.quick),
+        "tableIII": lambda: __import__(
+            "benchmarks.bench_accuracy", fromlist=["run"]).run(
+                args.out, quick=args.quick, planted=args.planted),
+        "kernels": lambda: __import__(
+            "benchmarks.bench_kernels", fromlist=["run"]).run(
+                args.out, quick=args.quick),
+    }
+    for name, job in jobs.items():
+        if args.only not in ("all", name):
+            continue
+        job()
+    print(f"# total_bench_seconds,{time.time() - t0:.1f},")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,160 @@
+"""Config dataclasses for all model families.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG`` (the exact published hyperparameters from the assignment block)
+and the registry exposes reduced variants for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    """Decoder-only transformer LM (dense or MoE)."""
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int                      # dense MLP hidden (ignored if moe set)
+    vocab_size: int
+    head_dim: Optional[int] = None  # default: d_model // n_heads
+    mlp_type: str = "swiglu"        # swiglu | geglu | relu2 | gelu
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    # execution knobs
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 1024
+    remat: bool = True
+    use_pallas: bool = False        # Pallas kernels (TPU); pure-JAX otherwise
+    causal_block_pairing: bool = False  # §Perf: skip fully-masked causal blocks
+    optimizer: str = "adamw"        # adamw | adafactor
+    # RcLLM serving integration
+    rcllm_enabled: bool = True      # item-KV reuse + selective attention apply
+    selective_window: int = 256     # sliding window for selective recompute
+    selective_hh_frac: float = 0.05  # heavy-hitter fraction (r budget contribution)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe is not None
+
+    def param_count(self) -> int:
+        """Total parameters (embedding included)."""
+        dh = self.resolved_head_dim
+        attn = self.d_model * (self.n_heads * dh) * 2  # wq, wo
+        attn += self.d_model * (self.n_kv_heads * dh) * 2  # wk, wv
+        if self.moe is not None:
+            n_mats = 3 if self.mlp_type in ("swiglu", "geglu") else 2
+            ffn = self.moe.n_experts * n_mats * self.d_model * self.moe.d_ff
+            ffn += self.d_model * self.moe.n_experts  # router
+        else:
+            n_mats = 3 if self.mlp_type in ("swiglu", "geglu") else 2
+            ffn = n_mats * self.d_model * self.d_ff
+        norms = 2 * self.d_model
+        per_layer = attn + ffn + norms
+        embed = self.vocab_size * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + self.d_model
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only top-k experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        dh = self.resolved_head_dim
+        attn = self.d_model * (self.n_heads * dh) * 2
+        attn += self.d_model * (self.n_kv_heads * dh) * 2
+        n_mats = 3 if self.mlp_type in ("swiglu", "geglu") else 2
+        ffn = self.moe.top_k * n_mats * self.d_model * self.moe.d_ff
+        ffn += self.d_model * self.moe.n_experts
+        per_layer = attn + ffn + 2 * self.d_model
+        embed = self.vocab_size * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + self.d_model
+
+
+@dataclass(frozen=True)
+class RecsysConfig:
+    """Sparse-embedding CTR / sequential recommendation models."""
+    name: str
+    kind: str                       # wide_deep | autoint | dien | bert4rec
+    embed_dim: int
+    n_dense: int = 13
+    # CTR models: per-field vocab sizes (huge sparse tables)
+    field_vocabs: Tuple[int, ...] = ()
+    mlp_dims: Tuple[int, ...] = ()
+    # autoint
+    n_attn_layers: int = 0
+    n_heads: int = 0
+    d_attn: int = 0
+    # dien
+    seq_len: int = 0
+    gru_dim: int = 0
+    # bert4rec
+    n_blocks: int = 0
+    n_items: int = 0
+    n_cates: int = 0
+    dtype: str = "float32"
+    use_pallas: bool = False
+    # RcLLM analogue: sharded embedding store w/ affinity routing
+    rcllm_enabled: bool = False
+
+    def table_rows(self) -> int:
+        rows = sum(self.field_vocabs)
+        rows += self.n_items + self.n_cates
+        return rows
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    """SchNet-style interaction network."""
+    name: str
+    n_interactions: int = 3
+    d_hidden: int = 64
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    n_atom_types: int = 100
+    readout: str = "sum"
+    dtype: str = "float32"
+    rcllm_enabled: bool = False
+
+
+def reduced(cfg):
+    """Return a CPU-smoke-testable reduction of any config (same family/code path)."""
+    if isinstance(cfg, LMConfig):
+        moe = None
+        if cfg.moe is not None:
+            moe = MoEConfig(n_experts=4, top_k=2, d_ff=64,
+                            capacity_factor=cfg.moe.capacity_factor)
+        return dataclasses.replace(
+            cfg, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=512, moe=moe, dtype="float32",
+            attn_q_chunk=32, attn_kv_chunk=32, sliding_window=None,
+            remat=False)
+    if isinstance(cfg, RecsysConfig):
+        return dataclasses.replace(
+            cfg,
+            field_vocabs=tuple(min(v, 1000) for v in cfg.field_vocabs),
+            n_items=min(cfg.n_items, 1000) if cfg.n_items else 0,
+            n_cates=min(cfg.n_cates, 50) if cfg.n_cates else 0,
+            seq_len=min(cfg.seq_len, 16) if cfg.seq_len else 0)
+    if isinstance(cfg, GNNConfig):
+        return dataclasses.replace(cfg, n_interactions=2, d_hidden=16, n_rbf=8)
+    raise TypeError(type(cfg))

@@ -1,0 +1,191 @@
+"""Architecture registry: the 10 assigned archs (+ the paper's own model),
+their input-shape sets (40 dry-run cells), and ShapeDtypeStruct input specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig, reduced
+from repro.configs import (autoint, bert4rec, dien, gemma_7b, kimi_k2_1t_a32b,
+                           moonshot_v1_16b_a3b, nemotron_4_15b, rcllm_qwen3_8b,
+                           schnet, starcoder2_15b, wide_deep)
+
+ARCHS: Dict[str, Any] = {
+    "nemotron-4-15b": nemotron_4_15b.CONFIG,
+    "starcoder2-15b": starcoder2_15b.CONFIG,
+    "gemma-7b": gemma_7b.CONFIG,
+    "kimi-k2-1t-a32b": kimi_k2_1t_a32b.CONFIG,
+    "moonshot-v1-16b-a3b": moonshot_v1_16b_a3b.CONFIG,
+    "schnet": schnet.CONFIG,
+    "dien": dien.CONFIG,
+    "wide-deep": wide_deep.CONFIG,
+    "autoint": autoint.CONFIG,
+    "bert4rec": bert4rec.CONFIG,
+    # the paper's own serving model (not part of the 40 assigned cells)
+    "rcllm-qwen3-8b": rcllm_qwen3_8b.CONFIG,
+}
+
+ASSIGNED = [a for a in ARCHS if a != "rcllm-qwen3-8b"]
+
+
+def family_of(arch: str) -> str:
+    cfg = ARCHS[arch]
+    if isinstance(cfg, LMConfig):
+        return "lm"
+    if isinstance(cfg, GNNConfig):
+        return "gnn"
+    if isinstance(cfg, RecsysConfig):
+        return "recsys"
+    raise KeyError(arch)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    step: str            # train | prefill | decode | score | retrieval
+    dims: Dict[str, int]
+
+
+LM_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", dict(seq=4096, batch=256)),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", dict(seq=32768, batch=32)),
+    "decode_32k": ShapeSpec("decode_32k", "decode", dict(seq=32768, batch=128)),
+    "long_500k": ShapeSpec("long_500k", "decode", dict(seq=524288, batch=1)),
+}
+
+GNN_SHAPES = {
+    "full_graph_sm": ShapeSpec("full_graph_sm", "train",
+                               dict(n_nodes=2708, n_edges=10556, d_feat=1433,
+                                    n_classes=7)),
+    "minibatch_lg": ShapeSpec("minibatch_lg", "train",
+                              dict(n_nodes=232_965, n_edges=114_615_892,
+                                   batch_nodes=1024, fanout=(15, 10),
+                                   d_feat=602, n_classes=41,
+                                   # sampled-subgraph padded sizes:
+                                   sub_nodes=1024 + 1024 * 15 + 1024 * 15 * 10,
+                                   sub_edges=1024 * 15 + 1024 * 15 * 10)),
+    "ogb_products": ShapeSpec("ogb_products", "train",
+                              dict(n_nodes=2_449_029, n_edges=61_859_140,
+                                   d_feat=100, n_classes=47)),
+    "molecule": ShapeSpec("molecule", "train",
+                          dict(n_nodes=30, n_edges=64, batch=128)),
+}
+
+RECSYS_SHAPES = {
+    "train_batch": ShapeSpec("train_batch", "train", dict(batch=65536)),
+    "serve_p99": ShapeSpec("serve_p99", "score", dict(batch=512)),
+    "serve_bulk": ShapeSpec("serve_bulk", "score", dict(batch=262144)),
+    "retrieval_cand": ShapeSpec("retrieval_cand", "retrieval",
+                                dict(batch=1, n_candidates=1_000_000)),
+}
+
+SHAPES = {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES}
+
+
+def shapes_of(arch: str) -> Dict[str, ShapeSpec]:
+    return SHAPES[family_of(arch)]
+
+
+def cells() -> Iterator[Tuple[str, str]]:
+    """All 40 (architecture, input-shape) dry-run cells."""
+    for arch in ASSIGNED:
+        for shape in shapes_of(arch):
+            yield arch, shape
+
+
+def get_config(arch: str, smoke: bool = False):
+    cfg = ARCHS[arch]
+    return reduced(cfg) if smoke else cfg
+
+
+def _sd(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def lm_kv_cache_specs(cfg: LMConfig, batch: int, seq: int):
+    dh = cfg.resolved_head_dim
+    kv = (cfg.n_layers, batch, seq, cfg.n_kv_heads, dh)
+    return {"k": _sd(kv, cfg.dtype), "v": _sd(kv, cfg.dtype)}
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of one dry-run cell.
+
+    Weak-type-correct, shardable, no device allocation.
+    """
+    cfg = ARCHS[arch]
+    fam = family_of(arch)
+    spec = SHAPES[fam][shape_name]
+    d = spec.dims
+
+    if fam == "lm":
+        b, s = d["batch"], d["seq"]
+        if spec.step == "train":
+            return {"tokens": _sd((b, s), jnp.int32),
+                    "labels": _sd((b, s), jnp.int32)}
+        if spec.step == "prefill":
+            return {"tokens": _sd((b, s), jnp.int32)}
+        if spec.step == "decode":
+            return {"tokens": _sd((b, 1), jnp.int32),
+                    "cache": lm_kv_cache_specs(cfg, b, s),
+                    "positions": _sd((b,), jnp.int32)}
+
+    if fam == "gnn":
+        if shape_name == "molecule":
+            b, n, e = d["batch"], d["n_nodes"], d["n_edges"]
+            return {"atom_types": _sd((b, n), jnp.int32),
+                    "positions": _sd((b, n, 3), jnp.float32),
+                    "edge_src": _sd((b, e), jnp.int32),
+                    "edge_dst": _sd((b, e), jnp.int32),
+                    "edge_mask": _sd((b, e), jnp.bool_),
+                    "targets": _sd((b,), jnp.float32)}
+        if shape_name == "minibatch_lg":
+            n, e = d["sub_nodes"], d["sub_edges"]
+            return {"node_feat": _sd((n, d["d_feat"]), jnp.float32),
+                    "positions": _sd((n, 3), jnp.float32),
+                    "edge_src": _sd((e,), jnp.int32),
+                    "edge_dst": _sd((e,), jnp.int32),
+                    "seed_labels": _sd((d["batch_nodes"],), jnp.int32)}
+        n, e = d["n_nodes"], d["n_edges"]
+        return {"node_feat": _sd((n, d["d_feat"]), jnp.float32),
+                "positions": _sd((n, 3), jnp.float32),
+                "edge_src": _sd((e,), jnp.int32),
+                "edge_dst": _sd((e,), jnp.int32),
+                "labels": _sd((n,), jnp.int32)}
+
+    if fam == "recsys":
+        b = d["batch"]
+        base: Dict[str, Any] = {}
+        if cfg.kind in ("wide_deep", "autoint"):
+            nf = len(cfg.field_vocabs)
+            base = {"dense": _sd((b, cfg.n_dense), jnp.float32),
+                    "sparse_ids": _sd((b, nf), jnp.int32)}
+        elif cfg.kind == "dien":
+            base = {"hist_items": _sd((b, cfg.seq_len), jnp.int32),
+                    "hist_cates": _sd((b, cfg.seq_len), jnp.int32),
+                    "hist_mask": _sd((b, cfg.seq_len), jnp.bool_),
+                    "target_item": _sd((b,), jnp.int32),
+                    "target_cate": _sd((b,), jnp.int32)}
+        elif cfg.kind == "bert4rec":
+            base = {"item_seq": _sd((b, cfg.seq_len), jnp.int32),
+                    "seq_mask": _sd((b, cfg.seq_len), jnp.bool_)}
+        if spec.step == "train":
+            if cfg.kind == "bert4rec":
+                # fixed-count masked positions (sampled-softmax MLM; a dense
+                # (B, T, 1M-vocab) loss tensor is infeasible at batch 65536)
+                n_mask = max(1, cfg.seq_len // 10)
+                base["mlm_positions"] = _sd((b, n_mask), jnp.int32)
+                base["mlm_labels"] = _sd((b, n_mask), jnp.int32)
+                base["neg_samples"] = _sd((8192,), jnp.int32)
+            else:
+                base["labels"] = _sd((b,), jnp.float32)
+        if spec.step == "retrieval":
+            base["candidate_ids"] = _sd((d["n_candidates"],), jnp.int32)
+        return base
+
+    raise KeyError((arch, shape_name))

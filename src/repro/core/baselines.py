@@ -1,0 +1,99 @@
+"""Algorithmic baselines re-implemented for the accuracy comparison
+(Table III): CacheBlend [EuroSys'25] and EPIC [ICML'25].
+
+Both reuse the same assembled cache blocks as RcLLM but differ in how they
+correct (or fail to correct) the approximation:
+
+* CacheBlend: recompute tokens ranked purely by KV deviation (Eq. 3 with
+  λ=1, one global budget), treats chunks as unstructured context — no
+  heavy-hitter structure protection, and reuses cached KV at the blocks'
+  ORIGINAL positions (no RoPE realignment of the stitched layout — the
+  positional misalignment the paper blames for its ranking degradation).
+* EPIC: position-independent blocks with a STATIC recompute pattern — the
+  first `k_link` tokens of every block (AttnLink) — no per-request
+  adaptivity, no divergence correction.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.core.assembly import FROM_ITEM, FROM_SEMANTIC, RECOMPUTE, AssemblyPlan
+from repro.core import engine as ENG
+from repro.core.engine import EngineStats, _jit_layer0, _pad_to, run_selective_layers
+
+
+def _layer0(params, cfg, plan, cached_k, cached_v, bucket=128):
+    n = plan.n
+    n_pad = ((n + bucket - 1) // bucket) * bucket
+    toks = _pad_to(plan.tokens.astype(np.int32), n_pad)
+    ckp = _pad_to(cached_k.astype(np.float32), n_pad)
+    cvp = _pad_to(cached_v.astype(np.float32), n_pad)
+    valid = np.zeros(n_pad, bool)
+    valid[:n] = True
+    x, attn_mass, div_raw = _jit_layer0(
+        params, jnp.asarray(toks), jnp.asarray(valid),
+        jnp.asarray(ckp[:, 0]), jnp.asarray(cvp[:, 0]), cfg)
+    return x, np.asarray(div_raw)[:n], ckp, cvp
+
+
+def _stats(plan, recompute):
+    return EngineStats(
+        n_tokens=plan.n, n_recomputed=int(recompute.sum()),
+        n_reused_item=int(((plan.source == FROM_ITEM) & ~recompute).sum()),
+        n_reused_semantic=int(((plan.source == FROM_SEMANTIC)
+                               & ~recompute).sum()),
+        n_heavy_hitters=0, layer0_full=True)
+
+
+def cacheblend_prefill_logits(params, cfg: LMConfig, plan: AssemblyPlan,
+                              cached_k, cached_v, have_cache,
+                              r: float = 0.15):
+    """CacheBlend: single global budget, deviation-only selection, cached KV
+    kept at the block's original position (no realignment of the stitch)."""
+    n = plan.n
+    x, dev, ckp, cvp = _layer0(params, cfg, plan, cached_k, cached_v)
+    dev = dev * have_cache.astype(np.float32)
+
+    recompute = ~have_cache.copy()
+    recompute |= plan.seg_kind == 0        # true prefix = real prefix hit
+    cand = np.where(~recompute)[0]
+    k_top = int(np.ceil(r * n))
+    top = cand[np.argsort(-dev[cand])[:min(k_top, len(cand))]]
+    recompute[top] = True
+
+    # ORIGINAL positions: blocks stay where they were cached (item blocks at
+    # offset-0-based positions, prototypes at their canonical position)
+    realign = np.where(plan.source == RECOMPUTE, np.arange(n),
+                       np.arange(n) - plan.rope_delta)
+    logits = run_selective_layers(params, cfg, x, recompute, ckp, cvp, n,
+                                  key_positions=realign)
+    return logits, _stats(plan, recompute)
+
+
+def epic_prefill_logits(params, cfg: LMConfig, plan: AssemblyPlan,
+                        cached_k, cached_v, have_cache, k_link: int = 2):
+    """EPIC: position-independent reuse; static AttnLink recompute of the
+    first k_link tokens of every reused block; no adaptive correction."""
+    n = plan.n
+    x, _, ckp, cvp = _layer0(params, cfg, plan, cached_k, cached_v)
+
+    recompute = ~have_cache.copy()
+    recompute |= plan.seg_kind == 0
+    starts = np.zeros(n, bool)
+    prev_src, prev_item = RECOMPUTE, -2
+    for i in range(n):
+        if plan.source[i] == FROM_ITEM:
+            if plan.block_item[i] != prev_item:
+                starts[i] = True
+        elif plan.source[i] == FROM_SEMANTIC and prev_src != FROM_SEMANTIC:
+            starts[i] = True
+        prev_src = plan.source[i]
+        prev_item = plan.block_item[i] if plan.source[i] == FROM_ITEM else -2
+    for i in np.where(starts)[0]:
+        recompute[i:i + k_link] = True
+
+    # EPIC's contribution IS position independence → keys realigned
+    logits = run_selective_layers(params, cfg, x, recompute, ckp, cvp, n)
+    return logits, _stats(plan, recompute)

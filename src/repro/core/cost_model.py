@@ -1,0 +1,100 @@
+"""Analytic serving cost model (the simulator's clock).
+
+The paper's Vidur-based engine models A100s + 100 Gbps Ethernet; we
+re-parameterize for the TPU v5e target using the same roofline constants as
+§Roofline (197 TFLOP/s bf16, 819 GB/s HBM) plus host/interconnect terms.
+TTFT for a request = queue wait + max(KV fetch, layer-0 pass) [the §III-C3
+overlap] + selective prefill compute + LM head.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs.base import LMConfig
+
+
+@dataclass
+class Hardware:
+    peak_flops: float = 197e12          # bf16 / chip
+    mfu: float = 0.45                   # realistic prefill efficiency
+    hbm_bw: float = 819e9
+    host_to_device_bw: float = 32e9     # host DRAM → HBM DMA (PCIe-class)
+    network_bw: float = 12.5e9          # 100 Gbps inter-instance (paper)
+    network_rtt: float = 200e-6
+    chips_per_instance: int = 1         # TP degree within an instance
+
+
+V5E_1 = Hardware()
+V5E_TP4 = Hardware(chips_per_instance=4)   # 72B-class model instances
+
+
+def kv_bytes_per_token(cfg: LMConfig, dtype_bytes: int = 2) -> int:
+    return 2 * cfg.n_layers * cfg.n_kv_heads * cfg.resolved_head_dim * dtype_bytes
+
+
+def prefill_flops(cfg: LMConfig, n_total: int, n_recompute: int,
+                  layer0_full: bool = True) -> float:
+    """FLOPs for selective prefill: dense work only for recomputed tokens,
+    attention for recomputed queries over all keys, plus one full layer-0
+    pass for heavy-hitter identification."""
+    d = cfg.d_model
+    dh = cfg.resolved_head_dim
+    attn_proj = 2 * d * dh * (2 * cfg.n_heads + 2 * cfg.n_kv_heads)
+    if cfg.moe is not None:
+        ffn = 3 * 2 * d * cfg.moe.d_ff * cfg.moe.top_k
+    else:
+        n_mats = 3 if cfg.mlp_type in ("swiglu", "geglu") else 2
+        ffn = n_mats * 2 * d * cfg.d_ff
+    dense_per_tok_layer = attn_proj + ffn
+    attn_per_q_layer = 2 * 2 * cfg.n_heads * dh * n_total   # QK^T + PV
+
+    layers_sel = cfg.n_layers - (1 if layer0_full else 0)
+    fl = n_recompute * layers_sel * (dense_per_tok_layer + attn_per_q_layer)
+    if layer0_full:
+        fl += n_total * (dense_per_tok_layer + attn_per_q_layer)
+    fl += 2 * d * cfg.vocab_size                            # LM head, 1 token
+    return float(fl)
+
+
+def prefill_time_s(cfg: LMConfig, hw: Hardware, n_total: int,
+                   n_recompute: int, layer0_full: bool = True) -> float:
+    fl = prefill_flops(cfg, n_total, n_recompute, layer0_full)
+    return fl / (hw.peak_flops * hw.chips_per_instance * hw.mfu)
+
+
+def fetch_time_s(cfg: LMConfig, hw: Hardware, n_local_tokens: int,
+                 n_remote_tokens: int) -> float:
+    """Cache-block staging: local = host-DRAM→HBM DMA; remote adds a network
+    hop.  Zero-copy assembly means no extra device-side copy."""
+    b = kv_bytes_per_token(cfg)
+    t_local = n_local_tokens * b / hw.host_to_device_bw
+    t_remote = 0.0
+    if n_remote_tokens > 0:
+        t_remote = hw.network_rtt + n_remote_tokens * b / hw.network_bw \
+            + n_remote_tokens * b / hw.host_to_device_bw
+    return t_local + t_remote
+
+
+def ttft_s(cfg: LMConfig, hw: Hardware, n_total: int, n_recompute: int,
+           n_local_tokens: int, n_remote_tokens: int,
+           layer0_full: bool = True) -> float:
+    """§III-C3 pipeline: the layer-0 pass overlaps the PCIe/network staging."""
+    t_fetch = fetch_time_s(cfg, hw, n_local_tokens, n_remote_tokens)
+    t_layer0 = prefill_time_s(cfg, hw, n_total, 0, layer0_full=True) \
+        if layer0_full else 0.0
+    t_rest = prefill_time_s(cfg, hw, n_total, n_recompute,
+                            layer0_full=False) * (cfg.n_layers - 1) / cfg.n_layers
+    return max(t_fetch, t_layer0) + t_rest
+
+
+def full_prefill_ttft_s(cfg: LMConfig, hw: Hardware, n_total: int) -> float:
+    return prefill_time_s(cfg, hw, n_total, n_total, layer0_full=False)
+
+
+def prefix_cache_ttft_s(cfg: LMConfig, hw: Hardware, n_total: int,
+                        n_prefix_hit: int) -> float:
+    """Industrial prefix caching: only the shared leading segment is free."""
+    return prefill_time_s(cfg, hw, n_total, n_total - n_prefix_hit,
+                          layer0_full=False)

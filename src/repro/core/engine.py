@@ -1,0 +1,351 @@
+"""RcLLM local execution engine (§III-C2b, §III-C3) — the accuracy prototype.
+
+Runs a real JAX transformer whose attention is modified for beyond-prefix
+reuse:  layer 0 computes full attention for every token (cheap: 1/L of the
+FLOPs) and scores tokens with Eq. 3
+
+    S_i = (1−λ)·‖A_i‖₁ + λ·Σ_{M∈{K,V}} ‖M_i^new − M_i^cached‖₁
+
+Heavy hitters, instruction tokens, instance-specific markers, cache misses
+and the trailing local window are recomputed exactly through layers 1..L−1;
+every other token's deeper-layer K/V comes from the assembled cache blocks
+(pre-RoPE, rotated to the request position — exact positional realignment
+by RoPE's group property).  This mirrors the paper's HuggingFace prototype,
+in JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.core.assembly import (FROM_ITEM, FROM_SEMANTIC, RECOMPUTE,
+                                 AssemblyPlan, gather_cached_kv)
+from repro.models import layers as L
+
+
+@dataclass
+class SelectiveConfig:
+    r_item: float = 0.3               # recompute budget over item tokens
+    r_rev: float = 0.3                # recompute budget over history tokens
+    lam: float = 0.5                  # Eq. 3 λ (divergence weight)
+    window: int = 32                  # trailing local window, always exact
+    layer0_full: bool = True          # identify HH with full first layer
+
+
+def _layer_params(params, l: int):
+    return jax.tree_util.tree_map(lambda a: a[l], params["layers"])
+
+
+def _qkv(h, lp, cfg: LMConfig, positions):
+    q = jnp.einsum("sd,dhe->she", h, lp["wq"])
+    k_raw = jnp.einsum("sd,dhe->she", h, lp["wk"])
+    v = jnp.einsum("sd,dhe->she", h, lp["wv"])
+    q = L.apply_rope(q[None], positions, cfg.rope_theta)[0]
+    k = L.apply_rope(k_raw[None], positions, cfg.rope_theta)[0]
+    return q, k, k_raw, v
+
+
+def _full_attn(q, k, v, cfg: LMConfig, q_pos, k_pos, return_probs=False,
+               k_valid=None):
+    Hq, Hkv = q.shape[1], k.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    qr = q.reshape(q.shape[0], Hkv, G, -1)
+    s = jnp.einsum("qhgd,khd->hgqk", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = q_pos[:, None] >= k_pos[None, :]
+    if k_valid is not None:
+        mask = mask & k_valid[None, :]
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hgqk,khd->qhgd", p.astype(v.dtype), v)
+    o = o.reshape(q.shape[0], Hq, -1)
+    if return_probs:
+        return o, p
+    return o
+
+
+def _mlp(h, lp, cfg: LMConfig):
+    from repro.models.layers import mlp_apply, moe_apply
+    if cfg.moe is not None:
+        y, _ = moe_apply(h, lp["moe"], n_experts=cfg.moe.n_experts,
+                         top_k=cfg.moe.top_k,
+                         capacity_factor=cfg.moe.capacity_factor,
+                         mlp_type=cfg.mlp_type)
+        return y
+    return mlp_apply(h, lp["mlp"], cfg.mlp_type)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _batched_kv_jit(params, toks, cfg: LMConfig):
+    """toks: (N, S) padded with PAD=0 → pre-RoPE (k, v): (N, S, L, Hkv, Dh).
+    Padding keys are masked out of the in-context attention."""
+    N, S = toks.shape
+    pos = jnp.arange(S)
+    valid = toks != 0                                      # PAD == 0
+    x = params["embed"][toks].astype(jnp.dtype(cfg.dtype))
+    if cfg.tie_embeddings:
+        x = x * (cfg.d_model ** 0.5)
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        lp = _layer_params(params, l)
+        h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("nsd,dhe->nshe", h, lp["wq"])
+        k_raw = jnp.einsum("nsd,dhe->nshe", h, lp["wk"])
+        v = jnp.einsum("nsd,dhe->nshe", h, lp["wv"])
+        ks.append(k_raw)
+        vs.append(v)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k_raw, pos, cfg.rope_theta)
+        o = L.chunked_attention(q, k, v, causal=True, q_positions=pos,
+                                kv_positions=pos, kv_valid=valid,
+                                q_chunk=min(cfg.attn_q_chunk, S),
+                                kv_chunk=min(cfg.attn_kv_chunk, S))
+        x = x + jnp.einsum("nshe,hed->nsd", o, lp["wo"])
+        x = x + _mlp_batched(L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps),
+                             lp, cfg)
+    k_all = jnp.stack(ks, axis=2)                          # (N, S, L, Hkv, Dh)
+    v_all = jnp.stack(vs, axis=2)
+    return k_all, v_all
+
+
+def _mlp_batched(h, lp, cfg: LMConfig):
+    if cfg.moe is not None:
+        N, S, D = h.shape
+        y, _ = L.moe_apply(h.reshape(N * S, D), lp["moe"],
+                           n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+                           capacity_factor=cfg.moe.capacity_factor,
+                           mlp_type=cfg.mlp_type)
+        return y.reshape(N, S, D)
+    return L.mlp_apply(h, lp["mlp"], cfg.mlp_type)
+
+
+def precompute_kv_batch(params, cfg: LMConfig, docs, bucket: int = 64):
+    """Batched offline KV materialization with length bucketing (keeps jit
+    retraces bounded).  -> list of (S_i, L, Hkv, Dh) pre-RoPE (k, v)."""
+    order = np.argsort([len(d) for d in docs])
+    out = [None] * len(docs)
+    i = 0
+    while i < len(order):
+        max_len = ((len(docs[order[i]]) + bucket - 1) // bucket) * bucket
+        group = [j for j in order[i:i + 64]
+                 if len(docs[j]) <= max_len]
+        batch = np.zeros((len(group), max_len), np.int32)
+        for gi, j in enumerate(group):
+            batch[gi, :len(docs[j])] = docs[j]
+        k, v = _batched_kv_jit(params, jnp.asarray(batch), cfg)
+        k = np.asarray(k, np.float32)
+        v = np.asarray(v, np.float32)
+        for gi, j in enumerate(group):
+            s = len(docs[j])
+            out[j] = (k[gi, :s], v[gi, :s])
+        i += len(group)
+    return out
+
+
+def precompute_kv(params, cfg: LMConfig, tokens: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Offline KV materialization: run the model over one sequence at
+    canonical positions and return PRE-RoPE per-layer K and V:
+    (S, n_layers, Hkv, Dh).  Used to build both cache pools."""
+    toks = jnp.asarray(tokens)
+    S = toks.shape[0]
+    pos = jnp.arange(S)
+    x = params["embed"][toks].astype(jnp.dtype(cfg.dtype))
+    if cfg.tie_embeddings:
+        x = x * (cfg.d_model ** 0.5)
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        lp = _layer_params(params, l)
+        h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k, k_raw, v = _qkv(h, lp, cfg, pos)
+        ks.append(np.asarray(k_raw, np.float32))
+        vs.append(np.asarray(v, np.float32))
+        o = _full_attn(q, k, v, cfg, pos, pos)
+        x = x + jnp.einsum("she,hed->sd", o, lp["wo"])
+        x = x + _mlp(L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps), lp, cfg)
+    k_all = np.stack(ks, axis=1)
+    v_all = np.stack(vs, axis=1)
+    return k_all, v_all
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _jit_full_prefill(params, toks, last, cfg: LMConfig):
+    from repro.models import transformer as T
+    logits, _ = T.forward(params, toks[None], cfg)
+    return logits[0, last]
+
+
+def full_prefill_logits(params, cfg: LMConfig, tokens: np.ndarray,
+                        bucket: int = 128) -> np.ndarray:
+    """Full-Recompute oracle: exact final-position logits (padded + jitted;
+    padding is causally invisible to the final real token)."""
+    n = len(tokens)
+    n_pad = ((n + bucket - 1) // bucket) * bucket
+    toks = np.pad(np.asarray(tokens, np.int32), (0, n_pad - n))
+    logits = _jit_full_prefill(params, jnp.asarray(toks), n - 1, cfg)
+    return np.asarray(logits, np.float32)
+
+
+@dataclass
+class EngineStats:
+    n_tokens: int
+    n_recomputed: int
+    n_reused_item: int
+    n_reused_semantic: int
+    n_heavy_hitters: int
+    layer0_full: bool
+
+    def recompute_fraction(self) -> float:
+        return self.n_recomputed / max(self.n_tokens, 1)
+
+
+def _pad_to(x: np.ndarray, n: int, fill=0):
+    if len(x) >= n:
+        return x[:n]
+    return np.concatenate([x, np.full((n - len(x),) + x.shape[1:], fill,
+                                      x.dtype)])
+
+
+@functools.partial(jax.jit, static_argnums=(5,))
+def _jit_layer0(params, toks, valid, ck0, cv0, cfg: LMConfig):
+    """Layer-0 full pass (padded): -> (x_after_l0, attn_mass, divergence)."""
+    n = toks.shape[0]
+    pos = jnp.arange(n)
+    x = params["embed"][toks].astype(jnp.dtype(cfg.dtype))
+    if cfg.tie_embeddings:
+        x = x * (cfg.d_model ** 0.5)
+    lp = _layer_params(params, 0)
+    h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, k_raw, v = _qkv(h, lp, cfg, pos)
+    o, probs = _full_attn(q, k, v, cfg, pos, pos, return_probs=True,
+                          k_valid=valid)
+    # A_i: attention mass received by key i from *valid* queries
+    attn_mass = (probs * valid[None, None, :, None]).mean(axis=(0, 1)).sum(axis=0)
+    dk = jnp.abs(k_raw - ck0).sum(axis=(1, 2))
+    dv = jnp.abs(v - cv0).sum(axis=(1, 2))
+    x = x + jnp.einsum("she,hed->sd", o, lp["wo"])
+    x = x + _mlp(L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps), lp, cfg)
+    return x, attn_mass, dk + dv
+
+
+@functools.partial(jax.jit, static_argnums=(9,))
+def _jit_selective_layers(params, x, r_idx, r_valid, ck, cv, valid,
+                          key_rot_pos, final_slot, cfg: LMConfig):
+    """Layers 1..L-1 computed only for the (padded) recompute set; final
+    logits at the recompute slot `final_slot` (the prompt's last token).
+    `key_rot_pos` rotates cached pre-RoPE keys (RcLLM: the request position
+    = exact realignment; CacheBlend baseline: the block's original position)."""
+    n = x.shape[0]
+    pos = jnp.arange(n)
+    r_pos = jnp.clip(r_idx, 0, n - 1)
+    xr = jnp.take(x, r_pos, axis=0)                            # (R, D)
+    for l in range(1, cfg.n_layers):
+        lp = _layer_params(params, l)
+        hr = L.rms_norm(xr, lp["attn_norm"], cfg.norm_eps)
+        qr = jnp.einsum("rd,dhe->rhe", hr, lp["wq"])
+        kr_raw = jnp.einsum("rd,dhe->rhe", hr, lp["wk"])
+        vr = jnp.einsum("rd,dhe->rhe", hr, lp["wv"])
+        qr = L.apply_rope(qr[None], r_pos, cfg.rope_theta)[0]
+        kr = L.apply_rope(kr_raw[None], r_pos, cfg.rope_theta)[0]
+        # assembled keys: cached pre-RoPE keys rotated per key_rot_pos
+        k_l = L.apply_rope(ck[:, l][None], key_rot_pos, cfg.rope_theta)[0]
+        v_l = cv[:, l]
+        widx = jnp.where(r_valid, r_idx, n)                    # n → dropped
+        k_l = k_l.at[widx].set(kr, mode="drop")
+        v_l = v_l.at[widx].set(vr.astype(v_l.dtype), mode="drop")
+        o = _full_attn(qr, k_l, v_l.astype(kr.dtype), cfg, r_pos, pos,
+                       k_valid=valid)
+        xr = xr + jnp.einsum("rhe,hed->rd", o, lp["wo"])
+        xr = xr + _mlp(L.rms_norm(xr, lp["mlp_norm"], cfg.norm_eps), lp, cfg)
+
+    xf = L.rms_norm(xr[final_slot][None], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (xf @ head)[0]
+
+
+def run_selective_layers(params, cfg, x, recompute: np.ndarray,
+                         ck, cv, n_valid: int, bucket: int = 64,
+                         key_positions: Optional[np.ndarray] = None):
+    """Pad the recompute set + sequence, dispatch the jitted layer stack."""
+    n = x.shape[0]
+    r_idx = np.where(recompute)[0]
+    r_count = len(r_idx)
+    r_pad = max(bucket, ((r_count + bucket - 1) // bucket) * bucket)
+    r_valid = np.zeros(r_pad, bool)
+    r_valid[:r_count] = True
+    r_idx_p = _pad_to(r_idx.astype(np.int32), r_pad, fill=n_valid - 1)
+    valid = np.zeros(n, bool)
+    valid[:n_valid] = True
+    if key_positions is None:
+        key_positions = np.arange(n)
+    else:
+        key_positions = _pad_to(key_positions.astype(np.int64), n)
+    final_slot = r_count - 1          # last recomputed token = prompt tail
+    logits = _jit_selective_layers(
+        params, x, jnp.asarray(r_idx_p), jnp.asarray(r_valid),
+        jnp.asarray(ck), jnp.asarray(cv), jnp.asarray(valid),
+        jnp.asarray(key_positions), final_slot, cfg)
+    return np.asarray(logits, np.float32)
+
+
+def selective_prefill_logits(
+    params, cfg: LMConfig, plan: AssemblyPlan,
+    cached_k: np.ndarray, cached_v: np.ndarray, have_cache: np.ndarray,
+    sel: SelectiveConfig, bucket: int = 128,
+) -> Tuple[np.ndarray, EngineStats]:
+    """Beyond-prefix prefill with selective recomputation.
+
+    cached_k/v: (n, n_layers, Hkv, Dh) pre-RoPE assembled blocks
+    (zeros where RECOMPUTE / miss).  Sequences are padded to `bucket`
+    multiples so the jitted engine retraces O(1) times.
+    """
+    n = plan.n
+    n_pad = ((n + bucket - 1) // bucket) * bucket
+    toks = _pad_to(plan.tokens.astype(np.int32), n_pad)
+    ckp = _pad_to(cached_k.astype(np.float32), n_pad)
+    cvp = _pad_to(cached_v.astype(np.float32), n_pad)
+    have = have_cache
+    valid = np.zeros(n_pad, bool)
+    valid[:n] = True
+
+    # ---- layer 0 (jitted): full attention + Eq. 3 terms ----
+    x, attn_mass, div_raw = _jit_layer0(
+        params, jnp.asarray(toks), jnp.asarray(valid),
+        jnp.asarray(ckp[:, 0]), jnp.asarray(cvp[:, 0]), cfg)
+    attn_mass = np.asarray(attn_mass)[:n]
+    a_norm = attn_mass / max(attn_mass.max(), 1e-9)
+    div = np.asarray(div_raw)[:n] * have.astype(np.float32)
+    div = div / max(div.max(), 1e-9)
+    s_score = (1.0 - sel.lam) * a_norm + sel.lam * div              # Eq. 3
+
+    # ---- heavy-hitter selection under per-class budgets ----
+    src = plan.source
+    recompute = ~have.copy()                                 # misses
+    recompute |= plan.seg_kind == 0                          # instructions
+    recompute[max(0, n - sel.window):] = True                # local window
+    n_hh = 0
+    for kind, budget in ((2, sel.r_item), (1, sel.r_rev)):
+        cls = np.where((plan.seg_kind == kind) & ~recompute)[0]
+        if len(cls) == 0:
+            continue
+        k_top = int(np.ceil(budget * len(cls)))
+        top = cls[np.argsort(-s_score[cls])[:k_top]]
+        recompute[top] = True
+        n_hh += len(top)
+
+    stats = EngineStats(
+        n_tokens=n, n_recomputed=int(recompute.sum()),
+        n_reused_item=int(((src == FROM_ITEM) & ~recompute).sum()),
+        n_reused_semantic=int(((src == FROM_SEMANTIC) & ~recompute).sum()),
+        n_heavy_hitters=n_hh, layer0_full=sel.layer0_full)
+
+    logits = run_selective_layers(params, cfg, x, recompute, ckp, cvp, n)
+    return logits, stats

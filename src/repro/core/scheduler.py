@@ -1,0 +1,86 @@
+"""Cache-aware global scheduling (§III-C1).
+
+Affinity(R, p) = α · Hit(R, p) + β · (1 − Load(p))          (Eq. 2)
+
+Hit(R, p) = |I(R) ∩ C(p)| / |I(R)| from the placement map;
+Load(p) = normalized queue depth.  Single-objective ablations (Hit-Only,
+Load-Only) and stateless baselines (round-robin, least-loaded) included —
+they are the policies of Fig. 10.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.placement import Placement
+
+
+@dataclass
+class SchedulerState:
+    k: int
+    queue_depth: np.ndarray                 # outstanding work per instance (s)
+    rr_next: int = 0
+
+    @staticmethod
+    def fresh(k: int) -> "SchedulerState":
+        return SchedulerState(k=k, queue_depth=np.zeros(k))
+
+
+def hit_ratio(items: np.ndarray, placement: Placement, instance: int) -> float:
+    if len(items) == 0:
+        return 1.0
+    local = sum(1 for it in items if placement.is_local(int(it), instance))
+    return local / len(items)
+
+
+def hit_vector(items: np.ndarray, placement: Placement) -> np.ndarray:
+    """Hit(R, p) for all p at once."""
+    k = placement.k
+    hits = np.zeros(k)
+    n = max(len(items), 1)
+    for it in items:
+        s = placement.shard_of[int(it)]
+        if s < 0:
+            hits += 1.0
+        else:
+            hits[s] += 1.0
+    return hits / n
+
+
+def load_vector(state: SchedulerState) -> np.ndarray:
+    q = state.queue_depth
+    hi = q.max()
+    return q / hi if hi > 0 else np.zeros_like(q)
+
+
+def route(items: np.ndarray, placement: Placement, state: SchedulerState,
+          policy: str = "affinity", alpha: float = 0.7, beta: float = 0.3,
+          rng: Optional[np.random.Generator] = None) -> int:
+    """Pick the serving instance for one request."""
+    if policy == "round_robin":
+        p = state.rr_next % state.k
+        state.rr_next += 1
+        return p
+    if policy == "random":
+        return int((rng or np.random.default_rng()).integers(0, state.k))
+    if policy == "least_loaded":
+        return int(np.argmin(state.queue_depth))
+
+    hits = hit_vector(items, placement)
+    load = load_vector(state)
+    if policy == "hit_only":
+        score = hits - 1e-9 * load            # tie-break on load
+    elif policy == "load_only":
+        score = -load
+    elif policy == "affinity":
+        score = alpha * hits + beta * (1.0 - load)       # Eq. 2
+    else:
+        raise ValueError(policy)
+    return int(np.argmax(score))
+
+
+POLICIES = ("affinity", "hit_only", "load_only", "round_robin",
+            "least_loaded", "random")

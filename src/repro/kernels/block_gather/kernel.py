@@ -1,0 +1,77 @@
+"""Pallas TPU paged-KV block-gather kernel with fused RoPE realignment.
+
+The TPU-native 'zero-copy assembly' (§III-C2a): logical prompt pages map to
+scattered physical pages of the KV pool via a block table.  The page id is
+*scalar-prefetched* so the BlockSpec index_map itself performs the
+indirection — the kernel body only rotates the keys to their request
+positions (RoPE group property: cached pre-RoPE keys → one rotation).
+No contiguous copy of the pool ever exists.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(block_table_ref, pos_ref, k_page_ref, v_page_ref,
+                   k_out_ref, v_out_ref, *, page_size: int, head_dim: int,
+                   rope_theta: float, rotate: bool):
+    # k_page_ref: (1, page_size, d) — the physical page selected by the
+    # scalar-prefetched block table via the index_map.
+    k = k_page_ref[0].astype(jnp.float32)            # (page, d)
+    v = v_page_ref[0]
+    if rotate:
+        pos = pos_ref[0]                             # (page,) target positions
+        half = head_dim // 2
+        freqs = 1.0 / (rope_theta **
+                       (jnp.arange(0, half, dtype=jnp.float32) / half))
+        ang = pos[:, None].astype(jnp.float32) * freqs[None, :]
+        cos, sin = jnp.cos(ang), jnp.sin(ang)
+        k1, k2 = k[:, :half], k[:, half:]
+        k = jnp.concatenate([k1 * cos - k2 * sin, k1 * sin + k2 * cos],
+                            axis=-1)
+    k_out_ref[0] = k.astype(k_out_ref.dtype)
+    v_out_ref[0] = v
+
+
+def block_gather(kv_pool_k: jax.Array, kv_pool_v: jax.Array,
+                 block_table: jax.Array, positions: jax.Array, *,
+                 rope_theta: float = 10_000.0, rotate: bool = True,
+                 interpret: bool = False):
+    """kv_pool_{k,v}: (n_pages, page_size, d) physical pool (keys pre-RoPE);
+    block_table: (n_logical,) int32 physical page per logical page;
+    positions: (n_logical, page_size) target absolute positions.
+    -> assembled (k, v): (n_logical, page_size, d)."""
+    n_pages, page_size, d = kv_pool_k.shape
+    n_logical = block_table.shape[0]
+
+    kernel = functools.partial(_gather_kernel, page_size=page_size,
+                               head_dim=d, rope_theta=rope_theta,
+                               rotate=rotate)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_logical,),
+        in_specs=[
+            pl.BlockSpec((1, page_size), lambda i, bt: (i, 0)),   # positions
+            pl.BlockSpec((1, page_size, d), lambda i, bt: (bt[i], 0, 0)),
+            pl.BlockSpec((1, page_size, d), lambda i, bt: (bt[i], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, page_size, d), lambda i, bt: (i, 0, 0)),
+            pl.BlockSpec((1, page_size, d), lambda i, bt: (i, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_logical, page_size, d), kv_pool_k.dtype),
+            jax.ShapeDtypeStruct((n_logical, page_size, d), kv_pool_v.dtype),
+        ],
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), positions.astype(jnp.int32),
+      kv_pool_k, kv_pool_v)

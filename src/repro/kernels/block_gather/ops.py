@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the paged block-gather kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.block_gather.kernel import block_gather
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rope_theta", "rotate", "interpret"))
+def assemble_kv(kv_pool_k, kv_pool_v, block_table, positions, *,
+                rope_theta: float = 10_000.0, rotate: bool = True,
+                interpret: bool = False):
+    return block_gather(kv_pool_k, kv_pool_v, block_table, positions,
+                        rope_theta=rope_theta, rotate=rotate,
+                        interpret=interpret)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the paged block-gather + RoPE realignment."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_rotate(k: jax.Array, positions: jax.Array,
+                theta: float) -> jax.Array:
+    """k: (..., d) pre-RoPE keys; positions broadcastable to k[..., 0]."""
+    d = k.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    k1, k2 = k[..., :half].astype(jnp.float32), k[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([k1 * cos - k2 * sin, k1 * sin + k2 * cos], axis=-1)
+    return out.astype(k.dtype)
+
+
+def block_gather_ref(kv_pool_k, kv_pool_v, block_table, positions, *,
+                     rope_theta: float = 10_000.0, rotate: bool = True):
+    k = jnp.take(kv_pool_k, block_table, axis=0)     # (n_logical, page, d)
+    v = jnp.take(kv_pool_v, block_table, axis=0)
+    if rotate:
+        k = rope_rotate(k, positions, rope_theta)
+    return k, v

@@ -1,0 +1,55 @@
+"""Pallas TPU embedding-bag kernel (RecSys hot path).
+
+Fixed-fanout CTR lookup: ids (B, F) into a (rows, d) table → (B, d) sum.
+The row index is scalar-prefetched so each (b, f) grid step's BlockSpec
+index_map pulls exactly one table row into VMEM; the trailing f axis is
+sequential on TPU so the bag accumulates in the output block (revisited
+across f — legal under TPU's sequential-last-axis grid semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(ids_ref, row_ref, out_ref, acc_ref):
+    f = pl.program_id(1)
+    nf = pl.num_programs(1)
+
+    @pl.when(f == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # accumulate in fp32 VMEM scratch regardless of table dtype (bf16
+    # accumulation loses a bit per add over wide bags)
+    acc_ref[...] += row_ref[...].astype(jnp.float32)
+
+    @pl.when(f == nf - 1)
+    def _finish():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, *,
+                  interpret: bool = False) -> jax.Array:
+    """table: (rows, d); ids: (B, F) → (B, d) per-sample sum of F rows."""
+    rows, d = table.shape
+    b, f = ids.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, f),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, ids_ref: (ids_ref[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j, ids_ref: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), table)

@@ -1,0 +1,13 @@
+"""Jit'd wrapper for the embedding-bag kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.embedding_bag.kernel import embedding_bag
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bag_sum(table, ids, *, interpret: bool = False):
+    return embedding_bag(table, ids, interpret=interpret)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the embedding-bag kernel (take + sum — the same
+formulation the recsys models use via jax.ops.segment_sum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """table: (rows, d); ids: (B, F) -> (B, d)."""
+    return jnp.take(table, ids, axis=0).sum(axis=1)

@@ -1,0 +1,28 @@
+"""Jit'd public wrapper: (B, S, H, D) GQA layout → kernel layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block",
+                                             "interpret"))
+def mha_flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, q_block: int = 128, kv_block: int = 128,
+              interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hq, -1, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hq, -1, d)
+    of = flash_attention(qf, kf, vf, causal=causal, q_block=q_block,
+                         kv_block=kv_block, interpret=interpret)
+    return of.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,136 @@
+"""Pallas TPU selective-attention kernel (§III-C2b on TPU).
+
+Computes attention for the R recomputed queries against keys restricted to
+(heavy hitters ∪ causal sliding window ∪ recomputed tokens): the paper's
+per-token mask becomes a *block-sparse* pattern — the host precomputes a
+(nq, nk) block liveness map; dead (query-block, key-block) tiles are
+skipped entirely (`@pl.when`), live tiles apply the fine-grained bitmap in
+VREGs.  This is the TPU-native form of the CUDA selective mask: static
+128×128 MXU tiles + predicated skip, instead of per-row divergence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _sel_kernel(qpos_ref, live_ref, q_ref, k_ref, v_ref, mask_ref,
+                o_ref, m_scr, l_scr, acc_scr,
+                *, sm_scale: float, q_block: int, kv_block: int,
+                window: int, kv_len: int):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(live_ref[0, 0] > 0)
+    def _compute():
+        q = q_ref[0]
+        k = k_ref[0]
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        q_pos = qpos_ref[...][:, None]                      # (q_block, 1)
+        k_pos = ki * kv_block + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 1)
+        in_window = (q_pos >= k_pos) & (q_pos - k_pos < window)
+        hh = mask_ref[0][None, :] > 0                       # heavy hitters
+        causal = q_pos >= k_pos
+        valid = (k_pos < kv_len) & causal & (in_window | hh)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def selective_attention(q: jax.Array, q_positions: jax.Array,
+                        k: jax.Array, v: jax.Array, hh_mask: jax.Array, *,
+                        window: int = 256, q_block: int = 128,
+                        kv_block: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q: (BH, R, D) recomputed queries with absolute positions
+    q_positions: (R,); k, v: (BH, S, D) assembled keys; hh_mask: (S,) int8
+    marking heavy-hitter/recomputed keys.  Attend where causal AND
+    (within `window` OR hh_mask)."""
+    bh, r, d = q.shape
+    s_len = k.shape[1]
+    r_p = ((r + q_block - 1) // q_block) * q_block
+    s_p = ((s_len + kv_block - 1) // kv_block) * kv_block
+    q = jnp.pad(q, ((0, 0), (0, r_p - r), (0, 0)))
+    qpos = jnp.pad(q_positions.astype(jnp.int32), (0, r_p - r),
+                   constant_values=-1)
+    k = jnp.pad(k, ((0, 0), (0, s_p - s_len), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, s_p - s_len), (0, 0)))
+    hh = jnp.pad(hh_mask.astype(jnp.int8), (0, s_p - s_len))
+    nq, nk = r_p // q_block, s_p // kv_block
+
+    # host-side block liveness: tile (qi, kj) is live iff any query in it can
+    # see any key in the tile (window hit or any HH key causally visible)
+    qpos_r = np.asarray(qpos).reshape(nq, q_block)
+    hh_r = np.asarray(hh).reshape(nk, kv_block)
+    live = np.zeros((nq, nk), np.int32)
+    for qi in range(nq):
+        qmax = int(qpos_r[qi].max())
+        qmin_valid = qpos_r[qi][qpos_r[qi] >= 0]
+        qmin = int(qmin_valid.min()) if len(qmin_valid) else -1
+        if qmin < 0 and qmax < 0:
+            continue
+        for kj in range(nk):
+            k_lo, k_hi = kj * kv_block, (kj + 1) * kv_block - 1
+            if k_lo > qmax:
+                continue                         # fully acausal
+            # window liveness: ∃ q∈[qmin,qmax], k∈[k_lo,k_hi] with
+            # 0 ≤ q−k < window ⟺ [qmin−window+1, qmax] ∩ [k_lo, k_hi] ≠ ∅
+            # (conservative superset for non-contiguous q positions)
+            win_hit = k_hi > qmin - window and k_lo <= qmax
+            hh_hit = bool(hh_r[kj].any())
+            if win_hit or hh_hit:
+                live[qi, kj] = 1
+
+    kernel = functools.partial(
+        _sel_kernel, sm_scale=1.0 / d ** 0.5, q_block=q_block,
+        kv_block=kv_block, window=window, kv_len=s_len)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((q_block,), lambda b, qi, ki: (qi,)),
+            pl.BlockSpec((1, 1), lambda b, qi, ki: (qi, ki)),
+            pl.BlockSpec((1, q_block, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, kv_block), lambda b, qi, ki: (0, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, r_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos, jnp.asarray(live), q, k, v, hh[None])
+    return out[:, :r]

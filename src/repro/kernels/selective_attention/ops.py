@@ -1,0 +1,39 @@
+"""Jit'd wrapper for the selective-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.selective_attention.kernel import selective_attention
+
+
+def selective_mha(q, q_positions, k, v, hh_mask, *, window: int = 256,
+                  q_block: int = 128, kv_block: int = 128,
+                  interpret: bool = False):
+    """q: (B, R, Hq, D); k, v: (B, S, Hkv, D); hh_mask: (S,).
+
+    Note: the block-liveness map is computed host-side from concrete
+    positions/mask (it IS the point of the kernel — static tile skipping),
+    so this wrapper is not jit-traceable end-to-end; callers jit around it.
+    """
+    b, r, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, r, d)
+    kf = kk.transpose(0, 2, 1, 3).reshape(b * hq, -1, d)
+    vf = vv.transpose(0, 2, 1, 3).reshape(b * hq, -1, d)
+    of = selective_attention(qf, q_positions, kf, vf, hh_mask,
+                             window=window, q_block=q_block,
+                             kv_block=kv_block, interpret=interpret)
+    return of.reshape(b, hq, r, d).transpose(0, 2, 1, 3)
+
+
+def flop_reduction(r: int, s: int, n_hh: int, window: int) -> float:
+    """Analytic FLOP ratio vs full attention (paper's ~r·n² savings)."""
+    full = s * s
+    sel = r * min(window + n_hh, s)
+    return sel / full

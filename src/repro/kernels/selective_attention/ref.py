@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for selective attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_attention_ref(q, q_positions, k, v, hh_mask, *,
+                            window: int = 256) -> jax.Array:
+    """q: (BH, R, D), q_positions: (R,), k/v: (BH, S, D), hh_mask: (S,).
+    Attend where causal AND (within window OR heavy-hitter)."""
+    d = q.shape[-1]
+    s_len = k.shape[1]
+    s = jnp.einsum("brd,bkd->brk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / d ** 0.5
+    k_pos = jnp.arange(s_len)
+    causal = q_positions[:, None] >= k_pos[None, :]
+    in_window = causal & (q_positions[:, None] - k_pos[None, :] < window)
+    valid = causal & (in_window | (hh_mask[None, :] > 0))
+    s = jnp.where(valid[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("brk,bkd->brd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.  Single pod = 16×16 (256 v5e chips, axes
+data×model); multi-pod adds a leading `pod` axis (2×16×16 = 512 chips) that
+acts as an outer data-parallel dimension whose collectives cross DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)}; the "
+            f"dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count"
+            f"=512 before importing jax")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def data_axes(mesh) -> tuple:
+    """The axes batch-like dimensions shard over ('pod' included if present)."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def axis_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

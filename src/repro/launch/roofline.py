@@ -1,0 +1,104 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips × peak)   [per-device module → ÷1 chip]
+memory term     = HLO_bytes / HBM_bw
+collective term = collective_bytes / link_bw
+
+``cost_analysis()`` runs on the *partitioned per-device* module, so flops /
+bytes are already per-chip.  Collective bytes are NOT in cost_analysis —
+we parse the optimized HLO and sum collective operand/output sizes with a
+per-op-type wire multiplier (ring all-reduce moves ≈2× the buffer).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI; DCN between pods ≈ 25 GB/s per host (used by the simulator, not here).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+
+# wire-traffic multiplier per collective (ring algorithms, per device)
+_COLL_OPS = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather phases
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, float]:
+    """Sum output-shape bytes of every collective op in optimized HLO,
+    weighted by the wire multiplier.  Returns per-op-type and total bytes."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLL_OPS}
+    counts: Dict[str, int] = {k: 0 for k in _COLL_OPS}
+    for line in hlo.splitlines():
+        ls = line.strip()
+        if ls.startswith("%") or ls.startswith("ROOT"):
+            m = re.search(r"=\s*((?:\([^)]*\))|(?:\S+))\s+([a-z\-]+)\(", ls)
+            if not m:
+                continue
+            shape_txt, op = m.group(1), m.group(2)
+            # "all-reduce-start"/-done variants
+            base = op.replace("-start", "").replace("-done", "")
+            if base in _COLL_OPS and "-done" not in op:
+                out[base] += _shape_bytes(shape_txt) * _COLL_OPS[base]
+                counts[base] += 1
+    total = sum(out.values())
+    return {"per_op_bytes": out, "counts": counts, "total_bytes": total}
+
+
+def roofline_terms(rec: dict) -> dict:
+    """rec: a dry-run record with flops_per_device / bytes_per_device /
+    collectives.  Returns the three terms in seconds + the bottleneck."""
+    ct = rec["flops_per_device"] / PEAK_FLOPS
+    mt = rec["bytes_per_device"] / HBM_BW
+    xt = rec["collectives"]["total_bytes"] / ICI_BW
+    terms = {"compute_s": ct, "memory_s": mt, "collective_s": xt}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]).replace("_s", "")
+    denom = max(ct, mt, xt)
+    terms["roofline_fraction_of_dominant"] = (
+        ct / denom if denom > 0 else 0.0)
+    return terms
+
+
+def model_flops(arch: str, shape_dims: dict, step: str) -> float:
+    """MODEL_FLOPS = 6·N·D (dense train) / 6·N_active·D (MoE), 2·N·D for
+    forward-only steps — the 'useful compute' yardstick."""
+    from repro.configs import registry as R
+    cfg = R.ARCHS[arch]
+    fam = R.family_of(arch)
+    if fam != "lm":
+        return float("nan")
+    n = cfg.active_param_count()
+    if step == "train":
+        toks = shape_dims["batch"] * shape_dims["seq"]
+        return 6.0 * n * toks
+    if step == "prefill":
+        toks = shape_dims["batch"] * shape_dims["seq"]
+        return 2.0 * n * toks
+    # decode: one token per sequence
+    return 2.0 * n * shape_dims["batch"]

@@ -1,0 +1,74 @@
+"""Builds the EXPERIMENTS.md §Roofline table from dry-run JSONs + the
+analytic model.  Usage: PYTHONPATH=src python -m repro.launch.roofline_report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import registry as R
+from repro.launch.roofline import model_flops
+from repro.launch.roofline_analytic import lm_analytic
+
+
+def build_rows():
+    rows = []
+    for f in sorted(glob.glob("results/dryrun/*pod_16x16.json")):
+        rec = json.load(open(f))
+        if not rec.get("ok"):
+            continue
+        arch, shape = rec["arch"], rec["shape"]
+        spec = R.shapes_of(arch)[shape]
+        fam = R.family_of(arch)
+        if fam == "lm":
+            t = lm_analytic(R.ARCHS[arch], spec.step, spec.dims)
+            mf = model_flops(arch, spec.dims, spec.step) / 256
+            useful = mf / t["flops_per_device"]
+            src = "analytic"
+        else:
+            t = rec["roofline"]
+            t = {"compute_s": t["compute_s"], "memory_s": t["memory_s"],
+                 "collective_s": t["collective_s"],
+                 "bottleneck": t["bottleneck"]}
+            dom = max(t["compute_s"], t["memory_s"], t["collective_s"])
+            t["roofline_fraction"] = t["compute_s"] / dom if dom else 0.0
+            useful = float("nan")
+            src = "hlo"
+            if arch == "dien":
+                src = "hlo(+GRU note)"
+        rows.append({
+            "arch": arch, "shape": shape, "src": src,
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            "bottleneck": t["bottleneck"],
+            "fraction": t.get("roofline_fraction", float("nan")),
+            "useful": useful,
+            "hlo_flops": rec["flops_per_device"],
+            "hlo_bytes": rec["bytes_per_device"],
+            "hlo_coll": rec["collectives"]["total_bytes"],
+            "temp_gb": (rec["memory"]["temp_size"] or 0) / 1e9
+            if rec["memory"].get("temp_size") else None,
+        })
+    return rows
+
+
+def markdown(rows) -> str:
+    out = ["| arch | shape | src | compute s | memory s | collective s | "
+           "bottleneck | useful MF/HLO |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        u = f"{r['useful']:.2f}" if r["useful"] == r["useful"] else "—"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['src']} | "
+            f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | {r['bottleneck']} | {u} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = build_rows()
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline_table.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print(markdown(rows))

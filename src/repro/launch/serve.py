@@ -1,0 +1,44 @@
+"""Serving launcher: the distributed RcLLM cluster simulation.
+
+    PYTHONPATH=src python -m repro.launch.serve --k 40 --qps 120
+
+See examples/serve_cluster.py for the narrated version; this entry point
+emits machine-readable JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import registry as REG
+from repro.core import cost_model as CM
+from repro.core import simulator as SIM
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, default=40)
+    ap.add_argument("--qps", type=float, default=None)
+    ap.add_argument("--requests", type=int, default=1500)
+    ap.add_argument("--model", default="rcllm-qwen3-8b")
+    ap.add_argument("--mode", default="rcllm",
+                    choices=["rcllm", "prefix", "full"])
+    ap.add_argument("--policy", default="affinity")
+    ap.add_argument("--r-item", type=float, default=0.3)
+    ap.add_argument("--r-rev", type=float, default=0.3)
+    args = ap.parse_args()
+
+    qps = args.qps if args.qps is not None else 3.0 * args.k
+    cfg = REG.ARCHS[args.model]
+    reqs, placement, _ = SIM.make_sim_setup(k=args.k,
+                                            n_requests=args.requests,
+                                            qps=qps, n_items=8000, seed=1)
+    res = SIM.simulate(cfg, CM.V5E_1, reqs, placement,
+                       SIM.SimConfig(mode=args.mode, policy=args.policy,
+                                     r_item=args.r_item, r_rev=args.r_rev))
+    print(json.dumps({"k": args.k, "qps": qps, "mode": args.mode,
+                      "policy": args.policy, **res.summary()}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

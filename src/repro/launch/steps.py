@@ -1,0 +1,206 @@
+"""Builds the jit-able step function + shardings + abstract args for every
+(architecture × input-shape) dry-run cell.
+
+Returned bundle: (fn, args_abstract, in_shardings, out_shardings) ready for
+``jax.jit(fn, in_shardings=..., out_shardings=...).lower(*args).compile()``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry as R
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig
+from repro.launch.mesh import data_axes
+from repro.sharding import ctx as SHCTX
+from repro.sharding import specs as SH
+from repro.training import optimizer as OPT
+
+
+def _shardings(mesh, spec_tree):
+    return SH.tree_shardings(mesh, spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_bundle(cfg: LMConfig, shape: R.ShapeSpec, mesh):
+    from repro.models import transformer as T
+    params_abs = T.abstract_params(cfg)
+    pspecs = SH.lm_param_specs(
+        cfg, mesh, mode="serve" if shape.step != "train" else "train")
+    psh = _shardings(mesh, pspecs)
+    inputs_abs = R.input_specs(cfg.name, shape.name)
+    ispecs = SH.lm_input_specs(cfg, mesh, shape.step, shape.dims)
+    ish = _shardings(mesh, ispecs)
+
+    if shape.step == "train":
+        init_opt, update_opt = OPT.get(cfg.optimizer)
+        opt_abs = OPT.abstract_opt_state(init_opt, params_abs)
+        ospecs = SH.lm_opt_state_specs(opt_abs, pspecs, params_abs, mesh)
+        osh = _shardings(mesh, ospecs)
+
+        def train_step(params, opt_state, batch):
+            with SHCTX.axes(mesh):
+                (loss, nll), grads = jax.value_and_grad(
+                    T.loss_fn, has_aux=True)(params, batch["tokens"],
+                                             batch["labels"], cfg)
+                params, opt_state, gnorm = update_opt(grads, opt_state, params)
+            return params, opt_state, {"loss": loss, "nll": nll, "gnorm": gnorm}
+
+        args = (params_abs, opt_abs, inputs_abs)
+        in_sh = (psh, osh, ish)
+        out_sh = (psh, osh, None)
+        return train_step, args, in_sh, out_sh
+
+    if shape.step == "prefill":
+        def prefill_step(params, batch):
+            with SHCTX.axes(mesh):
+                return T.prefill(params, batch["tokens"], cfg)
+
+        cache_spec = SH.lm_cache_spec(cfg, mesh, shape.dims["batch"],
+                                      shape.dims["seq"])
+        out_sh = (_shardings(mesh, P(data_axes(mesh), None)),
+                  _shardings(mesh, cache_spec))
+        return prefill_step, (params_abs, inputs_abs), (psh, ish), out_sh
+
+    if shape.step == "decode":
+        def serve_step(params, batch):
+            with SHCTX.axes(mesh):
+                return T.decode_step(params, batch["tokens"], batch["cache"],
+                                     batch["positions"], cfg)
+
+        cache_sh = ish["cache"]
+        logits_spec = ispecs["tokens"][0]
+        out_sh = (_shardings(mesh, P(logits_spec, None)), cache_sh)
+        return serve_step, (params_abs, inputs_abs), (psh, ish), out_sh
+
+    raise ValueError(shape.step)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_bundle(cfg: RecsysConfig, shape: R.ShapeSpec, mesh):
+    from repro.recsys import models as RM
+    params_abs = RM.abstract_params(cfg)
+    pspecs = SH.recsys_param_specs(cfg, mesh)
+    psh = _shardings(mesh, pspecs)
+    inputs_abs = R.input_specs(cfg.name, shape.name)
+    ispecs = SH.recsys_input_specs(cfg, mesh, shape.step, shape.dims)
+    ish = _shardings(mesh, ispecs)
+    dax = data_axes(mesh)
+
+    if shape.step == "train":
+        init_opt, update_opt = OPT.get("adamw")
+        opt_abs = OPT.abstract_opt_state(init_opt, params_abs)
+        zspecs = SH.zero_shard(pspecs, params_abs, mesh)
+        ospecs = OPT.OptState(step=P(), inner={"m": zspecs, "v": zspecs})
+        osh = _shardings(mesh, ospecs)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(RM.train_loss)(params, batch, cfg)
+            params, opt_state, gnorm = update_opt(grads, opt_state, params)
+            return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+        return (train_step, (params_abs, opt_abs, inputs_abs),
+                (psh, osh, ish), (psh, osh, None))
+
+    if shape.step == "score":
+        def score_step(params, batch):
+            return RM.score(params, batch, cfg)
+
+        b = shape.dims["batch"]
+        from repro.launch.mesh import axis_size
+        bspec = dax if b % axis_size(mesh, dax) == 0 else None
+        out_sh = _shardings(mesh, P(bspec))
+        return score_step, (params_abs, inputs_abs), (psh, ish), out_sh
+
+    if shape.step == "retrieval":
+        def retrieval_step(params, batch):
+            return RM.retrieval_scores(params, batch, cfg)
+
+        # (1, 1M) scores: let the partitioner pick the output layout
+        return retrieval_step, (params_abs, inputs_abs), (psh, ish), None
+
+    raise ValueError(shape.step)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_bundle(cfg: GNNConfig, shape: R.ShapeSpec, mesh):
+    from repro.gnn import schnet as G
+    d = shape.dims
+    if shape.name == "molecule":
+        params_abs = G.abstract_params(cfg)
+    else:
+        params_abs = G.abstract_params(cfg, d_feat=d["d_feat"],
+                                       n_classes=d["n_classes"])
+    pspecs = SH.gnn_param_specs(params_abs, mesh)
+    psh = _shardings(mesh, pspecs)
+    inputs_abs = R.input_specs(cfg.name, shape.name)
+    ispecs = SH.gnn_input_specs(mesh, shape.name, inputs_abs)
+    ish = _shardings(mesh, ispecs)
+
+    init_opt, update_opt = OPT.get("adamw")
+    opt_abs = OPT.abstract_opt_state(init_opt, params_abs)
+    ospecs = OPT.OptState(step=P(), inner={"m": pspecs, "v": pspecs})
+    osh = _shardings(mesh, ospecs)
+
+    # huge non-divisible edge lists (ogb_products: 61.9M) arrive replicated,
+    # then get padded to a shard boundary and re-sharded on-device so the
+    # message/scatter compute runs edge-parallel across the whole mesh.
+    from repro.launch.mesh import axis_size
+    edge_ax = tuple(data_axes(mesh)) + ("model",)
+    esz = axis_size(mesh, edge_ax)
+    e_abs = inputs_abs.get("edge_src")
+    pad_edges = (e_abs is not None and e_abs.ndim == 1 and
+                 e_abs.shape[0] % esz != 0 and e_abs.shape[0] > 1_000_000)
+    n_nodes = d.get("n_nodes", 0)
+
+    def _prep(batch):
+        if not pad_edges:
+            return batch
+        batch = dict(batch)
+        e = batch["edge_src"].shape[0]
+        pad = (-e) % esz
+        wsc = jax.lax.with_sharding_constraint
+        batch["edge_src"] = wsc(jnp.pad(batch["edge_src"], (0, pad)),
+                                _shardings(mesh, P(edge_ax)))
+        # pad dst with n_nodes: out-of-range segment ids are dropped by scatter
+        batch["edge_dst"] = wsc(
+            jnp.pad(batch["edge_dst"], (0, pad), constant_values=n_nodes),
+            _shardings(mesh, P(edge_ax)))
+        return batch
+
+    def train_step(params, opt_state, batch):
+        batch = _prep(batch)
+        loss, grads = jax.value_and_grad(G.train_loss)(params, batch, cfg)
+        params, opt_state, gnorm = update_opt(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+    return (train_step, (params_abs, opt_abs, inputs_abs),
+            (psh, osh, ish), (psh, osh, None))
+
+
+# ---------------------------------------------------------------------------
+
+def build(arch: str, shape_name: str, mesh) -> Tuple[Any, tuple, Any, Any]:
+    cfg = R.ARCHS[arch]
+    shape = R.shapes_of(arch)[shape_name]
+    fam = R.family_of(arch)
+    if fam == "lm":
+        return _lm_bundle(cfg, shape, mesh)
+    if fam == "recsys":
+        return _recsys_bundle(cfg, shape, mesh)
+    if fam == "gnn":
+        return _gnn_bundle(cfg, shape, mesh)
+    raise KeyError(arch)

@@ -1,0 +1,594 @@
+"""Transformer building blocks: RMSNorm, RoPE, chunked (flash-style) GQA
+attention, dense MLPs, and sort-based top-k MoE with expert parallelism.
+
+All attention paths avoid materializing O(S^2) score tensors: prefill/train
+use a two-level scan over (q-chunk, kv-chunk) tiles with a running-softmax
+carry (the standard FlashAttention recurrence, expressed in pure JAX so the
+CPU dry-run lowers it; the Pallas TPU kernel in repro/kernels/flash_attention
+implements the same tiling for real hardware).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]               # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_realign(k: jax.Array, delta: jax.Array, theta: float) -> jax.Array:
+    """Rotate cached keys by a position delta (RcLLM §III-C3 'Alignment').
+
+    RoPE is a group action: R(p+d) = R(d) R(p), so a block cached at canonical
+    positions can be realigned to its position in the assembled prompt by one
+    extra rotation — no recomputation of the projection.
+    k: (..., S, H, D), delta: scalar or (...,) offsets added to positions.
+    """
+    s = k.shape[-3]
+    pos = jnp.zeros((s,), jnp.float32) + jnp.asarray(delta, jnp.float32)[..., None]
+    return apply_rope(k, pos, theta)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (pure JAX)
+# ---------------------------------------------------------------------------
+
+def _pad_dim(x: jax.Array, axis: int, mult: int):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x, s
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), s
+
+
+def _attn_impl(
+    q: jax.Array,                      # (B, Sq, Hq, D)
+    k: jax.Array,                      # (B, Skv, Hkv, D)
+    v: jax.Array,                      # (B, Skv, Hkv, D)
+    *,
+    causal: bool,
+    q_positions: jax.Array,            # (Sq,) absolute positions of queries
+    kv_positions: jax.Array,           # (Skv,)
+    kv_valid: Optional[jax.Array] = None,   # (B, Skv) bool — for padded caches
+    sliding_window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    block_pairing: bool = False,
+    extra_mask: Optional[jax.Array] = None,  # (Sq, Skv) bool, True = attend
+    return_lse: bool = False,
+):
+    """FlashAttention recurrence over (q-chunk × kv-chunk) tiles.
+
+    With ``block_pairing=True`` and causal masking, fully-masked kv chunks are
+    skipped by enumerating only the (qi, kj <= qi-aligned) tile pairs — the
+    §Perf 'causal block pairing' optimization (≈2× fewer attention FLOPs).
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+
+    q, _ = _pad_dim(q, 1, q_chunk)
+    qpos_p, _ = _pad_dim(q_positions, 0, q_chunk)
+    k, _ = _pad_dim(k, 1, kv_chunk)
+    v, _ = _pad_dim(v, 1, kv_chunk)
+    kpos_p, Skv0 = _pad_dim(kv_positions, 0, kv_chunk)
+    kv_pad_valid = jnp.arange(k.shape[1]) < Skv0      # (Skv_p,)
+    if kv_valid is not None:
+        kv_valid_p, _ = _pad_dim(kv_valid, 1, kv_chunk)
+        kv_valid_p = kv_valid_p & kv_pad_valid[None, :]
+    else:
+        kv_valid_p = jnp.broadcast_to(kv_pad_valid[None, :], (B, k.shape[1]))
+    if extra_mask is not None:
+        em, _ = _pad_dim(extra_mask, 0, q_chunk)
+        em, _ = _pad_dim(em, 1, kv_chunk)
+    else:
+        em = None
+
+    nq = q.shape[1] // q_chunk
+    nk = k.shape[1] // kv_chunk
+    qr = q.reshape(B, nq, q_chunk, Hkv, G, D)
+    kr = k.reshape(B, nk, kv_chunk, Hkv, D)
+    vr = v.reshape(B, nk, kv_chunk, Hkv, D)
+    qpos_r = qpos_p.reshape(nq, q_chunk)
+    kpos_r = kpos_p.reshape(nk, kv_chunk)
+    kval_r = kv_valid_p.reshape(B, nk, kv_chunk)
+
+    def tile(qc, qpos, kc, vc, kpos, kval, emc, m, l, acc):
+        # qc: (B, qC, Hkv, G, D)  kc/vc: (B, kC, Hkv, D)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                       preferred_element_type=jnp.float32) * scale
+        mask = kval[:, None, None, None, :]                    # (B,1,1,1,kC)
+        if causal:
+            cm = qpos[:, None] >= kpos[None, :]                # (qC, kC)
+            if sliding_window is not None:
+                cm &= (qpos[:, None] - kpos[None, :]) < sliding_window
+            mask = mask & cm[None, None, None, :, :]
+        elif sliding_window is not None:
+            cm = jnp.abs(qpos[:, None] - kpos[None, :]) < sliding_window
+            mask = mask & cm[None, None, None, :, :]
+        if emc is not None:
+            mask = mask & emc[None, None, None, :, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    def init_carry():
+        m = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        acc = jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32)
+        return m, l, acc
+
+    if block_pairing and causal and em is None:
+        # enumerate only live (q-chunk, kv-chunk) tile pairs; q/kv chunk grids
+        # are aligned via positions so tile (qi, kj) is live iff
+        # max(qpos[qi]) >= min(kpos[kj]).  Static for self-attention.
+        # valid only for self-attention with positions == arange (asserted by
+        # caller); tile (qi, kj) is live iff its last query can see the first
+        # key of the kv chunk.
+        outs, lses = [], []
+        for qi in range(nq):
+            m, l, acc = init_carry()
+            live = [kj for kj in range(nk)
+                    if (qi + 1) * q_chunk - 1 >= kj * kv_chunk]
+            for kj in live:
+                m, l, acc = tile(qr[:, qi], qpos_r[qi], kr[:, kj], vr[:, kj],
+                                 kpos_r[kj], kval_r[:, kj], None, m, l, acc)
+            outs.append(acc / jnp.maximum(l[..., None], 1e-30))
+            lses.append(m + jnp.log(jnp.maximum(l, 1e-30)))
+        out = jnp.stack(outs, axis=1)                         # (B,nq,Hkv,G,qC,D)
+        lse = jnp.stack(lses, axis=1)                         # (B,nq,Hkv,G,qC)
+    else:
+        def q_step(qi):
+            qc = lax.dynamic_index_in_dim(qr, qi, 1, keepdims=False)
+            qpos = lax.dynamic_index_in_dim(qpos_r, qi, 0, keepdims=False)
+
+            def kv_step(carry, kj):
+                m, l, acc = carry
+                kc = lax.dynamic_index_in_dim(kr, kj, 1, keepdims=False)
+                vc = lax.dynamic_index_in_dim(vr, kj, 1, keepdims=False)
+                kpos = lax.dynamic_index_in_dim(kpos_r, kj, 0, keepdims=False)
+                kval = lax.dynamic_index_in_dim(kval_r, kj, 1, keepdims=False)
+                emc = None
+                if em is not None:
+                    emq = lax.dynamic_slice_in_dim(em, qi * q_chunk, q_chunk, 0)
+                    emc = lax.dynamic_slice_in_dim(emq, kj * kv_chunk, kv_chunk, 1)
+                return tile(qc, qpos, kc, vc, kpos, kval, emc, m, l, acc), None
+
+            (m, l, acc), _ = lax.scan(kv_step, init_carry(), jnp.arange(nk))
+            return (acc / jnp.maximum(l[..., None], 1e-30),
+                    m + jnp.log(jnp.maximum(l, 1e-30)))
+
+        out, lse = lax.map(q_step, jnp.arange(nq))            # (nq,B,Hkv,G,qC,·)
+        out = jnp.moveaxis(out, 0, 1)
+        lse = jnp.moveaxis(lse, 0, 1)
+
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, nq * q_chunk, Hq, D)
+    out = out[:, :Sq].astype(q.dtype)
+    if return_lse:
+        # lse: (B, nq, Hkv, G, qC) -> (B, Sq, Hkv, G)
+        lse = lse.transpose(0, 1, 4, 2, 3).reshape(B, nq * q_chunk, Hkv, G)
+        return out, lse[:, :Sq]
+    return out
+
+
+def chunked_attention(q, k, v, *, causal, q_positions, kv_positions,
+                      kv_valid=None, sliding_window=None, q_chunk=512,
+                      kv_chunk=1024, block_pairing=False, extra_mask=None):
+    """Public flash attention.  The differentiable path (self-attention in
+    training) routes through a custom VJP whose backward recomputes tiles —
+    naive autodiff of the scan stores O(S²/chunk) fp32 softmax stats
+    (measured 51 GB/device on the 15B train cell)."""
+    if kv_valid is None and extra_mask is None:
+        return _flash(q, k, v, q_positions, kv_positions, causal,
+                      sliding_window, q_chunk, kv_chunk, block_pairing)
+    return _attn_impl(q, k, v, causal=causal, q_positions=q_positions,
+                      kv_positions=kv_positions, kv_valid=kv_valid,
+                      sliding_window=sliding_window, q_chunk=q_chunk,
+                      kv_chunk=kv_chunk, block_pairing=block_pairing,
+                      extra_mask=extra_mask)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _flash(q, k, v, q_positions, kv_positions, causal, sliding_window,
+           q_chunk, kv_chunk, block_pairing):
+    return _attn_impl(q, k, v, causal=causal, q_positions=q_positions,
+                      kv_positions=kv_positions,
+                      sliding_window=sliding_window, q_chunk=q_chunk,
+                      kv_chunk=kv_chunk, block_pairing=block_pairing)
+
+
+def _flash_fwd(q, k, v, q_positions, kv_positions, causal, sliding_window,
+               q_chunk, kv_chunk, block_pairing):
+    out, lse = _attn_impl(q, k, v, causal=causal, q_positions=q_positions,
+                          kv_positions=kv_positions,
+                          sliding_window=sliding_window, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk, block_pairing=block_pairing,
+                          return_lse=True)
+    return out, (q, k, v, q_positions, kv_positions, out, lse)
+
+
+def _flash_bwd(causal, sliding_window, q_chunk, kv_chunk, block_pairing,
+               res, dout):
+    q, k, v, q_positions, kv_positions, out, lse = res
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+
+    # delta_i = rowsum(dout ⊙ out): the softmax-backward correction term
+    delta = jnp.einsum("bshd,bshd->bsh", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))               # (B, Sq, Hq)
+
+    qp, _ = _pad_dim(q, 1, q_chunk)
+    dop, _ = _pad_dim(dout, 1, q_chunk)
+    dlp, _ = _pad_dim(delta, 1, q_chunk)
+    lsep, _ = _pad_dim(lse, 1, q_chunk)
+    qpos_p, _ = _pad_dim(q_positions, 0, q_chunk)
+    kp, Skv0 = _pad_dim(k, 1, kv_chunk)
+    vp, _ = _pad_dim(v, 1, kv_chunk)
+    kpos_p, _ = _pad_dim(kv_positions, 0, kv_chunk)
+    kvalid = jnp.arange(kp.shape[1]) < Skv0
+
+    nq = qp.shape[1] // q_chunk
+    nk = kp.shape[1] // kv_chunk
+    qr = qp.reshape(B, nq, q_chunk, Hkv, G, D)
+    dor = dop.reshape(B, nq, q_chunk, Hkv, G, D)
+    dlr = dlp.reshape(B, nq, q_chunk, Hkv, G)
+    lser = lsep.reshape(B, nq, q_chunk, Hkv, G)
+    kr = kp.reshape(B, nk, kv_chunk, Hkv, D)
+    vr = vp.reshape(B, nk, kv_chunk, Hkv, D)
+    qpos_r = qpos_p.reshape(nq, q_chunk)
+    kpos_r = kpos_p.reshape(nk, kv_chunk)
+    kval_r = kvalid.reshape(nk, kv_chunk)
+
+    def tile_mask(qpos, kpos, kval):
+        mask = kval[None, :]
+        if causal:
+            cm = qpos[:, None] >= kpos[None, :]
+            if sliding_window is not None:
+                cm &= (qpos[:, None] - kpos[None, :]) < sliding_window
+            mask = mask & cm
+        elif sliding_window is not None:
+            mask = mask & (jnp.abs(qpos[:, None] - kpos[None, :])
+                           < sliding_window)
+        return mask                                            # (qC, kC)
+
+    def p_ds(qi_data, kc, kpos, kval):
+        qc, doc, dlc, lsec, qpos = qi_data
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                       preferred_element_type=jnp.float32) * scale
+        mask = tile_mask(qpos, kpos, kval)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lsec.transpose(0, 2, 3, 1)[..., None])  # (B,h,g,q,k)
+        return p
+
+    # pass 1: dq — map over q chunks, scan over kv chunks
+    def dq_step(qi):
+        qc = lax.dynamic_index_in_dim(qr, qi, 1, keepdims=False)
+        doc = lax.dynamic_index_in_dim(dor, qi, 1, keepdims=False)
+        dlc = lax.dynamic_index_in_dim(dlr, qi, 1, keepdims=False)
+        lsec = lax.dynamic_index_in_dim(lser, qi, 1, keepdims=False)
+        qpos = lax.dynamic_index_in_dim(qpos_r, qi, 0, keepdims=False)
+
+        def kv_step(dq, kj):
+            kc = lax.dynamic_index_in_dim(kr, kj, 1, keepdims=False)
+            vc = lax.dynamic_index_in_dim(vr, kj, 1, keepdims=False)
+            kpos = lax.dynamic_index_in_dim(kpos_r, kj, 0, keepdims=False)
+            kval = lax.dynamic_index_in_dim(kval_r, kj, 0, keepdims=False)
+            p = p_ds((qc, doc, dlc, lsec, qpos), kc, kpos, kval)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doc, vc,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dlc.transpose(0, 2, 3, 1)[..., None]) * scale
+            dq = dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds.astype(kc.dtype), kc,
+                                 preferred_element_type=jnp.float32)
+            return dq, None
+
+        dq0 = jnp.zeros((B, q_chunk, Hkv, G, D), jnp.float32)
+        dq, _ = lax.scan(kv_step, dq0, jnp.arange(nk))
+        return dq
+
+    dq = lax.map(dq_step, jnp.arange(nq))                      # (nq,B,qC,...)
+    dq = jnp.moveaxis(dq, 0, 1).reshape(B, nq * q_chunk, Hq, D)[:, :Sq]
+
+    # pass 2: dk/dv — map over kv chunks, scan over q chunks
+    def dkv_step(kj):
+        kc = lax.dynamic_index_in_dim(kr, kj, 1, keepdims=False)
+        vc = lax.dynamic_index_in_dim(vr, kj, 1, keepdims=False)
+        kpos = lax.dynamic_index_in_dim(kpos_r, kj, 0, keepdims=False)
+        kval = lax.dynamic_index_in_dim(kval_r, kj, 0, keepdims=False)
+
+        def q_step(carry, qi):
+            dk, dv = carry
+            qc = lax.dynamic_index_in_dim(qr, qi, 1, keepdims=False)
+            doc = lax.dynamic_index_in_dim(dor, qi, 1, keepdims=False)
+            dlc = lax.dynamic_index_in_dim(dlr, qi, 1, keepdims=False)
+            lsec = lax.dynamic_index_in_dim(lser, qi, 1, keepdims=False)
+            qpos = lax.dynamic_index_in_dim(qpos_r, qi, 0, keepdims=False)
+            p = p_ds((qc, doc, dlc, lsec, qpos), kc, kpos, kval)
+            dv = dv + jnp.einsum("bhgqk,bqhgd->bkhd", p.astype(doc.dtype),
+                                 doc, preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doc, vc,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dlc.transpose(0, 2, 3, 1)[..., None]) * scale
+            dk = dk + jnp.einsum("bhgqk,bqhgd->bkhd", ds.astype(qc.dtype), qc,
+                                 preferred_element_type=jnp.float32)
+            return (dk, dv), None
+
+        z = jnp.zeros((B, kv_chunk, Hkv, D), jnp.float32)
+        (dk, dv), _ = lax.scan(q_step, (z, z), jnp.arange(nq))
+        return dk, dv
+
+    dk, dv = lax.map(dkv_step, jnp.arange(nk))                 # (nk,B,kC,...)
+    dk = jnp.moveaxis(dk, 0, 1).reshape(B, nk * kv_chunk, Hkv, D)[:, :k.shape[1]]
+    dv = jnp.moveaxis(dv, 0, 1).reshape(B, nk * kv_chunk, Hkv, D)[:, :k.shape[1]]
+
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def decode_attention(
+    q: jax.Array,                      # (B, 1, Hq, D) — one new token
+    k_cache: jax.Array,                # (B, S, Hkv, D)
+    v_cache: jax.Array,
+    positions: jax.Array,              # (B,) current length per sequence
+    *,
+    sliding_window: Optional[int] = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly huge) KV cache.
+
+    O(S·D): one masked matvec per head.  Under GSPMD a sequence-sharded cache
+    yields partial max/sum per shard which XLA combines with all-reduce —
+    the flash-decoding split-K pattern.
+    """
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    qr = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(S)[None, :]                       # (1, S)
+    valid = idx < positions[:, None]
+    if sliding_window is not None:
+        valid &= idx >= (positions[:, None] - sliding_window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_apply(x: jax.Array, params: dict, mlp_type: str) -> jax.Array:
+    if mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if mlp_type == "swiglu" else \
+            functools.partial(jax.nn.gelu, approximate=True)
+        h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+        return h @ params["w_down"]
+    h = x @ params["w_up"]
+    if mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    else:
+        raise ValueError(mlp_type)
+    return h @ params["w_down"]
+
+
+def mlp_init(key, d_model: int, d_ff: int, mlp_type: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in = d_model ** -0.5
+    std_out = d_ff ** -0.5
+    p = {"w_up": jax.random.normal(k1, (d_model, d_ff), dtype) * std_in,
+         "w_down": jax.random.normal(k2, (d_ff, d_model), dtype) * std_out}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(k3, (d_model, d_ff), dtype) * std_in
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — sort-based dispatch (expert parallel)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def masked_perm_gather(x, idx, valid, dual_idx, dual_valid):
+    """out[i] = valid[i] ? x[idx[i]] : 0, where idx restricted to valid
+    entries is a partial permutation whose inverse is (dual_idx, dual_valid).
+
+    The custom VJP turns the backward pass into *another gather* (by the dual
+    index) instead of the scatter-add jax would emit — scatters make GSPMD
+    replicate a (tokens·top_k, d_model) fp32 buffer (measured 51 GB/device on
+    the 16B MoE train cell); gathers partition cleanly.
+    """
+    n = x.shape[0]
+    out = jnp.take(x, jnp.clip(idx, 0, n - 1), axis=0)
+    return jnp.where(valid[..., None], out, 0)
+
+
+def _mpg_fwd(x, idx, valid, dual_idx, dual_valid):
+    return masked_perm_gather(x, idx, valid, dual_idx, dual_valid), \
+        (idx.size, dual_idx, dual_valid)
+
+
+def _mpg_bwd(res, g):
+    m, dual_idx, dual_valid = res
+    gf = g.reshape(m, g.shape[-1])
+    dx = jnp.take(gf, jnp.clip(dual_idx, 0, m - 1), axis=0)
+    dx = jnp.where(dual_valid[..., None], dx, 0)
+    return dx, None, None, None, None
+
+
+masked_perm_gather.defvjp(_mpg_fwd, _mpg_bwd)
+
+
+@jax.custom_vjp
+def moe_dispatch(x, slot_tok, slot_valid, dest_tk, keep_tk):
+    """Fused token→slot dispatch: out[e,c] = slot_valid ? x[slot_tok[e,c]] : 0.
+
+    slot_tok (E,C): source token of each expert slot; (dest_tk, keep_tk)
+    (T,K): the dual map (flat slot index fed by token t's k-th route).
+    Backward = K gathers — never materializes a (T·K, D) buffer and never
+    emits a scatter-add.
+    """
+    n = x.shape[0]
+    out = jnp.take(x, jnp.clip(slot_tok, 0, n - 1), axis=0)
+    return jnp.where(slot_valid[..., None], out, 0)
+
+
+def _md_fwd(x, slot_tok, slot_valid, dest_tk, keep_tk):
+    return moe_dispatch(x, slot_tok, slot_valid, dest_tk, keep_tk), \
+        (dest_tk, keep_tk)
+
+
+def _md_bwd(res, g):
+    dest_tk, keep_tk = res
+    ec = g.shape[0] * g.shape[1]
+    gf = g.reshape(ec, g.shape[-1])
+    k = dest_tk.shape[1]
+    dx = None
+    for j in range(k):
+        dj = jnp.take(gf, jnp.clip(dest_tk[:, j], 0, ec - 1), axis=0)
+        dj = jnp.where(keep_tk[:, j, None], dj, 0)
+        dx = dj if dx is None else dx + dj
+    return dx, None, None, None, None
+
+
+moe_dispatch.defvjp(_md_fwd, _md_bwd)
+
+def moe_apply(x: jax.Array, params: dict, *, n_experts: int, top_k: int,
+              capacity_factor: float, mlp_type: str) -> Tuple[jax.Array, jax.Array]:
+    """x: (T, D) -> (T, D), plus aux load-balancing loss.
+
+    Sort-based dispatch: flatten (token, slot) assignments, order by expert,
+    drop beyond capacity C, gather into a dense (E, C, D) buffer, run the
+    expert MLPs as batched einsums (E sharded over the 'model' axis = EP),
+    and scatter back weighted by the router gates.  No (T, E, C) one-hot
+    dispatch tensor is ever materialized (GShard-style dispatch is O(T·E·C)
+    memory — prohibitive at E=384).
+    """
+    from repro.sharding import ctx as SHCTX
+    T, D = x.shape
+    E, K = n_experts, top_k
+    x = SHCTX.hint(x, "dp", None)
+    logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, expert_idx = lax.top_k(probs, K)                # (T, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss (Switch-style): E * sum_e f_e * p_e
+    density = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * mean_prob)
+
+    C = max(1, int(capacity_factor * T * K / E))
+    flat_e = expert_idx.reshape(T * K)
+    flat_tok = jnp.repeat(jnp.arange(T), K)
+    flat_gate = gate_vals.reshape(T * K)
+
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))      # (E,)
+    pos = jnp.arange(T * K) - seg_start[sorted_e]
+    keep = pos < C
+
+    # Fused gather-only dispatch (see moe_dispatch): slot (e, c) reads sorted
+    # position seg_start[e]+c, which is token order[...]//K.  Index plumbing
+    # is int32 (T·K,) arrays; no (T·K, D) activation is ever materialized and
+    # no scatter-add appears in fwd or bwd.
+    inv_order = jnp.zeros((T * K,), jnp.int32).at[order].set(
+        jnp.arange(T * K, dtype=jnp.int32))
+    slot_idx = seg_start[:, None] + jnp.arange(C)[None, :]     # (E, C)
+    slot_valid = (slot_idx < T * K) & \
+        (jnp.take(sorted_e, jnp.clip(slot_idx, 0, T * K - 1)) ==
+         jnp.arange(E)[:, None])
+    slot_tok = jnp.take(order, jnp.clip(slot_idx, 0, T * K - 1)) // K
+    dest = sorted_e * C + jnp.clip(pos, 0, C - 1)              # (T·K,) sorted
+    dest_tk = jnp.take(dest, inv_order).reshape(T, K)          # dual, by (t,k)
+    keep_tk = jnp.take(keep, inv_order).reshape(T, K)
+    expert_in = moe_dispatch(x, slot_tok, slot_valid, dest_tk, keep_tk)
+    expert_in = SHCTX.hint(expert_in, "mp", "dp", None)
+
+    if mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if mlp_type == "swiglu" else \
+            functools.partial(jax.nn.gelu, approximate=True)
+        h = act(jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"])) * \
+            jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"])
+    else:
+        h = jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"])
+        h = jnp.square(jax.nn.relu(h)) if mlp_type == "relu2" else \
+            jax.nn.gelu(h, approximate=True)
+    h = SHCTX.hint(h, "mp", "dp", None)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # (E, C, D)
+    expert_out = SHCTX.hint(expert_out, "mp", "dp", None)
+
+    # combine: K per-route gathers straight from the expert outputs back to
+    # token order (duals precomputed), gate-weighted sum.  Max intermediate
+    # is one (T, D) buffer per route, fused by XLA into the accumulation.
+    flat_out = expert_out.reshape(E * C, D)
+    tk_of_slot = jnp.take(order, jnp.clip(slot_idx.reshape(-1), 0, T * K - 1))
+    y = None
+    for j in range(K):
+        dual_valid_j = slot_valid.reshape(-1) & (tk_of_slot % K == j)
+        yj = masked_perm_gather(flat_out, dest_tk[:, j], keep_tk[:, j],
+                                tk_of_slot // K, dual_valid_j)
+        yj = yj * gate_vals[:, j, None].astype(yj.dtype)
+        y = yj if y is None else y + yj
+    y = SHCTX.hint(y, "dp", None)
+    return y.astype(x.dtype), aux
+
+
+def moe_init(key, d_model: int, cfg_moe, mlp_type: str, dtype) -> dict:
+    E, F = cfg_moe.n_experts, cfg_moe.d_ff
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    std_in, std_out = d_model ** -0.5, F ** -0.5
+    p = {"router": jax.random.normal(k0, (d_model, E), jnp.float32) * std_in,
+         "w_up": jax.random.normal(k1, (E, d_model, F), dtype) * std_in,
+         "w_down": jax.random.normal(k2, (E, F, d_model), dtype) * std_out}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(k3, (E, d_model, F), dtype) * std_in
+    return p

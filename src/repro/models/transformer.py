@@ -1,0 +1,200 @@
+"""Decoder-only transformer LM with scan-over-layers.
+
+Parameters are stored *stacked* over the layer dimension so the whole stack
+lowers to a single `lax.scan` body — keeping HLO size and compile time O(1)
+in depth (61-layer / 1T-param configs compile on one CPU core).
+
+Three entry points (the dry-run lowers exactly these):
+  * ``train_step``   — next-token loss + grads + optimizer update
+  * ``prefill``      — full-prompt forward, returns last-position logits + KV cache
+  * ``decode_step``  — one token against a KV cache (serve_step for decode shapes)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LMConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: LMConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    dh = cfg.resolved_head_dim
+    D = cfg.d_model
+    keys = jax.random.split(key, 8)
+
+    def stack_init(fn, key, n):
+        ks = jax.random.split(key, n)
+        return jax.vmap(fn)(ks)
+
+    def layer_init(k):
+        ka, kb = jax.random.split(k)
+        std = D ** -0.5
+        p = {
+            "attn_norm": jnp.zeros((D,), dt),
+            "mlp_norm": jnp.zeros((D,), dt),
+            "wq": jax.random.normal(ka, (D, cfg.n_heads, dh), dt) * std,
+            "wk": jax.random.normal(jax.random.fold_in(ka, 1),
+                                    (D, cfg.n_kv_heads, dh), dt) * std,
+            "wv": jax.random.normal(jax.random.fold_in(ka, 2),
+                                    (D, cfg.n_kv_heads, dh), dt) * std,
+            "wo": jax.random.normal(jax.random.fold_in(ka, 3),
+                                    (cfg.n_heads, dh, D), dt) * (cfg.n_heads * dh) ** -0.5,
+        }
+        if cfg.moe is not None:
+            p["moe"] = L.moe_init(kb, D, cfg.moe, cfg.mlp_type, dt)
+        else:
+            p["mlp"] = L.mlp_init(kb, D, cfg.d_ff, cfg.mlp_type, dt)
+        return p
+
+    params: Params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, D), dt) * 1.0,
+        "layers": stack_init(layer_init, keys[1], cfg.n_layers),
+        "final_norm": jnp.zeros((D,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(keys[2], (D, cfg.vocab_size), dt) * D ** -0.5
+    return params
+
+
+def abstract_params(cfg: LMConfig) -> Params:
+    """Parameter ShapeDtypeStructs without allocation (for the dry-run)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _attention_block(x, lp, cfg: LMConfig, positions, *, causal=True,
+                     block_pairing=False):
+    h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhe->bshe", h, lp["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", h, lp["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", h, lp["wv"])
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = L.chunked_attention(
+        q, k, v, causal=causal, q_positions=positions, kv_positions=positions,
+        sliding_window=cfg.sliding_window,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        block_pairing=block_pairing)
+    return jnp.einsum("bshe,hed->bsd", o, lp["wo"]), (k, v)
+
+
+def _ffn_block(x, lp, cfg: LMConfig):
+    h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.moe is not None:
+        B, S, D = h.shape
+        y, aux = L.moe_apply(h.reshape(B * S, D), lp["moe"],
+                             n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+                             capacity_factor=cfg.moe.capacity_factor,
+                             mlp_type=cfg.mlp_type)
+        return y.reshape(B, S, D), aux
+    return L.mlp_apply(h, lp["mlp"], cfg.mlp_type), jnp.float32(0.0)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: LMConfig,
+            *, return_cache: bool = False,
+            collect_attn_stats: bool = False):
+    """tokens: (B, S) -> logits (B, S, V); optionally the per-layer KV cache."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if cfg.tie_embeddings:
+        x = x * (cfg.d_model ** 0.5)
+    positions = jnp.arange(S)
+
+    from repro.sharding import ctx as SHCTX
+
+    def body(carry, lp):
+        x, aux = carry
+        attn_out, (k, v) = _attention_block(
+            x, lp, cfg, positions, block_pairing=cfg.causal_block_pairing)
+        x = x + attn_out
+        ffn_out, aux_l = _ffn_block(x, lp, cfg)
+        x = x + ffn_out
+        # Megatron-style sequence sharding of the saved residual stream:
+        # the (L, B, S, D) activation stack that backward needs shrinks by
+        # the model-axis size; attention/FFN re-gather S internally.
+        x = SHCTX.hint(x, "dp", "mp", None)
+        out = (k, v) if return_cache else None
+        return (x, aux + aux_l), out
+
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), caches = lax.scan(body_fn, (x, jnp.float32(0.0)), params["layers"])
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if return_cache:
+        # caches: tuple of stacked (L, B, S, Hkv, Dh)
+        cache = {"k": caches[0], "v": caches[1]}
+        return logits, aux, cache
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: Params, tokens, labels, cfg: LMConfig):
+    logits, aux = forward(params, tokens, cfg)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll + 0.01 * aux, nll
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: LMConfig):
+    """Prompt prefill: returns last-token logits (the TTFT-critical output)
+    and the populated KV cache."""
+    logits, _, cache = forward(params, tokens, cfg, return_cache=True)
+    return logits[:, -1], cache
+
+
+def decode_step(params: Params, tokens: jax.Array, cache: Dict[str, jax.Array],
+                positions: jax.Array, cfg: LMConfig):
+    """One decode step. tokens: (B, 1); cache[k|v]: (L, B, S, Hkv, Dh);
+    positions: (B,) current lengths. Returns (logits, new_cache)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens[:, 0]].astype(jnp.dtype(cfg.dtype))[:, None]
+    if cfg.tie_embeddings:
+        x = x * (cfg.d_model ** 0.5)
+
+    def body(x, inputs):
+        lp, k_cache, v_cache = inputs
+        h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhe->bshe", h, lp["wq"])
+        k = jnp.einsum("bsd,dhe->bshe", h, lp["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", h, lp["wv"])
+        q = L.apply_rope(q, positions[:, None], cfg.rope_theta)
+        k = L.apply_rope(k, positions[:, None], cfg.rope_theta)
+        bidx = jnp.arange(B)
+        k_cache = k_cache.at[bidx, positions].set(k[:, 0])
+        v_cache = v_cache.at[bidx, positions].set(v[:, 0])
+        o = L.decode_attention(q, k_cache, v_cache, positions + 1,
+                               sliding_window=cfg.sliding_window)
+        x = x + jnp.einsum("bshe,hed->bsd", o, lp["wo"])
+        ffn_out, _ = _ffn_block(x, lp, cfg)
+        return x + ffn_out, (k_cache, v_cache)
+
+    x, (new_k, new_v) = lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return logits, {"k": new_k, "v": new_v}

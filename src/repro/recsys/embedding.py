@@ -1,0 +1,71 @@
+"""Embedding substrate for the RecSys family.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — the lookup-reduce
+path is built from ``jnp.take`` + ``jax.ops.segment_sum`` (this IS part of
+the system, per the assignment).  All per-field tables are concatenated into
+one mega-table so a single row-sharded array serves every field (the same
+layout the RcLLM item-KV pool uses: one sharded store, id-indexed).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+ROW_PAD = 4096   # tables padded to a shard boundary (any mesh ≤ 4096 chips)
+
+
+def pad_rows(n: int) -> int:
+    return ((n + ROW_PAD - 1) // ROW_PAD) * ROW_PAD
+
+
+def field_offsets(vocabs: Sequence[int]) -> np.ndarray:
+    """Start row of each field inside the concatenated mega-table."""
+    return np.concatenate([[0], np.cumsum(np.asarray(vocabs))[:-1]]).astype(np.int32)
+
+
+def mega_table_rows(vocabs: Sequence[int]) -> int:
+    return pad_rows(int(np.sum(np.asarray(vocabs))))
+
+
+def lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Plain row gather: (rows, dim)[ids] -> ids.shape + (dim,)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, segment_ids: jax.Array,
+                  num_segments: int, *, mode: str = "sum",
+                  weights: Optional[jax.Array] = None) -> jax.Array:
+    """EmbeddingBag(sum|mean|max) over ragged bags.
+
+    ids, segment_ids: flat (nnz,) arrays; bag b = rows where segment_ids == b.
+    """
+    rows = jnp.take(table, ids, axis=0)                       # (nnz, dim)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+        n = jax.ops.segment_sum(jnp.ones((ids.shape[0],), rows.dtype),
+                                segment_ids, num_segments=num_segments)
+        return s / jnp.maximum(n, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=num_segments)
+    raise ValueError(mode)
+
+
+def fielded_lookup(table: jax.Array, sparse_ids: jax.Array,
+                   offsets: jax.Array) -> jax.Array:
+    """CTR-style lookup: sparse_ids (B, F) of per-field local ids ->
+    (B, F, dim) via the mega-table."""
+    return jnp.take(table, sparse_ids + offsets[None, :], axis=0)
+
+
+def init_mega_table(key: jax.Array, vocabs: Sequence[int], dim: int,
+                    dtype=jnp.float32) -> jax.Array:
+    rows = mega_table_rows(vocabs)
+    return jax.random.normal(key, (rows, dim), dtype) * 0.05

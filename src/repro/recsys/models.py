@@ -1,0 +1,337 @@
+"""RecSys model family: Wide&Deep, AutoInt, DIEN, BERT4Rec.
+
+Shared structure: huge sparse embedding tables (the hot path — see
+repro/kernels/embedding_bag) → feature interaction → small MLP.  Every model
+exposes init_params / forward(logits) / train_step loss / retrieval scoring.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import RecsysConfig
+from repro.recsys import embedding as E
+
+Params = Dict[str, Any]
+
+
+def _mlp_init(key, dims: Tuple[int, ...], dtype=jnp.float32) -> list:
+    ps = []
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        k = jax.random.fold_in(key, i)
+        ps.append({"w": jax.random.normal(k, (din, dout), dtype) * din ** -0.5,
+                   "b": jnp.zeros((dout,), dtype)})
+    return ps
+
+
+def _mlp_apply(ps: list, x: jax.Array, final_act: bool = False) -> jax.Array:
+    for i, p in enumerate(ps):
+        x = x @ p["w"] + p["b"]
+        if i < len(ps) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Wide & Deep
+# ---------------------------------------------------------------------------
+
+def widedeep_init(key: jax.Array, cfg: RecsysConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    nf = len(cfg.field_vocabs)
+    deep_in = cfg.n_dense + nf * cfg.embed_dim
+    return {
+        "table": E.init_mega_table(ks[0], cfg.field_vocabs, cfg.embed_dim),
+        "wide_table": E.init_mega_table(ks[1], cfg.field_vocabs, 1),
+        "wide_dense": jax.random.normal(ks[2], (cfg.n_dense, 1)) * 0.1,
+        "deep": _mlp_init(ks[3], (deep_in,) + tuple(cfg.mlp_dims) + (1,)),
+        "user_proj": jax.random.normal(ks[4], (cfg.mlp_dims[-1], cfg.embed_dim))
+                     * cfg.mlp_dims[-1] ** -0.5,
+    }
+
+
+def widedeep_forward(params: Params, batch: Dict, cfg: RecsysConfig,
+                     return_user: bool = False):
+    offsets = jnp.asarray(E.field_offsets(cfg.field_vocabs))
+    emb = E.fielded_lookup(params["table"], batch["sparse_ids"], offsets)  # (B, F, d)
+    B = emb.shape[0]
+    deep_in = jnp.concatenate([batch["dense"], emb.reshape(B, -1)], axis=-1)
+    hidden = deep_in
+    for i, p in enumerate(params["deep"][:-1]):
+        hidden = jax.nn.relu(hidden @ p["w"] + p["b"])
+    deep_logit = (hidden @ params["deep"][-1]["w"] + params["deep"][-1]["b"])[:, 0]
+    wide = E.fielded_lookup(params["wide_table"], batch["sparse_ids"],
+                            offsets)[..., 0].sum(-1)
+    wide = wide + (batch["dense"] @ params["wide_dense"])[:, 0]
+    logit = deep_logit + wide
+    if return_user:
+        return logit, hidden @ params["user_proj"]
+    return logit
+
+
+# ---------------------------------------------------------------------------
+# AutoInt
+# ---------------------------------------------------------------------------
+
+def autoint_init(key: jax.Array, cfg: RecsysConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    nf = len(cfg.field_vocabs)
+    d, da, H = cfg.embed_dim, cfg.d_attn, cfg.n_heads
+    layers = []
+    for i in range(cfg.n_attn_layers):
+        k = jax.random.fold_in(ks[1], i)
+        din = d if i == 0 else da * H
+        layers.append({
+            "wq": jax.random.normal(jax.random.fold_in(k, 0), (din, H, da)) * din ** -0.5,
+            "wk": jax.random.normal(jax.random.fold_in(k, 1), (din, H, da)) * din ** -0.5,
+            "wv": jax.random.normal(jax.random.fold_in(k, 2), (din, H, da)) * din ** -0.5,
+            "wres": jax.random.normal(jax.random.fold_in(k, 3), (din, H * da)) * din ** -0.5,
+        })
+    out_dim = (nf + cfg.n_dense) * cfg.d_attn * H
+    return {
+        "table": E.init_mega_table(ks[0], cfg.field_vocabs, d),
+        "dense_emb": jax.random.normal(ks[2], (cfg.n_dense, d)) * 0.05,
+        "attn": layers,
+        "w_out": jax.random.normal(ks[3], (out_dim, 1)) * out_dim ** -0.5,
+        "user_proj": jax.random.normal(ks[4], (out_dim, d)) * out_dim ** -0.5,
+    }
+
+
+def autoint_forward(params: Params, batch: Dict, cfg: RecsysConfig,
+                    return_user: bool = False):
+    offsets = jnp.asarray(E.field_offsets(cfg.field_vocabs))
+    emb = E.fielded_lookup(params["table"], batch["sparse_ids"], offsets)  # (B, F, d)
+    dense_emb = batch["dense"][..., None] * params["dense_emb"][None]  # (B,13,d)
+    x = jnp.concatenate([emb, dense_emb], axis=1)              # (B, F+13, d)
+    for lp in params["attn"]:
+        q = jnp.einsum("bfd,dhe->bfhe", x, lp["wq"])
+        k = jnp.einsum("bfd,dhe->bfhe", x, lp["wk"])
+        v = jnp.einsum("bfd,dhe->bfhe", x, lp["wv"])
+        s = jnp.einsum("bfhe,bghe->bhfg", q, k) / (lp["wq"].shape[-1] ** 0.5)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bghe->bfhe", a, v)
+        B, F = x.shape[:2]
+        x = jax.nn.relu(o.reshape(B, F, -1) + x @ lp["wres"])
+    flat = x.reshape(x.shape[0], -1)
+    logit = (flat @ params["w_out"])[:, 0]
+    if return_user:
+        return logit, flat @ params["user_proj"]
+    return logit
+
+
+# ---------------------------------------------------------------------------
+# DIEN (GRU interest extraction + AUGRU interest evolution)
+# ---------------------------------------------------------------------------
+
+def _gru_init(key, d_in, d_h):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wz": jax.random.normal(k1, (d_in + d_h, d_h)) * (d_in + d_h) ** -0.5,
+            "wr": jax.random.normal(k2, (d_in + d_h, d_h)) * (d_in + d_h) ** -0.5,
+            "wh": jax.random.normal(k3, (d_in + d_h, d_h)) * (d_in + d_h) ** -0.5,
+            "bz": jnp.zeros((d_h,)), "br": jnp.zeros((d_h,)), "bh": jnp.zeros((d_h,))}
+
+
+def _gru_cell(p, h, x, att=None):
+    xh = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(xh @ p["wz"] + p["bz"])
+    r = jax.nn.sigmoid(xh @ p["wr"] + p["br"])
+    xrh = jnp.concatenate([x, r * h], axis=-1)
+    hh = jnp.tanh(xrh @ p["wh"] + p["bh"])
+    if att is not None:                     # AUGRU: attention scales update gate
+        z = z * att[:, None]
+    return (1 - z) * h + z * hh
+
+
+def dien_init(key: jax.Array, cfg: RecsysConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.embed_dim
+    d_in = 2 * d                              # item ⊕ cate
+    dh = cfg.gru_dim
+    mlp_in = dh + 2 * d + 2 * d               # final interest + target + sum-pool
+    return {
+        "item_table": jax.random.normal(ks[0], (E.pad_rows(cfg.n_items), d)) * 0.05,
+        "cate_table": jax.random.normal(ks[1], (E.pad_rows(cfg.n_cates), d)) * 0.05,
+        "gru1": _gru_init(ks[2], d_in, dh),
+        "gru2": _gru_init(ks[3], d_in if dh == d_in else dh, dh),
+        "att_w": jax.random.normal(ks[4], (dh, 2 * d)) * dh ** -0.5,
+        "mlp": _mlp_init(ks[5], (mlp_in,) + tuple(cfg.mlp_dims) + (1,)),
+        "user_proj": jax.random.normal(ks[6], (dh, d)) * dh ** -0.5,
+    }
+
+
+def dien_forward(params: Params, batch: Dict, cfg: RecsysConfig,
+                 return_user: bool = False):
+    it = E.lookup(params["item_table"], batch["hist_items"])   # (B, T, d)
+    ct = E.lookup(params["cate_table"], batch["hist_cates"])
+    x = jnp.concatenate([it, ct], axis=-1)                     # (B, T, 2d)
+    mask = batch["hist_mask"].astype(x.dtype)                  # (B, T)
+    tgt = jnp.concatenate([E.lookup(params["item_table"], batch["target_item"]),
+                           E.lookup(params["cate_table"], batch["target_cate"])],
+                          axis=-1)                             # (B, 2d)
+    B, T, _ = x.shape
+    dh = cfg.gru_dim
+
+    def step1(h, xt):
+        xv, mt = xt
+        h_new = _gru_cell(params["gru1"], h, xv)
+        h = jnp.where(mt[:, None] > 0, h_new, h)
+        return h, h
+
+    h0 = jnp.zeros((B, dh))
+    _, hs = lax.scan(step1, h0, (x.transpose(1, 0, 2), mask.T))   # (T, B, dh)
+    hs = hs.transpose(1, 0, 2)                                    # (B, T, dh)
+
+    # attention of target on interest states
+    att_logits = jnp.einsum("btd,de,be->bt", hs, params["att_w"], tgt)
+    att_logits = jnp.where(mask > 0, att_logits, -1e30)
+    att = jax.nn.softmax(att_logits, axis=-1)                     # (B, T)
+
+    def step2(h, xt):
+        hv, at, mt = xt
+        h_new = _gru_cell(params["gru2"], h, hv, att=at)
+        h = jnp.where(mt[:, None] > 0, h_new, h)
+        return h, None
+
+    hfin, _ = lax.scan(step2, jnp.zeros((B, dh)),
+                       (hs.transpose(1, 0, 2), att.T, mask.T))
+
+    pooled = (x * mask[..., None]).sum(1) / jnp.maximum(mask.sum(1), 1)[:, None]
+    feats = jnp.concatenate([hfin, tgt, pooled], axis=-1)
+    logit = _mlp_apply(params["mlp"], feats)[:, 0]
+    if return_user:
+        return logit, hfin @ params["user_proj"]
+    return logit
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec
+# ---------------------------------------------------------------------------
+
+def bert4rec_init(key: jax.Array, cfg: RecsysConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d, H = cfg.embed_dim, cfg.n_heads
+    dh = d // H
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k = jax.random.fold_in(ks[1], i)
+        blocks.append({
+            "ln1": jnp.zeros((d,)), "ln2": jnp.zeros((d,)),
+            "wq": jax.random.normal(jax.random.fold_in(k, 0), (d, H, dh)) * d ** -0.5,
+            "wk": jax.random.normal(jax.random.fold_in(k, 1), (d, H, dh)) * d ** -0.5,
+            "wv": jax.random.normal(jax.random.fold_in(k, 2), (d, H, dh)) * d ** -0.5,
+            "wo": jax.random.normal(jax.random.fold_in(k, 3), (H, dh, d)) * d ** -0.5,
+            "w1": jax.random.normal(jax.random.fold_in(k, 4), (d, 4 * d)) * d ** -0.5,
+            "b1": jnp.zeros((4 * d,)),
+            "w2": jax.random.normal(jax.random.fold_in(k, 5), (4 * d, d)) * (4 * d) ** -0.5,
+            "b2": jnp.zeros((d,)),
+        })
+    return {
+        # +2 rows: PAD and MASK tokens (padded to shard boundary)
+        "item_table": jax.random.normal(ks[0], (E.pad_rows(cfg.n_items + 2), d)) * 0.05,
+        "pos_table": jax.random.normal(ks[2], (cfg.seq_len, d)) * 0.05,
+        "blocks": blocks,
+        "final_ln": jnp.zeros((d,)),
+    }
+
+
+def _ln(x, scale):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + 1e-6) * (1.0 + scale)
+
+
+def bert4rec_encode(params: Params, batch: Dict, cfg: RecsysConfig) -> jax.Array:
+    x = E.lookup(params["item_table"], batch["item_seq"])      # (B, T, d)
+    x = x + params["pos_table"][None]
+    mask = batch["seq_mask"]                                   # (B, T) bool
+    bias = jnp.where(mask[:, None, None, :], 0.0, -1e30)       # (B,1,1,T)
+    for bp in params["blocks"]:
+        h = _ln(x, bp["ln1"])
+        q = jnp.einsum("btd,dhe->bthe", h, bp["wq"])
+        k = jnp.einsum("btd,dhe->bthe", h, bp["wk"])
+        v = jnp.einsum("btd,dhe->bthe", h, bp["wv"])
+        s = jnp.einsum("bthe,bshe->bhts", q, k) / (q.shape[-1] ** 0.5) + bias
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhts,bshe->bthe", a, v)
+        x = x + jnp.einsum("bthe,hed->btd", o, bp["wo"])
+        h = _ln(x, bp["ln2"])
+        x = x + jax.nn.gelu(h @ bp["w1"] + bp["b1"]) @ bp["w2"] + bp["b2"]
+    return _ln(x, params["final_ln"])                          # (B, T, d)
+
+
+def bert4rec_mlm_loss(params: Params, batch: Dict, cfg: RecsysConfig) -> jax.Array:
+    """Sampled-softmax MLM at the given masked positions (vocab is 1M —
+    dense softmax over items is infeasible at batch 65536)."""
+    h = bert4rec_encode(params, batch, cfg)                    # (B, T, d)
+    pos = batch["mlm_positions"]                               # (B, M)
+    hm = jnp.take_along_axis(h, pos[..., None], axis=1)        # (B, M, d)
+    pos_emb = E.lookup(params["item_table"], batch["mlm_labels"])   # (B, M, d)
+    neg_emb = E.lookup(params["item_table"], batch["neg_samples"])  # (N, d)
+    pos_logit = jnp.einsum("bmd,bmd->bm", hm, pos_emb)
+    neg_logit = jnp.einsum("bmd,nd->bmn", hm, neg_emb)
+    logz = jax.nn.logsumexp(
+        jnp.concatenate([pos_logit[..., None], neg_logit], axis=-1), axis=-1)
+    return (logz - pos_logit).mean()
+
+
+# ---------------------------------------------------------------------------
+# Unified dispatch
+# ---------------------------------------------------------------------------
+
+INIT = {"wide_deep": widedeep_init, "autoint": autoint_init,
+        "dien": dien_init, "bert4rec": bert4rec_init}
+FORWARD = {"wide_deep": widedeep_forward, "autoint": autoint_forward,
+           "dien": dien_forward}
+
+
+def init_params(key: jax.Array, cfg: RecsysConfig) -> Params:
+    return INIT[cfg.kind](key, cfg)
+
+
+def abstract_params(cfg: RecsysConfig) -> Params:
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def score(params: Params, batch: Dict, cfg: RecsysConfig) -> jax.Array:
+    """CTR logit (B,) — lowered for serve_p99 / serve_bulk."""
+    if cfg.kind == "bert4rec":
+        h = bert4rec_encode(params, batch, cfg)
+        # next-item scoring uses the last valid position's representation
+        last = jnp.maximum(batch["seq_mask"].sum(-1) - 1, 0)
+        hu = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+        # score against the *observed* items (cheap serving proxy score)
+        return jnp.einsum("bd,bd->b", hu, h[:, 0])
+    return FORWARD[cfg.kind](params, batch, cfg)
+
+
+def user_repr(params: Params, batch: Dict, cfg: RecsysConfig) -> jax.Array:
+    if cfg.kind == "bert4rec":
+        h = bert4rec_encode(params, batch, cfg)
+        last = jnp.maximum(batch["seq_mask"].sum(-1) - 1, 0)
+        return jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+    _, u = FORWARD[cfg.kind](params, batch, cfg, return_user=True)
+    return u
+
+
+def retrieval_scores(params: Params, batch: Dict, cfg: RecsysConfig) -> jax.Array:
+    """Score one query against n_candidates items as a single batched dot —
+    never a loop (retrieval_cand shape)."""
+    u = user_repr(params, batch, cfg)                          # (B, d)
+    table = params["item_table"] if cfg.kind in ("dien", "bert4rec") \
+        else params["table"]
+    cand = E.lookup(table, batch["candidate_ids"])             # (N, d)
+    return jnp.einsum("bd,nd->bn", u, cand)                    # (B, N)
+
+
+def train_loss(params: Params, batch: Dict, cfg: RecsysConfig) -> jax.Array:
+    if cfg.kind == "bert4rec":
+        return bert4rec_mlm_loss(params, batch, cfg)
+    logit = FORWARD[cfg.kind](params, batch, cfg)
+    y = batch["labels"]
+    # BCE with logits
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logit))))

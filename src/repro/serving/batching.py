@@ -1,0 +1,90 @@
+"""Continuous batching for the serving path.
+
+Requests arrive asynchronously; the batcher forms prefill batches under a
+token budget and interleaves decode iterations (prefill-prioritized, like
+vLLM's default).  Drives the simulator clock in tests/benchmarks; on real
+hardware the same loop drives the jitted prefill/decode steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(order=True)
+class PendingRequest:
+    arrival_s: float
+    rid: int = field(compare=False)
+    n_tokens: int = field(compare=False)
+    decode_steps: int = field(compare=False, default=4)
+
+
+@dataclass
+class Completion:
+    rid: int
+    arrival_s: float
+    first_token_s: float      # TTFT
+    done_s: float
+
+
+class ContinuousBatcher:
+    """Single-instance continuous batching over a virtual clock."""
+
+    def __init__(self, prefill_time_fn: Callable[[int], float],
+                 decode_time_fn: Callable[[int], float],
+                 max_batch_tokens: int = 8192,
+                 max_decode_batch: int = 64):
+        self.prefill_time_fn = prefill_time_fn
+        self.decode_time_fn = decode_time_fn
+        self.max_batch_tokens = max_batch_tokens
+        self.max_decode_batch = max_decode_batch
+
+    def run(self, requests: List[PendingRequest]) -> List[Completion]:
+        pending = sorted(requests)
+        waiting: List[PendingRequest] = []
+        decoding: List[Tuple[PendingRequest, float, int]] = []  # (req, ttft, left)
+        done: List[Completion] = []
+        t = 0.0
+        i = 0
+        while i < len(pending) or waiting or decoding:
+            # admit arrivals
+            while i < len(pending) and pending[i].arrival_s <= t:
+                waiting.append(pending[i])
+                i += 1
+            if not waiting and not decoding:
+                t = pending[i].arrival_s
+                continue
+            if waiting:
+                # prefill-priority: batch under the token budget
+                batch, tok = [], 0
+                for r in list(waiting):
+                    if tok + r.n_tokens > self.max_batch_tokens and batch:
+                        break
+                    batch.append(r)
+                    tok += r.n_tokens
+                for r in batch:
+                    waiting.remove(r)
+                dt = self.prefill_time_fn(tok)
+                t += dt
+                for r in batch:
+                    decoding.append((r, t - r.arrival_s, r.decode_steps))
+            else:
+                # one decode iteration for the running batch
+                batch = decoding[:self.max_decode_batch]
+                t += self.decode_time_fn(len(batch))
+                keep = []
+                for r, ttft, left in decoding:
+                    if (r, ttft, left) in batch or left > 0:
+                        pass
+                    left2 = left - 1 if (r, ttft, left) in batch else left
+                    if left2 <= 0:
+                        done.append(Completion(r.rid, r.arrival_s,
+                                               r.arrival_s + ttft, t))
+                    else:
+                        keep.append((r, ttft, left2))
+                decoding = keep
+        return done

@@ -1,0 +1,59 @@
+"""Trace-time sharding-hint context.
+
+Model code stays mesh-agnostic: it calls ``hint(x, "tokens", ...)`` with a
+*logical* spec; when a step function is traced inside ``axes(mesh)``, the
+logical axes resolve to mesh axes and a with_sharding_constraint is emitted.
+Outside any mesh (unit tests, single-device runs) hints are no-ops.
+
+Logical axes:  "dp"  → ("pod","data") / ("data",)   "mp" → "model"
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("mesh_ctx", default=None)
+
+
+@contextlib.contextmanager
+def axes(mesh):
+    """Activate sharding hints for code traced inside this block."""
+    from repro.launch.mesh import data_axes
+    token = _CTX.set((mesh, data_axes(mesh), "model"))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def resolve(*logical) -> Optional[P]:
+    ctx = _CTX.get()
+    if ctx is None:
+        return None
+    _, dax, m = ctx
+    out = []
+    for ax in logical:
+        if ax == "dp":
+            out.append(tuple(dax))
+        elif ax == "mp":
+            out.append(m)
+        elif ax == "dp+mp":
+            out.append(tuple(dax) + (m,))
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def hint(x: jax.Array, *logical) -> jax.Array:
+    """with_sharding_constraint if a mesh context is active, else identity."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh = ctx[0]
+    spec = resolve(*logical)
+    return lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

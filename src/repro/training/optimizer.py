@@ -1,0 +1,150 @@
+"""Optimizers: AdamW and Adafactor (factored second moments).
+
+Adafactor is the default for the 1T-param MoE config: Adam's two fp32
+moments alone are 8 TB there — factored row/col statistics cut optimizer
+state to O(rows + cols) per matrix (see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any          # pytree matching params
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          grad_clip: float = 1.0):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        inner = {"m": jax.tree_util.tree_map(zeros, params),
+                 "v": jax.tree_util.tree_map(zeros, params)}
+        return OptState(step=jnp.zeros((), jnp.int32), inner=inner)
+
+    def update(grads, state: OptState, params):
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        t = state.step + 1
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            new_p = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.inner["m"])
+        flat_v = tdef.flatten_up_to(state.inner["v"])
+        outs = [upd(p, g, m, v)
+                for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_m = tdef.unflatten([o[1] for o in outs])
+        new_v = tdef.unflatten([o[2] for o in outs])
+        return new_p, OptState(step=t, inner={"m": new_m, "v": new_v}), gnorm
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, arXiv:1804.04235) — factored, momentum-free
+# ---------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps1: float = 1e-30,
+              eps2: float = 1e-3, clip_threshold: float = 1.0,
+              grad_clip: float = 1.0):
+    def init(params):
+        def zero_state(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        inner = jax.tree_util.tree_map(zero_state, params)
+        return OptState(step=jnp.zeros((), jnp.int32), inner=inner)
+
+    def update(grads, state: OptState, params):
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        t = state.step + 1
+        beta = 1.0 - (t.astype(jnp.float32) + 1.0) ** -decay
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps1
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps1)
+                u = g * jax.lax.rsqrt(vr[..., None] / denom[..., None]) \
+                      * jax.lax.rsqrt(vc[..., None, :])
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            scale = jnp.maximum(eps2, jnp.sqrt(jnp.mean(jnp.square(
+                p.astype(jnp.float32)))))
+            new_p = p.astype(jnp.float32) - lr * scale * u
+            return new_p.astype(p.dtype), new_s
+
+        is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state.inner)
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_s = tdef.unflatten([o[1] for o in outs])
+        return new_p, OptState(step=t, inner=new_s), gnorm
+
+    return init, update
+
+
+def sgd(lr: float = 1e-2, grad_clip: float = 1.0):
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32), inner=())
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        new_p = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_p, OptState(step=state.step + 1, inner=()), gnorm
+
+    return init, update
+
+
+def get(name: str, **kw) -> Tuple[Callable, Callable]:
+    return {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}[name](**kw)
+
+
+def abstract_opt_state(init_fn, params_abstract):
+    return jax.eval_shape(init_fn, params_abstract)

@@ -1,0 +1,165 @@
+"""Fault-tolerant training loop.
+
+Features exercised by tests/examples:
+  * grad-accumulation microbatching (jit-scan over microbatches)
+  * checkpoint/restart: async checkpoints every N steps, auto-resume from
+    the latest on (re)start, survives injected step failures with bounded
+    retries (the single-process analogue of node-failure restart)
+  * gradient compression hooks (int8 / top-k + error feedback) for the
+    DCN-crossing data-parallel axis
+  * metric history
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as CKPT
+from repro.training import optimizer as OPT
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    optimizer: str = "adamw"
+    lr: float = 1e-3
+    microbatches: int = 1
+    max_retries: int = 3
+    grad_compression: Optional[str] = None   # None | int8 | topk
+    topk_frac: float = 0.05
+
+
+# --------------------------- gradient compression ---------------------------
+
+def compress_int8(g: jax.Array) -> jax.Array:
+    """Simulated int8 all-reduce payload: quantize → dequantize (the wire
+    format halves→quarters DCN bytes; numerics preserved via per-tensor
+    scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(g.dtype) * scale
+
+
+def compress_topk(g: jax.Array, frac: float, err: jax.Array):
+    """Top-k sparsification with error feedback (momentum-correct)."""
+    flat = (g + err).reshape(-1)
+    k = max(1, int(frac * flat.shape[0]))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    sent = jnp.where(mask, flat, 0.0)
+    new_err = (flat - sent).reshape(g.shape)
+    return sent.reshape(g.shape), new_err
+
+
+def apply_compression(grads, cfg: TrainConfig, err_state):
+    if cfg.grad_compression is None:
+        return grads, err_state
+    if cfg.grad_compression == "int8":
+        return jax.tree_util.tree_map(compress_int8, grads), err_state
+    if cfg.grad_compression == "topk":
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_e = tdef.flatten_up_to(err_state)
+        out = [compress_topk(g, cfg.topk_frac, e)
+               for g, e in zip(flat_g, flat_e)]
+        return (tdef.unflatten([o[0] for o in out]),
+                tdef.unflatten([o[1] for o in out]))
+    raise ValueError(cfg.grad_compression)
+
+
+# --------------------------------- loop -------------------------------------
+
+def make_train_step(loss_fn: Callable, cfg: TrainConfig, update_opt):
+    """loss_fn(params, batch) -> scalar.  Returns jitted
+    (params, opt_state, err, batch) -> (params, opt_state, err, metrics),
+    with microbatch grad accumulation when cfg.microbatches > 1."""
+
+    def step(params, opt_state, err_state, batch):
+        if cfg.microbatches > 1:
+            def micro(carry, mb):
+                acc, = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return (acc,), loss
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree_util.tree_map(
+                lambda a: a.reshape((cfg.microbatches,
+                                     a.shape[0] // cfg.microbatches)
+                                    + a.shape[1:]), batch)
+            (gsum,), losses = jax.lax.scan(micro, (zeros,), mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / cfg.microbatches, gsum)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, err_state = apply_compression(grads, cfg, err_state)
+        params, opt_state, gnorm = update_opt(grads, opt_state, params)
+        return params, opt_state, err_state, {"loss": loss, "gnorm": gnorm}
+
+    return jax.jit(step, donate_argnums=(0, 1, 2))
+
+
+def train(params, loss_fn: Callable, data_iter: Iterator, cfg: TrainConfig,
+          fail_injector: Optional[Callable[[int], None]] = None):
+    """Run the loop; auto-resume; bounded per-step retries on failure."""
+    init_opt, update_opt = OPT.get(cfg.optimizer, lr=cfg.lr)
+    opt_state = init_opt(params)
+    err_state = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+        if cfg.grad_compression == "topk" else ()
+    start_step = 0
+    ckpt = None
+    if cfg.ckpt_dir:
+        ckpt = CKPT.AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep_ckpts)
+        last = CKPT.latest_step(cfg.ckpt_dir)
+        if last is not None:
+            state = CKPT.restore(cfg.ckpt_dir, last,
+                                 {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start_step = last
+    step_fn = make_train_step(loss_fn, cfg, update_opt)
+
+    history = []
+    step = start_step
+    while step < cfg.steps:
+        batch = next(data_iter)
+        retries = 0
+        while True:
+            try:
+                if fail_injector is not None:
+                    fail_injector(step)      # may raise (simulated failure)
+                params, opt_state, err_state, metrics = step_fn(
+                    params, opt_state, err_state, batch)
+                break
+            except RuntimeError:
+                retries += 1
+                if retries > cfg.max_retries:
+                    # unrecoverable on this "node": resume from checkpoint
+                    if ckpt is None:
+                        raise
+                    ckpt.wait()
+                    last = CKPT.latest_step(cfg.ckpt_dir)
+                    if last is None:
+                        raise
+                    state = CKPT.restore(cfg.ckpt_dir, last,
+                                         {"params": params, "opt": opt_state})
+                    params, opt_state = state["params"], state["opt"]
+                    step = last
+                    retries = 0
+        history.append({k: float(v) for k, v in metrics.items()})
+        step += 1
+        if ckpt is not None and step % cfg.ckpt_every == 0:
+            ckpt.save_async(step, {"params": params, "opt": opt_state})
+    if ckpt is not None:
+        ckpt.save_async(cfg.steps, {"params": params, "opt": opt_state})
+        ckpt.close()
+    return params, opt_state, history

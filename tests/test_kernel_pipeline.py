@@ -1,0 +1,64 @@
+"""§III-C3 end-to-end prefill pipeline at the kernel level:
+(i) Assembly  — paged block gather from a physical KV pool,
+(ii) Alignment — fused RoPE rotation to request positions,
+(iii) Correction — selective attention over (window ∪ heavy hitters).
+
+Composes the two Pallas kernels (interpret mode) and checks the result
+against the pure-jnp oracles composed the same way."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_gather.ops import assemble_kv
+from repro.kernels.block_gather.ref import block_gather_ref
+from repro.kernels.selective_attention.ops import selective_mha
+from repro.kernels.selective_attention.ref import selective_attention_ref
+
+
+def test_assembly_alignment_correction_pipeline(rng):
+    page, d, n_pool = 16, 32, 24
+    n_logical = 8                       # prompt = 128 tokens of cached blocks
+    S = n_logical * page
+
+    # physical pool: pre-RoPE keys of cached item/history blocks
+    pool_k = jnp.asarray(rng.normal(size=(n_pool, page, d)), jnp.float32)
+    pool_v = jnp.asarray(rng.normal(size=(n_pool, page, d)), jnp.float32)
+    block_table = jnp.asarray(rng.choice(n_pool, n_logical, replace=False),
+                              jnp.int32)
+    positions = jnp.asarray(np.arange(S).reshape(n_logical, page), jnp.int32)
+
+    # (i)+(ii): zero-copy assembly with fused RoPE realignment
+    k_asm, v_asm = assemble_kv(pool_k, pool_v, block_table, positions,
+                               rope_theta=1e4, interpret=True)
+    k_ref, v_ref = block_gather_ref(pool_k, pool_v, block_table, positions,
+                                    rope_theta=1e4)
+    np.testing.assert_allclose(np.asarray(k_asm), np.asarray(k_ref),
+                               atol=2e-4)
+
+    # (iii): selective attention for the recomputed queries over the
+    # assembled keys, restricted to window ∪ heavy hitters
+    R_, window = 24, 16
+    q = jnp.asarray(rng.normal(size=(1, R_, 1, d)), jnp.float32)
+    qpos = jnp.asarray(np.sort(rng.choice(S, R_, replace=False)), jnp.int32)
+    hh = np.zeros(S, np.int8)
+    hh[rng.choice(S, 10, replace=False)] = 1
+
+    k_flat = k_asm.reshape(1, S, 1, d)
+    v_flat = v_asm.reshape(1, S, 1, d)
+    out = selective_mha(q, qpos, k_flat, v_flat, jnp.asarray(hh),
+                        window=window, q_block=8, kv_block=16,
+                        interpret=True)
+    ref = selective_attention_ref(
+        q[:, :, 0], qpos, k_ref.reshape(1, S, d), v_ref.reshape(1, S, d),
+        jnp.asarray(hh), window=window)
+    np.testing.assert_allclose(np.asarray(out[:, :, 0]), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_pipeline_flop_budget_matches_paper_claim(rng):
+    """The correction step touches r·S·(W+HH) scores instead of S² — the
+    quadratic-bypass the paper claims (§IV-B)."""
+    from repro.kernels.selective_attention.ops import flop_reduction
+    S = 2500
+    red = flop_reduction(r=int(0.37 * S), s=S, n_hh=int(0.05 * S),
+                         window=256)
+    assert red < 0.15                   # >85% of attention flops bypassed

@@ -1,0 +1,109 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles,
+interpret=True (CPU executes the kernel bodies)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.block_gather.ops import assemble_kv
+from repro.kernels.block_gather.ref import block_gather_ref
+from repro.kernels.embedding_bag.ops import bag_sum
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.flash_attention.ops import mha_flash
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.selective_attention.ops import selective_mha
+from repro.kernels.selective_attention.ref import selective_attention_ref
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 1e-5
+
+
+@pytest.mark.parametrize("shape,causal", [
+    ((1, 64, 64, 2, 2, 32), True),
+    ((2, 100, 100, 4, 2, 16), True),
+    ((2, 33, 77, 4, 4, 64), False),
+    ((1, 128, 256, 8, 2, 128), False),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(shape, causal, dtype, rng):
+    B, Sq, Skv, Hq, Hkv, D = shape
+    q = jnp.asarray(rng.normal(size=(B, Sq, Hq, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Skv, Hkv, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Skv, Hkv, D)), dtype)
+    out = mha_flash(q, k, v, causal=causal, q_block=32, kv_block=32,
+                    interpret=True)
+    G = Hq // Hkv
+    kk = jnp.repeat(k, G, 2).transpose(0, 2, 1, 3).reshape(B * Hq, Skv, D)
+    vv = jnp.repeat(v, G, 2).transpose(0, 2, 1, 3).reshape(B * Hq, Skv, D)
+    qq = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    ref = flash_attention_ref(qq, kk, vv, causal=causal)
+    ref = ref.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("R_,S,window,n_hh", [
+    (32, 160, 24, 12), (16, 64, 8, 0), (48, 300, 64, 30)])
+def test_selective_attention_sweep(R_, S, window, n_hh, rng):
+    B, Hq, Hkv, D = 1, 2, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, R_, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    qpos = jnp.asarray(np.sort(rng.choice(S, R_, replace=False)), jnp.int32)
+    hh = np.zeros(S, np.int8)
+    if n_hh:
+        hh[rng.choice(S, n_hh, replace=False)] = 1
+    out = selective_mha(q, qpos, k, v, jnp.asarray(hh), window=window,
+                        q_block=16, kv_block=32, interpret=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, R_, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    ref = selective_attention_ref(qf, qpos, kf, vf, jnp.asarray(hh),
+                                  window=window)
+    ref = ref.reshape(B, Hq, R_, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("npages,page,d,n_logical,rotate", [
+    (16, 8, 32, 6, True), (8, 16, 64, 8, False), (32, 8, 128, 4, True)])
+def test_block_gather_sweep(npages, page, d, n_logical, rotate, rng):
+    pk = jnp.asarray(rng.normal(size=(npages, page, d)), jnp.float32)
+    pv = jnp.asarray(rng.normal(size=(npages, page, d)), jnp.float32)
+    bt = jnp.asarray(rng.choice(npages, n_logical, replace=False), jnp.int32)
+    pos = jnp.asarray(
+        rng.integers(0, 4096, (n_logical, page)), jnp.int32)
+    ko, vo = assemble_kv(pk, pv, bt, pos, rope_theta=1e4, rotate=rotate,
+                         interpret=True)
+    kr, vr = block_gather_ref(pk, pv, bt, pos, rope_theta=1e4, rotate=rotate)
+    np.testing.assert_allclose(np.asarray(ko), np.asarray(kr),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(vo), np.asarray(vr), atol=1e-6)
+
+
+@pytest.mark.parametrize("rows,d,B,F", [(256, 16, 8, 5), (1000, 32, 4, 13),
+                                        (64, 128, 16, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_sweep(rows, d, B, F, dtype, rng):
+    table = jnp.asarray(rng.normal(size=(rows, d)), dtype)
+    ids = jnp.asarray(rng.integers(0, rows, (B, F)), jnp.int32)
+    out = bag_sum(table, ids, interpret=True)
+    ref = embedding_bag_ref(table, ids)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_block_gather_matches_transformer_rope(rng):
+    """Kernel RoPE == model RoPE (the realignment the engine relies on)."""
+    from repro.models.layers import apply_rope
+    page, d = 8, 32
+    pk = jnp.asarray(rng.normal(size=(4, page, d)), jnp.float32)
+    pos = jnp.arange(4 * page).reshape(4, page)
+    ko, _ = assemble_kv(pk, pk, jnp.arange(4, dtype=jnp.int32), pos,
+                        rope_theta=1e4, interpret=True)
+    ref = apply_rope(pk.reshape(1, 4 * page, 1, d),
+                     jnp.arange(4 * page), 1e4).reshape(4, page, d)
+    np.testing.assert_allclose(np.asarray(ko), np.asarray(ref), atol=2e-4)

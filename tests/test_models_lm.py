@@ -1,0 +1,114 @@
+"""Per-arch LM smoke tests (reduced configs, same code paths as the full
+configs) + attention/decode consistency checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.models import layers as L
+from repro.models import transformer as T
+
+LM_ARCHS = [a for a in R.ASSIGNED if R.family_of(a) == "lm"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_forward_and_train(arch):
+    cfg = R.get_config(arch, smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0,
+                              cfg.vocab_size)
+    logits, aux = T.forward(params, toks, cfg)
+    assert logits.shape == (2, 48, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    (loss, nll), grads = jax.value_and_grad(T.loss_fn, has_aux=True)(
+        params, toks, toks, cfg)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(float(jnp.abs(g).sum()) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = R.get_config(arch, smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    lg, cache = T.prefill(params, toks, cfg)
+    assert lg.shape == (2, cfg.vocab_size)
+    dh = cfg.resolved_head_dim
+    assert cache["k"].shape == (cfg.n_layers, 2, 32, cfg.n_kv_heads, dh)
+    pad = 8
+    ck = jnp.pad(cache["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cv = jnp.pad(cache["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    lg2, c2 = T.decode_step(params, jnp.argmax(lg, -1)[:, None],
+                            {"k": ck, "v": cv}, jnp.array([32, 32]), cfg)
+    assert lg2.shape == (2, cfg.vocab_size)
+    assert not bool(jnp.isnan(lg2).any())
+
+
+def test_decode_matches_forward():
+    cfg = R.get_config("nemotron-4-15b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 33), 0,
+                              cfg.vocab_size)
+    logits_full, _ = T.forward(params, toks, cfg)
+    _, cache = T.prefill(params, toks[:, :32], cfg)
+    ck = jnp.pad(cache["k"], ((0, 0), (0, 0), (0, 8), (0, 0), (0, 0)))
+    cv = jnp.pad(cache["v"], ((0, 0), (0, 0), (0, 8), (0, 0), (0, 0)))
+    lg, _ = T.decode_step(params, toks[:, 32:33], {"k": ck, "v": cv},
+                          jnp.array([32, 32]), cfg)
+    err = float(jnp.abs(lg - logits_full[:, 32]).max())
+    scale = float(jnp.abs(logits_full[:, 32]).max())
+    assert err / scale < 2e-2
+
+
+def test_block_pairing_exact():
+    cfg = R.get_config("gemma-7b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 96), 0,
+                              cfg.vocab_size)
+    base, _ = T.forward(params, toks, cfg)
+    cfg_bp = dataclasses.replace(cfg, causal_block_pairing=True)
+    bp, _ = T.forward(params, toks, cfg_bp)
+    assert float(jnp.abs(base - bp).max()) < 1e-5
+
+
+def test_flash_vjp_matches_naive():
+    rng = np.random.default_rng(0)
+    B, Sq, Hq, Hkv, D = 2, 37, 8, 4, 16
+    q = jnp.asarray(rng.normal(size=(B, Sq, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sq, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sq, Hkv, D)), jnp.float32)
+    pos = jnp.arange(Sq)
+
+    def naive(q, k, v):
+        G = Hq // Hkv
+        kk = jnp.repeat(k, G, axis=2)
+        vv = jnp.repeat(v, G, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / D ** 0.5
+        m = jnp.tril(jnp.ones((Sq, Sq), bool))
+        s = jnp.where(m[None, None], s, -1e30)
+        return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vv)
+
+    f1 = lambda *a: (L.chunked_attention(
+        *a, causal=True, q_positions=pos, kv_positions=pos,
+        q_chunk=16, kv_chunk=8) ** 2).sum()
+    f2 = lambda *a: (naive(*a) ** 2).sum()
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        assert float(jnp.abs(a - b).max()) < 1e-4
+
+
+def test_rope_group_property():
+    """R(p+d) == R(d)∘R(p): the realignment identity assembly relies on."""
+    rng = np.random.default_rng(1)
+    k = jnp.asarray(rng.normal(size=(1, 5, 2, 16)), jnp.float32)
+    p1 = jnp.asarray([3.0, 7.0, 11.0, 2.0, 0.0])
+    delta = 9.0
+    a = L.apply_rope(L.apply_rope(k, p1, 1e4), jnp.full((5,), delta), 1e4)
+    b = L.apply_rope(k, p1 + delta, 1e4)
+    assert float(jnp.abs(a - b).max()) < 1e-4

@@ -1,0 +1,99 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics as MET
+from repro.core.semantic_cache import LSH, position_features
+from repro.models import layers as L
+
+
+@given(st.integers(2, 40), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_metrics_bounds(n, seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.normal(size=n)
+    ranks = MET.ranks_from_scores(scores)
+    # ranks are a permutation
+    assert sorted(ranks) == list(range(n))
+    gold = rng.integers(0, n, size=5)
+    rg = ranks[gold]
+    m = MET.table_iii_metrics(rg)
+    for k, v in m.items():
+        assert 0.0 <= v <= 1.0
+    # HR monotone in K
+    assert m["HR@1"] <= m["HR@3"] <= m["HR@5"] <= m["HR@10"]
+
+
+@given(st.integers(1, 200), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_ranking_agreement_perfect_for_identical(n, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.normal(size=max(n, 2))
+    assert MET.ranking_agreement_ndcg(s, s.copy(), k=10) > 0.999
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_lsh_identical_inputs_same_bucket(seed):
+    rng = np.random.default_rng(seed)
+    lsh = LSH.make(16, 8, seed=seed % 97)
+    x = rng.normal(size=(5, 16)).astype(np.float32)
+    c1 = lsh.codes(x)
+    c2 = lsh.codes(x.copy())
+    np.testing.assert_array_equal(c1, c2)
+    # scaling a vector by a positive constant keeps its bucket
+    c3 = lsh.codes(3.0 * x)
+    np.testing.assert_array_equal(c1, c3)
+
+
+@given(st.integers(0, 500), st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_position_features_locality(p, small_delta):
+    """Nearby positions produce closer features than distant ones."""
+    f = position_features(np.asarray([p, p + small_delta, p + 4096]))
+    d_near = np.linalg.norm(f[0] - f[1])
+    d_far = np.linalg.norm(f[0] - f[2])
+    assert d_near <= d_far + 1e-6
+
+
+@given(st.integers(1, 31), st.floats(0.0, 1000.0), st.floats(0.0, 1000.0))
+@settings(max_examples=20, deadline=None)
+def test_rope_realign_group_property(dim_half, p, d):
+    """R(p+d) == R(d)R(p) for arbitrary positions — exactness of assembly."""
+    dh = dim_half * 2
+    rng = np.random.default_rng(dim_half)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, dh)), jnp.float32)
+    a = L.apply_rope(L.apply_rope(k, jnp.asarray([p]), 1e4),
+                     jnp.asarray([d]), 1e4)
+    b = L.apply_rope(k, jnp.asarray([p + d]), 1e4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_segment_sum_matches_numpy(n, b, seed):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, b, n)
+    vals = rng.normal(size=(n, 3)).astype(np.float32)
+    out = jax.ops.segment_sum(jnp.asarray(vals), jnp.asarray(ids),
+                              num_segments=b)
+    ref = np.zeros((b, 3), np.float32)
+    np.add.at(ref, ids, vals)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+
+
+@given(st.integers(2, 64), st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_flash_attention_softmax_rows_normalized(n, seed):
+    """Flash output is a convex combination of V rows (max-norm bound)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, n, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, n, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, n, 2, 8)), jnp.float32)
+    out = L.chunked_attention(q, k, v, causal=True,
+                              q_positions=jnp.arange(n),
+                              kv_positions=jnp.arange(n),
+                              q_chunk=16, kv_chunk=16)
+    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-4

@@ -1,0 +1,155 @@
+"""RcLLM core: semantic cache, assembly, selective engine, baselines,
+simulator — the paper's mechanisms end-to-end on a tiny model."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LMConfig
+from repro.core import assembly as ASM
+from repro.core import cost_model as CM
+from repro.core import engine as ENG
+from repro.core import metrics as MET
+from repro.core import semantic_cache as SC
+from repro.core import simulator as SIM
+from repro.core.engine import SelectiveConfig
+from repro.core.rcllm import make_tiny_system
+from repro.data import synth as SY
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    system, pool, prof, hist = make_tiny_system(
+        n_items=60, n_requests_hist=40, k_instances=3, n_layers=3,
+        d_model=48)
+    return system, pool, prof, hist
+
+
+def test_semantic_match_rate(tiny):
+    """Insight 1: most tokens of NEW reviews from the same phrase pool match
+    a prototype (paper: >93%; synthetic pool is smaller, expect high)."""
+    system, pool, prof, _ = tiny
+    rng = np.random.default_rng(123)
+    rev = SY.make_review(pool, prof.mean_review_tokens, rng)
+    pos = np.arange(len(rev))
+    emb = SC.embed_tokens_for_match(rev, pos, system.token_embed)
+    pid, sim = system.semantic.match(rev, pos, emb)
+    match = (pid >= 0).mean()
+    assert match > 0.6
+    assert sim[pid >= 0].mean() > 0.8
+
+
+def test_plan_structure(tiny):
+    system, pool, prof, _ = tiny
+    reqs = SY.make_trace(system.catalog, pool, prof, 3, qps=5.0, n_users=5,
+                         n_candidates=6, reviews_per_user=2, seed=77)
+    plan = system.plan_for(reqs[0])
+    # instruction tokens are never reused
+    assert (plan.source[plan.seg_kind == 0] == ASM.RECOMPUTE).all()
+    # item tokens resolve to item blocks with correct offsets
+    it = plan.source == ASM.FROM_ITEM
+    assert it.sum() > 0
+    assert (plan.block_item[it] >= 0).all()
+    # rope delta = position − block offset for item tokens
+    idx = np.where(it)[0]
+    np.testing.assert_array_equal(plan.rope_delta[idx],
+                                  idx - plan.block_offset[idx])
+    # full coverage: no misses at coverage=1
+    assert plan.n_miss == 0
+
+
+def test_selective_equals_full_at_r1(tiny):
+    """r=1 + window ≥ n ⇒ every token recomputed ⇒ logits == full forward."""
+    system, pool, prof, _ = tiny
+    reqs = SY.make_trace(system.catalog, pool, prof, 1, qps=5.0, n_users=5,
+                         n_candidates=5, reviews_per_user=2, seed=88)
+    r = reqs[0]
+    tokens, _, _ = r.prompt_segments(system.catalog, system.instruction)
+    full = ENG.full_prefill_logits(system.params, system.cfg, tokens)
+    sel = SelectiveConfig(r_item=1.0, r_rev=1.0, window=len(tokens))
+    sc, stats = system.rank(r, "rcllm", sel)
+    full_slots = full[SY.SLOT_BASE:SY.SLOT_BASE + len(r.candidate_items)]
+    assert stats.recompute_fraction() == 1.0
+    np.testing.assert_allclose(sc, full_slots, atol=2e-3, rtol=1e-3)
+
+
+def test_selective_budget_controls_recompute(tiny):
+    system, pool, prof, _ = tiny
+    reqs = SY.make_trace(system.catalog, pool, prof, 1, qps=5.0, n_users=5,
+                         n_candidates=6, reviews_per_user=2, seed=89)
+    fr = []
+    for r_b in (0.1, 0.5, 0.9):
+        _, stats = system.rank(reqs[0], "rcllm",
+                               SelectiveConfig(r_item=r_b, r_rev=r_b,
+                                               window=8))
+        fr.append(stats.recompute_fraction())
+    assert fr[0] < fr[1] < fr[2]
+
+
+def test_baselines_run(tiny):
+    system, pool, prof, _ = tiny
+    reqs = SY.make_trace(system.catalog, pool, prof, 1, qps=5.0, n_users=5,
+                         n_candidates=5, reviews_per_user=2, seed=90)
+    for m in ("cacheblend", "epic"):
+        sc, stats = system.rank(reqs[0], m)
+        assert np.isfinite(sc).all()
+        assert 0 < stats.n_recomputed < stats.n_tokens
+
+
+def test_fidelity_close_to_full(tiny):
+    system, pool, prof, _ = tiny
+    reqs = SY.make_trace(system.catalog, pool, prof, 3, qps=5.0, n_users=5,
+                         n_candidates=6, reviews_per_user=2, seed=91)
+    fids = []
+    for r in reqs:
+        full, _ = system.rank(r, "full")
+        sc, _ = system.rank(r, "rcllm",
+                            SelectiveConfig(r_item=0.3, r_rev=0.3, window=16))
+        fids.append(MET.ranking_agreement_ndcg(full, sc, k=5))
+    assert np.mean(fids) > 0.85
+
+
+def test_cost_model_orderings():
+    cfg = LMConfig(name="m", n_layers=8, d_model=256, n_heads=8,
+                   n_kv_heads=4, head_dim=32, d_ff=1024, vocab_size=1000)
+    hw = CM.V5E_1
+    full = CM.full_prefill_ttft_s(cfg, hw, 3000)
+    prefix = CM.prefix_cache_ttft_s(cfg, hw, 3000, 207)
+    rc = CM.ttft_s(cfg, hw, 3000, n_recompute=900, n_local_tokens=2000,
+                   n_remote_tokens=100)
+    assert rc < prefix < full
+    # remote fetches cost more than local
+    rc_remote = CM.ttft_s(cfg, hw, 3000, 900, 100, 2000)
+    assert rc_remote >= rc
+
+
+def test_simulator_orderings_and_faults(tiny):
+    # paper-scale prompts + cost model (Qwen3-8B-like): the tiny accuracy
+    # prototype is compute-degenerate (network RTT would dominate)
+    from repro.configs import registry as REG
+    cfg = REG.ARCHS["rcllm-qwen3-8b"]
+    reqs, placement, _ = SIM.make_sim_setup(k=4, n_requests=300, qps=12.0,
+                                            n_items=2000, seed=5)
+    res = {}
+    for mode in ("rcllm", "prefix", "full"):
+        sim = SIM.SimConfig(mode=mode, policy="affinity")
+        res[mode] = SIM.simulate(cfg, CM.V5E_1, reqs, placement, sim)
+    assert res["rcllm"].pct(50) < res["prefix"].pct(50) < res["full"].pct(50)
+    # node failure: still completes, latency does not improve
+    faults = [SIM.NodeFault(instance=0, t_fail_s=0.0, t_repair_s=0.3)]
+    resf = SIM.simulate(cfg, CM.V5E_1, reqs, placement,
+                        SIM.SimConfig(mode="rcllm"), faults=faults)
+    assert resf.n_requests == len(reqs)
+    assert resf.pct(50) >= res["rcllm"].pct(50) * 0.99
+    # straggler + hedging: hedge should not hurt P99 much
+    slow = np.ones(placement.k)
+    slow[1] = 8.0
+    r_noh = SIM.simulate(cfg, CM.V5E_1, reqs, placement,
+                         SIM.SimConfig(mode="rcllm"),
+                         straggler_factors=slow)
+    r_h = SIM.simulate(cfg, CM.V5E_1, reqs, placement,
+                       SIM.SimConfig(mode="rcllm", hedge_ms=5.0),
+                       straggler_factors=slow)
+    assert r_h.pct(99) <= r_noh.pct(99) * 1.05

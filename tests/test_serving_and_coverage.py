@@ -1,0 +1,93 @@
+"""Continuous batching, cost-model properties, partial cache coverage,
+and dry-run artifact integrity."""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry as REG
+from repro.core import cost_model as CM
+from repro.serving.batching import Completion, ContinuousBatcher, PendingRequest
+
+
+def test_continuous_batcher_completes_all():
+    rng = np.random.default_rng(0)
+    reqs = [PendingRequest(arrival_s=float(rng.exponential(0.05) * i),
+                           rid=i, n_tokens=int(rng.integers(100, 2000)),
+                           decode_steps=4)
+            for i in range(50)]
+    b = ContinuousBatcher(prefill_time_fn=lambda tok: tok * 1e-5,
+                          decode_time_fn=lambda n: 2e-3,
+                          max_batch_tokens=4096)
+    done = b.run(reqs)
+    assert len(done) == 50
+    assert all(c.first_token_s >= c.arrival_s for c in done)
+    assert all(c.done_s >= c.first_token_s for c in done)
+
+
+def test_continuous_batcher_batching_beats_serial():
+    reqs = [PendingRequest(arrival_s=0.0, rid=i, n_tokens=500,
+                           decode_steps=1) for i in range(8)]
+    batched = ContinuousBatcher(lambda tok: 1e-4 + tok * 1e-6,
+                                lambda n: 1e-4, max_batch_tokens=4000)
+    serial = ContinuousBatcher(lambda tok: 1e-4 + tok * 1e-6,
+                               lambda n: 1e-4, max_batch_tokens=500)
+    tb = max(c.first_token_s for c in batched.run(reqs))
+    ts = max(c.first_token_s for c in serial.run(reqs))
+    assert tb < ts
+
+
+@given(st.integers(500, 4000), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_cost_model_monotone_in_recompute(n_total, seed):
+    cfg = REG.ARCHS["rcllm-qwen3-8b"]
+    rng = np.random.default_rng(seed)
+    r1, r2 = sorted(rng.integers(1, n_total, 2))
+    t1 = CM.prefill_time_s(cfg, CM.V5E_1, n_total, int(r1))
+    t2 = CM.prefill_time_s(cfg, CM.V5E_1, n_total, int(r2))
+    assert t1 <= t2 + 1e-12
+
+
+@given(st.integers(100, 2000))
+@settings(max_examples=10, deadline=None)
+def test_cost_model_selective_never_slower_than_full(n):
+    cfg = REG.ARCHS["rcllm-qwen3-8b"]
+    full = CM.full_prefill_ttft_s(cfg, CM.V5E_1, n)
+    sel = CM.ttft_s(cfg, CM.V5E_1, n, n_recompute=n // 3,
+                    n_local_tokens=n // 2, n_remote_tokens=0)
+    assert sel <= full * 1.05
+
+
+def test_partial_cache_coverage_produces_misses():
+    from repro.core.rcllm import make_tiny_system
+    system, pool, prof, _ = make_tiny_system(
+        n_items=40, n_requests_hist=25, k_instances=2, n_layers=2,
+        d_model=32, item_coverage=0.4)
+    from repro.data import synth as SY
+    req = SY.make_trace(system.catalog, pool, prof, 1, qps=1.0, n_users=3,
+                        n_candidates=8, reviews_per_user=1, seed=3)[0]
+    plan = system.plan_for(req)
+    assert plan.n_miss > 0                   # cold items get recomputed
+    scores, stats = system.rank(req, "rcllm")
+    assert np.isfinite(scores).all()
+    assert stats.n_recomputed > plan.n_miss  # misses forced into recompute
+
+
+@pytest.mark.skipif(not glob.glob("results/dryrun/*.json"),
+                    reason="dry-run results not present")
+def test_dryrun_artifacts_complete():
+    """All 40 cells × 2 meshes recorded ok with roofline terms."""
+    recs = [json.load(open(f)) for f in glob.glob("results/dryrun/*.json")]
+    ok = [r for r in recs if r.get("ok")]
+    assert len(ok) >= 80
+    cells = {(r["arch"], r["shape"], r["mesh"]) for r in ok}
+    from repro.configs.registry import cells as all_cells
+    for arch, shape in all_cells():
+        assert (arch, shape, "pod_16x16") in cells
+        assert (arch, shape, "multipod_2x16x16") in cells
+    for r in ok:
+        assert "roofline" in r and "bottleneck" in r["roofline"]
+        assert r["flops_per_device"] > 0
