@@ -3,12 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sweeps (CI);
 default sizes reproduce the paper's structure in full.
 
-  fig6        TTFT CDF, K=40, RcLLM vs Prefix vs Full (8B + 72B)
+  fig6        TTFT distributions, K=40, RcLLM vs Prefix vs Full (8B + 72B)
   fig8_9      speedup / hit-rate / footprint vs cluster size K
   fig10       scheduling policies under rising load
   fig11       recompute budget r vs TTFT
   tableIII    ranking accuracy: Full vs RcLLM vs CacheBlend vs EPIC
   kernels     Pallas kernel probes + analytic FLOP reductions
+  serving     continuous batching: sim-engine vs real jax-engine TTFT
+
+Each entry also writes a JSON artifact into ``--out`` (see
+docs/benchmarks.md for the full flag and output reference).
 """
 from __future__ import annotations
 
@@ -23,7 +27,7 @@ print = functools.partial(print, flush=True)   # keep CSV ordered through pipes
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="fig6|fig8_9|fig10|fig11|tableIII|kernels|all")
+                    help="fig6|fig8_9|fig10|fig11|tableIII|kernels|serving|all")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--planted", action="store_true",
                     help="tableIII: train the planted-preference ranker")
@@ -50,6 +54,9 @@ def main(argv=None) -> int:
                 args.out, quick=args.quick, planted=args.planted),
         "kernels": lambda: __import__(
             "benchmarks.bench_kernels", fromlist=["run"]).run(
+                args.out, quick=args.quick),
+        "serving": lambda: __import__(
+            "benchmarks.bench_serving", fromlist=["run"]).run(
                 args.out, quick=args.quick),
     }
     for name, job in jobs.items():

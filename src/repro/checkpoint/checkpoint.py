@@ -30,6 +30,61 @@ except Exception:                                    # pragma: no cover
     _HAVE_MSGPACK = False
 
 
+def _encode_flat(leaves: Dict[str, bytes]) -> bytes:
+    """Minimal length-prefixed container for {key: bytes} — deliberately
+    not pickle, so restoring a checkpoint can never execute code."""
+    import struct
+    out = [struct.pack("<I", len(leaves))]
+    for k, v in leaves.items():
+        kb = k.encode()
+        out.append(struct.pack("<I", len(kb)))
+        out.append(kb)
+        out.append(struct.pack("<Q", len(v)))
+        out.append(v)
+    return b"".join(out)
+
+
+def _decode_flat(data: bytes) -> Dict[str, bytes]:
+    import struct
+    n, off = struct.unpack_from("<I", data)[0], 4
+    leaves = {}
+    for _ in range(n):
+        kl = struct.unpack_from("<I", data, off)[0]
+        off += 4
+        k = data[off:off + kl].decode()
+        off += kl
+        vl = struct.unpack_from("<Q", data, off)[0]
+        off += 8
+        leaves[k] = data[off:off + vl]
+        off += vl
+    return leaves
+
+
+def _pack(obj: Dict) -> bytes:
+    """msgpack+zstd when available, stdlib zlib + a length-prefixed flat
+    container otherwise.  A one-byte magic header keeps the two formats
+    mutually readable (given the right libs installed)."""
+    if _HAVE_MSGPACK:
+        return b"Z" + zstd.ZstdCompressor(level=3).compress(
+            msgpack.packb(obj))
+    import zlib
+    return b"F" + zlib.compress(_encode_flat(obj["leaves"]), 3)
+
+
+def _unpack(data: bytes) -> Dict:
+    if data[:1] == b"F":
+        import zlib
+        return {"leaves": _decode_flat(zlib.decompress(data[1:]))}
+    if not _HAVE_MSGPACK:
+        raise RuntimeError(
+            "checkpoint was written with msgpack+zstd; install msgpack "
+            "and zstandard to restore it")
+    if data[:1] == b"Z":
+        data = data[1:]
+    # headerless data = pre-magic checkpoints (always msgpack+zstd)
+    return msgpack.unpackb(zstd.ZstdDecompressor().decompress(data))
+
+
 def _path_str(path) -> str:
     out = []
     for p in path:
@@ -47,8 +102,7 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None
         arr = np.asarray(leaf)
         leaves[key] = arr.tobytes()
         meta[key] = {"dtype": str(arr.dtype), "shape": list(arr.shape)}
-    payload = msgpack.packb({"leaves": leaves})
-    comp = zstd.ZstdCompressor(level=3).compress(payload)
+    comp = _pack({"leaves": leaves})
     path = os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
@@ -75,8 +129,7 @@ def restore(ckpt_dir: str, step: int, like: Any,
     device_put with the new layout (elastic re-sharding)."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
     with open(path, "rb") as f:
-        payload = zstd.ZstdDecompressor().decompress(f.read())
-    blob = msgpack.unpackb(payload)
+        blob = _unpack(f.read())
     with open(path + ".json") as f:
         meta = json.load(f)["meta"]
 

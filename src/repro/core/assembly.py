@@ -115,6 +115,52 @@ def build_plan(tokens: np.ndarray, seg_kind: np.ndarray, seg_id: np.ndarray,
                         n_local=n_local, n_remote=n_remote, n_miss=n_miss)
 
 
+@dataclass(frozen=True)
+class PlanSpan:
+    """A maximal contiguous run of one physical KV block inside a plan."""
+    start: int                         # logical token range [start, end)
+    end: int
+    source: int                        # RECOMPUTE / FROM_ITEM / FROM_SEMANTIC
+    block_id: int                      # item id / prototype id / -1
+
+    @property
+    def n(self) -> int:
+        return self.end - self.start
+
+
+def plan_spans(plan: AssemblyPlan) -> List[PlanSpan]:
+    """Decompose a plan into contiguous block spans.
+
+    The paged serving pool consumes these for block-granular insertion:
+    each FROM_ITEM / FROM_SEMANTIC span is one slice-copy out of a cached
+    block, and RECOMPUTE spans are filled later by the selective engine.
+    Spans partition [0, plan.n) exactly.
+    """
+    spans: List[PlanSpan] = []
+    n = plan.n
+    i = 0
+    while i < n:
+        src = int(plan.source[i])
+        if src == FROM_ITEM:
+            bid = int(plan.block_item[i])
+        elif src == FROM_SEMANTIC:
+            bid = int(plan.proto_id[i])
+        else:
+            bid = -1
+        j = i + 1
+        while j < n and int(plan.source[j]) == src:
+            if src == FROM_ITEM and (int(plan.block_item[j]) != bid or
+                                     int(plan.block_offset[j]) !=
+                                     int(plan.block_offset[j - 1]) + 1):
+                break
+            if src == FROM_SEMANTIC and int(plan.proto_id[j]) != bid:
+                break
+            j += 1
+        spans.append(PlanSpan(start=i, end=j, source=src, block_id=bid))
+        i = j
+    return spans
+
+
 def gather_cached_kv(plan: AssemblyPlan, item_store: Optional[ItemKVStore],
                      semantic: Optional[SemanticCache], instance: int,
                      n_layers: int, n_kv: int, head_dim: int

@@ -98,3 +98,18 @@ def prefix_cache_ttft_s(cfg: LMConfig, hw: Hardware, n_total: int,
     """Industrial prefix caching: only the shared leading segment is free."""
     return prefill_time_s(cfg, hw, n_total, n_total - n_prefix_hit,
                           layer0_full=False)
+
+
+def decode_step_time_s(cfg: LMConfig, hw: Hardware, batch_size: int,
+                       mean_context: int = 1024) -> float:
+    """One continuous-batching decode iteration (one token per request).
+
+    Memory-bound roofline: the active weights stream once per iteration
+    (amortized over the batch) plus each running request's KV; compared
+    against the batch's matmul FLOPs, whichever dominates."""
+    wb = cfg.active_param_count() * 2                       # bf16 weights
+    kv = batch_size * mean_context * kv_bytes_per_token(cfg)
+    t_mem = (wb + kv) / (hw.hbm_bw * hw.chips_per_instance)
+    flops = batch_size * 2 * cfg.active_param_count()
+    t_fl = flops / (hw.peak_flops * hw.chips_per_instance * hw.mfu)
+    return float(max(t_mem, t_fl))

@@ -39,11 +39,18 @@ class SelectiveConfig:
     layer0_full: bool = True          # identify HH with full first layer
 
 
-def _layer_params(params, l: int):
+# ---------------------------------------------------------------------------
+# Shared per-request building blocks.  `serving/batch_engine.py` reuses these
+# (and the jitted entry points below) rather than duplicating the math, so
+# the single-request and batched paths cannot drift apart.
+# ---------------------------------------------------------------------------
+
+def layer_params(params, l: int):
     return jax.tree_util.tree_map(lambda a: a[l], params["layers"])
 
 
-def _qkv(h, lp, cfg: LMConfig, positions):
+def qkv_proj(h, lp, cfg: LMConfig, positions):
+    """h: (S, D) -> rotated (q, k), pre-RoPE k_raw, and v: (S, H, Dh)."""
     q = jnp.einsum("sd,dhe->she", h, lp["wq"])
     k_raw = jnp.einsum("sd,dhe->she", h, lp["wk"])
     v = jnp.einsum("sd,dhe->she", h, lp["wv"])
@@ -52,8 +59,8 @@ def _qkv(h, lp, cfg: LMConfig, positions):
     return q, k, k_raw, v
 
 
-def _full_attn(q, k, v, cfg: LMConfig, q_pos, k_pos, return_probs=False,
-               k_valid=None):
+def full_attn(q, k, v, cfg: LMConfig, q_pos, k_pos, return_probs=False,
+              k_valid=None):
     Hq, Hkv = q.shape[1], k.shape[1]
     G = Hq // Hkv
     scale = 1.0 / (q.shape[-1] ** 0.5)
@@ -72,7 +79,8 @@ def _full_attn(q, k, v, cfg: LMConfig, q_pos, k_pos, return_probs=False,
     return o
 
 
-def _mlp(h, lp, cfg: LMConfig):
+def mlp_block(h, lp, cfg: LMConfig):
+    """Dense/MoE MLP over a flat (T, D) or (S, D) token matrix."""
     from repro.models.layers import mlp_apply, moe_apply
     if cfg.moe is not None:
         y, _ = moe_apply(h, lp["moe"], n_experts=cfg.moe.n_experts,
@@ -83,19 +91,28 @@ def _mlp(h, lp, cfg: LMConfig):
     return mlp_apply(h, lp["mlp"], cfg.mlp_type)
 
 
-@functools.partial(jax.jit, static_argnums=(2,))
-def _batched_kv_jit(params, toks, cfg: LMConfig):
-    """toks: (N, S) padded with PAD=0 → pre-RoPE (k, v): (N, S, L, Hkv, Dh).
-    Padding keys are masked out of the in-context attention."""
+# Backward-compatible aliases (baselines.py and older call sites).
+_layer_params = layer_params
+_qkv = qkv_proj
+_full_attn = full_attn
+_mlp = mlp_block
+
+
+def _batched_forward(params, toks, valid, cfg: LMConfig):
+    """Shared padded (N, S) forward pass.
+
+    -> (x, k_all, v_all): the final residual stream (N, S, D) plus the
+    pre-RoPE per-layer caches (N, S, L, Hkv, Dh).  Invalid (padding) keys
+    are masked out of the in-context attention via `valid` (N, S) bool.
+    """
     N, S = toks.shape
     pos = jnp.arange(S)
-    valid = toks != 0                                      # PAD == 0
     x = params["embed"][toks].astype(jnp.dtype(cfg.dtype))
     if cfg.tie_embeddings:
         x = x * (cfg.d_model ** 0.5)
     ks, vs = [], []
     for l in range(cfg.n_layers):
-        lp = _layer_params(params, l)
+        lp = layer_params(params, l)
         h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
         q = jnp.einsum("nsd,dhe->nshe", h, lp["wq"])
         k_raw = jnp.einsum("nsd,dhe->nshe", h, lp["wk"])
@@ -109,14 +126,38 @@ def _batched_kv_jit(params, toks, cfg: LMConfig):
                                 q_chunk=min(cfg.attn_q_chunk, S),
                                 kv_chunk=min(cfg.attn_kv_chunk, S))
         x = x + jnp.einsum("nshe,hed->nsd", o, lp["wo"])
-        x = x + _mlp_batched(L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps),
-                             lp, cfg)
+        x = x + mlp_block_batched(L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps),
+                                  lp, cfg)
     k_all = jnp.stack(ks, axis=2)                          # (N, S, L, Hkv, Dh)
     v_all = jnp.stack(vs, axis=2)
+    return x, k_all, v_all
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _batched_kv_jit(params, toks, cfg: LMConfig):
+    """toks: (N, S) padded with PAD=0 → pre-RoPE (k, v): (N, S, L, Hkv, Dh).
+    Padding keys are masked out of the in-context attention."""
+    _, k_all, v_all = _batched_forward(params, toks, toks != 0, cfg)
     return k_all, v_all
 
 
-def _mlp_batched(h, lp, cfg: LMConfig):
+@functools.partial(jax.jit, static_argnums=(3,))
+def _jit_batched_prefill(params, toks, last_idx, cfg: LMConfig):
+    """Padded multi-request full prefill for the batched serving engine.
+
+    toks: (N, S) padded; last_idx: (N,) index of each request's final real
+    token.  -> (logits (N, V), pre-RoPE k, v (N, S, L, Hkv, Dh)).
+    """
+    N, S = toks.shape
+    valid = jnp.arange(S)[None, :] <= last_idx[:, None]
+    x, k_all, v_all = _batched_forward(params, toks, valid, cfg)
+    x_last = x[jnp.arange(N), last_idx]                    # (N, D)
+    xf = L.rms_norm(x_last, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return xf @ head, k_all, v_all
+
+
+def mlp_block_batched(h, lp, cfg: LMConfig):
     if cfg.moe is not None:
         N, S, D = h.shape
         y, _ = L.moe_apply(h.reshape(N * S, D), lp["moe"],
@@ -125,6 +166,9 @@ def _mlp_batched(h, lp, cfg: LMConfig):
                            mlp_type=cfg.mlp_type)
         return y.reshape(N, S, D)
     return L.mlp_apply(h, lp["mlp"], cfg.mlp_type)
+
+
+_mlp_batched = mlp_block_batched
 
 
 def precompute_kv_batch(params, cfg: LMConfig, docs, bucket: int = 64):
@@ -202,6 +246,9 @@ class EngineStats:
     n_reused_semantic: int
     n_heavy_hitters: int
     layer0_full: bool
+    # (n,) bool — which tokens went through layers 1..L-1 exactly; the
+    # serving path uses it to scatter fresh KV over the paged pool.
+    recompute_mask: Optional[np.ndarray] = None
 
     def recompute_fraction(self) -> float:
         return self.n_recomputed / max(self.n_tokens, 1)
@@ -214,41 +261,50 @@ def _pad_to(x: np.ndarray, n: int, fill=0):
                                       x.dtype)])
 
 
-@functools.partial(jax.jit, static_argnums=(5,))
-def _jit_layer0(params, toks, valid, ck0, cv0, cfg: LMConfig):
-    """Layer-0 full pass (padded): -> (x_after_l0, attn_mass, divergence)."""
+def _layer0_impl(params, toks, valid, ck0, cv0, cfg: LMConfig):
     n = toks.shape[0]
     pos = jnp.arange(n)
     x = params["embed"][toks].astype(jnp.dtype(cfg.dtype))
     if cfg.tie_embeddings:
         x = x * (cfg.d_model ** 0.5)
-    lp = _layer_params(params, 0)
+    lp = layer_params(params, 0)
     h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
-    q, k, k_raw, v = _qkv(h, lp, cfg, pos)
-    o, probs = _full_attn(q, k, v, cfg, pos, pos, return_probs=True,
-                          k_valid=valid)
+    q, k, k_raw, v = qkv_proj(h, lp, cfg, pos)
+    o, probs = full_attn(q, k, v, cfg, pos, pos, return_probs=True,
+                         k_valid=valid)
     # A_i: attention mass received by key i from *valid* queries
     attn_mass = (probs * valid[None, None, :, None]).mean(axis=(0, 1)).sum(axis=0)
     dk = jnp.abs(k_raw - ck0).sum(axis=(1, 2))
     dv = jnp.abs(v - cv0).sum(axis=(1, 2))
     x = x + jnp.einsum("she,hed->sd", o, lp["wo"])
-    x = x + _mlp(L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps), lp, cfg)
-    return x, attn_mass, dk + dv
+    x = x + mlp_block(L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps), lp, cfg)
+    return x, attn_mass, dk + dv, k_raw, v
 
 
-@functools.partial(jax.jit, static_argnums=(9,))
-def _jit_selective_layers(params, x, r_idx, r_valid, ck, cv, valid,
-                          key_rot_pos, final_slot, cfg: LMConfig):
-    """Layers 1..L-1 computed only for the (padded) recompute set; final
-    logits at the recompute slot `final_slot` (the prompt's last token).
-    `key_rot_pos` rotates cached pre-RoPE keys (RcLLM: the request position
-    = exact realignment; CacheBlend baseline: the block's original position)."""
+@functools.partial(jax.jit, static_argnums=(5,))
+def _jit_layer0(params, toks, valid, ck0, cv0, cfg: LMConfig):
+    """Layer-0 full pass (padded): -> (x_after_l0, attn_mass, divergence)."""
+    x, attn_mass, div, _, _ = _layer0_impl(params, toks, valid, ck0, cv0, cfg)
+    return x, attn_mass, div
+
+
+@functools.partial(jax.jit, static_argnums=(5,))
+def _jit_layer0_kv(params, toks, valid, ck0, cv0, cfg: LMConfig):
+    """Layer-0 full pass that also returns the fresh pre-RoPE (k, v) —
+    the serving path stores them in the paged KV pool for decode."""
+    return _layer0_impl(params, toks, valid, ck0, cv0, cfg)
+
+
+def _selective_layers_impl(params, x, r_idx, r_valid, ck, cv, valid,
+                           key_rot_pos, final_slot, cfg: LMConfig,
+                           collect_kv: bool):
     n = x.shape[0]
     pos = jnp.arange(n)
     r_pos = jnp.clip(r_idx, 0, n - 1)
     xr = jnp.take(x, r_pos, axis=0)                            # (R, D)
+    ks, vs = [], []
     for l in range(1, cfg.n_layers):
-        lp = _layer_params(params, l)
+        lp = layer_params(params, l)
         hr = L.rms_norm(xr, lp["attn_norm"], cfg.norm_eps)
         qr = jnp.einsum("rd,dhe->rhe", hr, lp["wq"])
         kr_raw = jnp.einsum("rd,dhe->rhe", hr, lp["wk"])
@@ -261,20 +317,57 @@ def _jit_selective_layers(params, x, r_idx, r_valid, ck, cv, valid,
         widx = jnp.where(r_valid, r_idx, n)                    # n → dropped
         k_l = k_l.at[widx].set(kr, mode="drop")
         v_l = v_l.at[widx].set(vr.astype(v_l.dtype), mode="drop")
-        o = _full_attn(qr, k_l, v_l.astype(kr.dtype), cfg, r_pos, pos,
-                       k_valid=valid)
+        if collect_kv:
+            # merged pre-RoPE cache: cached blocks + fresh recomputed keys
+            ks.append(ck[:, l].at[widx].set(kr_raw, mode="drop"))
+            vs.append(v_l)
+        o = full_attn(qr, k_l, v_l.astype(kr.dtype), cfg, r_pos, pos,
+                      k_valid=valid)
         xr = xr + jnp.einsum("rhe,hed->rd", o, lp["wo"])
-        xr = xr + _mlp(L.rms_norm(xr, lp["mlp_norm"], cfg.norm_eps), lp, cfg)
+        xr = xr + mlp_block(L.rms_norm(xr, lp["mlp_norm"], cfg.norm_eps),
+                            lp, cfg)
 
     xf = L.rms_norm(xr[final_slot][None], params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    return (xf @ head)[0]
+    logits = (xf @ head)[0]
+    if collect_kv:
+        return logits, jnp.stack(ks, axis=1), jnp.stack(vs, axis=1)
+    return logits
+
+
+@functools.partial(jax.jit, static_argnums=(9,))
+def _jit_selective_layers(params, x, r_idx, r_valid, ck, cv, valid,
+                          key_rot_pos, final_slot, cfg: LMConfig):
+    """Layers 1..L-1 computed only for the (padded) recompute set; final
+    logits at the recompute slot `final_slot` (the prompt's last token).
+    `key_rot_pos` rotates cached pre-RoPE keys (RcLLM: the request position
+    = exact realignment; CacheBlend baseline: the block's original position)."""
+    return _selective_layers_impl(params, x, r_idx, r_valid, ck, cv, valid,
+                                  key_rot_pos, final_slot, cfg,
+                                  collect_kv=False)
+
+
+@functools.partial(jax.jit, static_argnums=(9,))
+def _jit_selective_layers_kv(params, x, r_idx, r_valid, ck, cv, valid,
+                             key_rot_pos, final_slot, cfg: LMConfig):
+    """As `_jit_selective_layers`, but also returns the merged pre-RoPE
+    (k, v) for layers 1..L-1: (n, L-1, Hkv, Dh) — cached blocks with the
+    recomputed tokens' fresh keys scattered in."""
+    return _selective_layers_impl(params, x, r_idx, r_valid, ck, cv, valid,
+                                  key_rot_pos, final_slot, cfg,
+                                  collect_kv=True)
 
 
 def run_selective_layers(params, cfg, x, recompute: np.ndarray,
                          ck, cv, n_valid: int, bucket: int = 64,
-                         key_positions: Optional[np.ndarray] = None):
-    """Pad the recompute set + sequence, dispatch the jitted layer stack."""
+                         key_positions: Optional[np.ndarray] = None,
+                         return_kv: bool = False):
+    """Pad the recompute set + sequence, dispatch the jitted layer stack.
+
+    With ``return_kv`` the merged pre-RoPE caches for layers 1..L-1 come
+    back too: -> (logits, k (n, L-1, Hkv, Dh), v) — the serving engine's
+    source for paged-pool insertion.
+    """
     n = x.shape[0]
     r_idx = np.where(recompute)[0]
     r_count = len(r_idx)
@@ -289,10 +382,14 @@ def run_selective_layers(params, cfg, x, recompute: np.ndarray,
     else:
         key_positions = _pad_to(key_positions.astype(np.int64), n)
     final_slot = r_count - 1          # last recomputed token = prompt tail
-    logits = _jit_selective_layers(
-        params, x, jnp.asarray(r_idx_p), jnp.asarray(r_valid),
-        jnp.asarray(ck), jnp.asarray(cv), jnp.asarray(valid),
-        jnp.asarray(key_positions), final_slot, cfg)
+    args = (params, x, jnp.asarray(r_idx_p), jnp.asarray(r_valid),
+            jnp.asarray(ck), jnp.asarray(cv), jnp.asarray(valid),
+            jnp.asarray(key_positions), final_slot, cfg)
+    if return_kv:
+        logits, k_m, v_m = _jit_selective_layers_kv(*args)
+        return (np.asarray(logits, np.float32),
+                np.asarray(k_m, np.float32), np.asarray(v_m, np.float32))
+    logits = _jit_selective_layers(*args)
     return np.asarray(logits, np.float32)
 
 
@@ -307,6 +404,31 @@ def selective_prefill_logits(
     (zeros where RECOMPUTE / miss).  Sequences are padded to `bucket`
     multiples so the jitted engine retraces O(1) times.
     """
+    logits, stats, _, _ = _selective_prefill(
+        params, cfg, plan, cached_k, cached_v, have_cache, sel, bucket,
+        return_kv=False)
+    return logits, stats
+
+
+def selective_prefill_with_kv(
+    params, cfg: LMConfig, plan: AssemblyPlan,
+    cached_k: np.ndarray, cached_v: np.ndarray, have_cache: np.ndarray,
+    sel: SelectiveConfig, bucket: int = 128,
+) -> Tuple[np.ndarray, EngineStats, np.ndarray, np.ndarray]:
+    """Selective prefill that also materializes the request's full merged
+    pre-RoPE KV cache (n, L, Hkv, Dh): layer 0 fresh, layers 1..L-1 cached
+    blocks with recomputed tokens scattered in.  The batched serving engine
+    writes this into the paged pool so decode can attend to the prompt.
+    """
+    return _selective_prefill(params, cfg, plan, cached_k, cached_v,
+                              have_cache, sel, bucket, return_kv=True)
+
+
+def _selective_prefill(
+    params, cfg: LMConfig, plan: AssemblyPlan,
+    cached_k: np.ndarray, cached_v: np.ndarray, have_cache: np.ndarray,
+    sel: SelectiveConfig, bucket: int = 128, return_kv: bool = False,
+):
     n = plan.n
     n_pad = ((n + bucket - 1) // bucket) * bucket
     toks = _pad_to(plan.tokens.astype(np.int32), n_pad)
@@ -317,9 +439,14 @@ def selective_prefill_logits(
     valid[:n] = True
 
     # ---- layer 0 (jitted): full attention + Eq. 3 terms ----
-    x, attn_mass, div_raw = _jit_layer0(
-        params, jnp.asarray(toks), jnp.asarray(valid),
-        jnp.asarray(ckp[:, 0]), jnp.asarray(cvp[:, 0]), cfg)
+    layer0 = _jit_layer0_kv if return_kv else _jit_layer0
+    out0 = layer0(params, jnp.asarray(toks), jnp.asarray(valid),
+                  jnp.asarray(ckp[:, 0]), jnp.asarray(cvp[:, 0]), cfg)
+    if return_kv:
+        x, attn_mass, div_raw, k0_raw, v0 = out0
+    else:
+        x, attn_mass, div_raw = out0
+        k0_raw = v0 = None
     attn_mass = np.asarray(attn_mass)[:n]
     a_norm = attn_mass / max(attn_mass.max(), 1e-9)
     div = np.asarray(div_raw)[:n] * have.astype(np.float32)
@@ -345,7 +472,17 @@ def selective_prefill_logits(
         n_tokens=n, n_recomputed=int(recompute.sum()),
         n_reused_item=int(((src == FROM_ITEM) & ~recompute).sum()),
         n_reused_semantic=int(((src == FROM_SEMANTIC) & ~recompute).sum()),
-        n_heavy_hitters=n_hh, layer0_full=sel.layer0_full)
+        n_heavy_hitters=n_hh, layer0_full=sel.layer0_full,
+        recompute_mask=recompute.copy())
 
-    logits = run_selective_layers(params, cfg, x, recompute, ckp, cvp, n)
-    return logits, stats
+    if not return_kv:
+        logits = run_selective_layers(params, cfg, x, recompute, ckp, cvp, n)
+        return logits, stats, None, None
+
+    logits, k_rest, v_rest = run_selective_layers(
+        params, cfg, x, recompute, ckp, cvp, n, return_kv=True)
+    k_all = np.concatenate(
+        [np.asarray(k0_raw, np.float32)[:, None], k_rest], axis=1)[:n]
+    v_all = np.concatenate(
+        [np.asarray(v0, np.float32)[:, None], v_rest], axis=1)[:n]
+    return logits, stats, k_all, v_all

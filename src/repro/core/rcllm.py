@@ -87,11 +87,14 @@ class RcLLMSystem:
             semantic=self.semantic, token_embed=self.token_embed,
             instance=instance)
 
-    def _cached_kv(self, plan: ASM.AssemblyPlan, instance: int):
+    def cached_kv(self, plan: ASM.AssemblyPlan, instance: int = 0):
+        """Materialized assembled (k, v, have) for a plan on one instance."""
         return ASM.gather_cached_kv(
             plan, self.item_store, self.semantic, instance,
             self.cfg.n_layers, self.cfg.n_kv_heads,
             self.cfg.resolved_head_dim)
+
+    _cached_kv = cached_kv                  # backward-compatible alias
 
     def best_instance(self, request: SY.Request) -> int:
         """Affinity routing (idle cluster → pure cache affinity)."""

@@ -1,8 +1,17 @@
-"""Serving launcher: the distributed RcLLM cluster simulation.
+"""Serving launcher: cluster simulation or the real batched JAX engine.
 
+    # distributed cluster simulation (analytic cost model, K instances)
     PYTHONPATH=src python -m repro.launch.serve --k 40 --qps 120
 
-See examples/serve_cluster.py for the narrated version; this entry point
+    # real hardware: continuous batching + paged KV pool on one instance
+    PYTHONPATH=src python -m repro.launch.serve --engine jax --requests 8 --k 1
+
+Both paths drive the *same* `ContinuousBatcher` loop; `--engine` picks the
+backend behind its seam (`serving.batching.EngineBackend`).  With
+``--engine jax --mode rcllm`` each prompt goes through decomposition →
+assembly plan → beyond-prefix cache insertion → selective recompute →
+paged decode; ``--mode full`` is the Full-Recompute reference.  See
+examples/serve_cluster.py for the narrated simulator; this entry point
 emits machine-readable JSON.
 """
 from __future__ import annotations
@@ -10,13 +19,120 @@ from __future__ import annotations
 import argparse
 import json
 
+import numpy as np
+
 from repro.configs import registry as REG
 from repro.core import cost_model as CM
 from repro.core import simulator as SIM
 
 
+def run_sim(args) -> dict:
+    qps = args.qps if args.qps is not None else 3.0 * args.k
+    cfg = REG.ARCHS[args.model]
+    reqs, placement, _ = SIM.make_sim_setup(k=args.k,
+                                            n_requests=args.requests,
+                                            qps=qps, n_items=8000, seed=1)
+    res = SIM.simulate(cfg, CM.V5E_1, reqs, placement,
+                       SIM.SimConfig(mode=args.mode, policy=args.policy,
+                                     r_item=args.r_item, r_rev=args.r_rev))
+    return {"engine": "sim", "k": args.k, "qps": qps, "mode": args.mode,
+            "policy": args.policy, **res.summary()}
+
+
+def run_jax(args) -> dict:
+    """Continuous batching over the real engine on this host's devices."""
+    from repro.core import engine as ENG
+    from repro.serving.batch_engine import BatchEngine
+    from repro.serving.batching import (ContinuousBatcher, JaxEngineBackend,
+                                        PendingRequest)
+    from repro.serving.kv_pool import pool_for
+    from repro.serving.workload import rcllm_workload
+
+    if args.mode == "prefix":
+        raise SystemExit("--engine jax supports --mode rcllm|full "
+                         "(prefix caching is a simulator-only baseline)")
+    qps = args.qps if args.qps is not None else 8.0
+    rng = np.random.default_rng(1)
+    mode = args.mode
+    plans = {}
+
+    if mode == "rcllm":
+        # full RcLLM stack: tiny model + both cache pools + placement
+        from repro.core.rcllm import make_tiny_system
+        from repro.data import synth as SY
+        system, pool_rv, prof, _ = make_tiny_system(
+            n_items=80, n_requests_hist=40, k_instances=max(args.k, 1),
+            n_layers=2, d_model=32)
+        params, cfg = system.params, system.cfg
+        trace = SY.make_trace(system.catalog, pool_rv, prof, args.requests,
+                              qps=qps, n_users=max(3, args.requests // 2),
+                              n_candidates=8, reviews_per_user=1, seed=2)
+        reqs, plans = rcllm_workload(system, trace,
+                                     decode_steps=args.decode_steps)
+    else:
+        # Full-Recompute reference on random prompts
+        import jax
+        from repro.configs.base import LMConfig
+        from repro.models import transformer as T
+        cfg = LMConfig(name="serve-tiny", n_layers=2, d_model=64, n_heads=4,
+                       n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512,
+                       mlp_type="swiglu", dtype="float32", attn_q_chunk=64,
+                       attn_kv_chunk=64, remat=False)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        if args.prompt_tokens < 16:
+            raise SystemExit("--prompt-tokens must be >= 16")
+        lo = min(48, args.prompt_tokens)
+        arrivals = np.cumsum(rng.exponential(1.0 / qps, args.requests))
+        reqs = []
+        for rid in range(args.requests):
+            n = int(rng.integers(lo, args.prompt_tokens + 1))
+            reqs.append(PendingRequest(
+                arrival_s=float(arrivals[rid]), rid=rid, n_tokens=n,
+                decode_steps=args.decode_steps,
+                tokens=rng.integers(1, cfg.vocab_size, n).astype(np.int32)))
+
+    def make_batcher():
+        engine = BatchEngine(
+            params, cfg, pool=pool_for(cfg, page_size=args.page_size,
+                                       n_pages=args.pages),
+            sel=ENG.SelectiveConfig(r_item=args.r_item, r_rev=args.r_rev,
+                                    window=16))
+        backend = JaxEngineBackend(engine, mode=mode, plans=plans)
+        return engine, backend, ContinuousBatcher(
+            backend=backend, max_batch_tokens=args.max_batch_tokens)
+
+    if args.warmup:
+        # throwaway pass to fill the jit caches, so the reported times
+        # are step times rather than trace/compile times
+        make_batcher()[2].run(list(reqs))
+    engine, backend, batcher = make_batcher()
+    done = sorted(batcher.run(reqs), key=lambda c: c.rid)
+
+    ttft = np.asarray([c.first_token_s - c.arrival_s for c in done])
+    total = max(c.done_s for c in done)
+    n_toks = sum(len(backend.generated[c.rid]) for c in done)
+    stats = engine.pool.stats()
+    return {
+        "engine": "jax", "mode": mode, "requests": len(done),
+        "decode_steps": args.decode_steps,
+        "includes_jit_compile": not args.warmup,
+        "per_request_ttft_s": [round(float(x), 4) for x in ttft],
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p90_s": float(np.percentile(ttft, 90)),
+        "ttft_mean_s": float(ttft.mean()),
+        "decode_tokens": int(n_toks),
+        "throughput_tok_s": float(n_toks / max(total, 1e-9)),
+        "pool_peak_pages": engine.pool.peak_pages,
+        "pool_peak_utilization": round(
+            engine.pool.peak_pages / max(stats.n_pages - 1, 1), 4),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="sim", choices=["sim", "jax"],
+                    help="sim: analytic cluster simulator; jax: real "
+                         "batched engine + paged KV pool on this host")
     ap.add_argument("--k", type=int, default=40)
     ap.add_argument("--qps", type=float, default=None)
     ap.add_argument("--requests", type=int, default=1500)
@@ -26,18 +142,19 @@ def main():
     ap.add_argument("--policy", default="affinity")
     ap.add_argument("--r-item", type=float, default=0.3)
     ap.add_argument("--r-rev", type=float, default=0.3)
+    # --engine jax knobs
+    ap.add_argument("--decode-steps", type=int, default=4)
+    ap.add_argument("--prompt-tokens", type=int, default=160)
+    ap.add_argument("--max-batch-tokens", type=int, default=4096)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=512)
+    ap.add_argument("--warmup", action="store_true",
+                    help="run a throwaway pass first so reported times "
+                         "exclude jit compilation")
     args = ap.parse_args()
 
-    qps = args.qps if args.qps is not None else 3.0 * args.k
-    cfg = REG.ARCHS[args.model]
-    reqs, placement, _ = SIM.make_sim_setup(k=args.k,
-                                            n_requests=args.requests,
-                                            qps=qps, n_items=8000, seed=1)
-    res = SIM.simulate(cfg, CM.V5E_1, reqs, placement,
-                       SIM.SimConfig(mode=args.mode, policy=args.policy,
-                                     r_item=args.r_item, r_rev=args.r_rev))
-    print(json.dumps({"k": args.k, "qps": qps, "mode": args.mode,
-                      "policy": args.policy, **res.summary()}, indent=1))
+    out = run_jax(args) if args.engine == "jax" else run_sim(args)
+    print(json.dumps(out, indent=1))
 
 
 if __name__ == "__main__":

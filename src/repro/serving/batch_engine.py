@@ -1,0 +1,224 @@
+"""Batched prefill/decode over the real JAX engine (the serving tentpole).
+
+Two jitted steps drive every request:
+
+* **prefill** — a padded multi-request step.  ``mode="full"`` runs the
+  Full-Recompute batch (`core.engine._jit_batched_prefill`); ``mode=
+  "rcllm"`` runs the beyond-prefix selective path per request
+  (`core.engine.selective_prefill_with_kv` — the same Eq. 3 scoring and
+  layer stack as the single-request engine, not a copy).  Either way the
+  prompt's pre-RoPE KV lands in the paged pool: cached spans are inserted
+  block-granularly from the assembly plan, then only the recomputed
+  tokens' fresh KV is scattered on top.
+
+* **decode** — a single-token batched step that reads K/V *through the
+  page tables*: one arena gather per step, keys realigned to their
+  request positions by RoPE's group property, GQA attention over the
+  variable-length batch, and the new token's KV written back into the
+  arena inside the jit.
+
+Shapes are bucketed (sequence bucket for prefill, page/batch buckets for
+decode) so steady-state serving retraces O(1) times.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.core import engine as ENG
+from repro.core.assembly import AssemblyPlan
+from repro.models import layers as L
+from repro.serving.kv_pool import PagedKVPool, pool_for
+
+
+@dataclass
+class BatchRequest:
+    """One prompt for the batched engine.  `plan` + cached KV arrays are
+    required for the selective (rcllm) path and ignored for full prefill.
+    `n_reserve` pre-reserves page capacity for that many decode tokens so
+    decode never has to grab pages from the free list mid-flight."""
+    rid: int
+    tokens: np.ndarray
+    plan: Optional[AssemblyPlan] = None
+    cached_k: Optional[np.ndarray] = None
+    cached_v: Optional[np.ndarray] = None
+    have: Optional[np.ndarray] = None
+    n_reserve: int = 0
+
+
+def _decode_step(params, toks, page_tables, seq_lens, new_pages,
+                 new_slots, arena_k, arena_v, cfg: LMConfig):
+    """One decode token per request, K/V read through page tables.
+
+    toks: (N,) last sampled token ids; page_tables: (N, P) page ids;
+    seq_lens: (N,) tokens resident *before* this step (= the new token's
+    position); new_pages/new_slots: (N,) physical slot claimed for the
+    new token's KV.  -> (logits (N, V), arena_k', arena_v').
+
+    Jitted below with the arenas donated on TPU/GPU so the update is
+    in-place; CPU doesn't implement donation, so there each step copies
+    the arenas (fine at test scale).
+    """
+    N = toks.shape[0]
+    page = arena_k.shape[1]
+    S = page_tables.shape[1] * page
+
+    x = params["embed"][toks].astype(jnp.dtype(cfg.dtype))     # (N, D)
+    if cfg.tie_embeddings:
+        x = x * (cfg.d_model ** 0.5)
+    pos_new = seq_lens.astype(jnp.int32)                       # (N,)
+
+    # one arena gather per step: (N, P, page, L, Hkv, Dh) -> (N, S, L, ...)
+    kg = arena_k[page_tables].reshape(N, S, cfg.n_layers,
+                                      *arena_k.shape[3:])
+    vg = arena_v[page_tables].reshape(N, S, cfg.n_layers,
+                                      *arena_v.shape[3:])
+    slot_pos = jnp.arange(S)
+    kv_pos = jnp.concatenate(
+        [jnp.broadcast_to(slot_pos[None], (N, S)), pos_new[:, None]], axis=1)
+    kv_valid = jnp.concatenate(
+        [slot_pos[None, :] < seq_lens[:, None],
+         jnp.ones((N, 1), bool)], axis=1)                      # (N, S+1)
+
+    scale = 1.0 / (cfg.resolved_head_dim ** 0.5)
+    Hkv = cfg.n_kv_heads
+    G = cfg.n_heads // Hkv
+    for l in range(cfg.n_layers):
+        lp = ENG.layer_params(params, l)
+        h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("nd,dhe->nhe", h, lp["wq"])
+        k_new = jnp.einsum("nd,dhe->nhe", h, lp["wk"])         # pre-RoPE
+        v_new = jnp.einsum("nd,dhe->nhe", h, lp["wv"])
+        arena_k = arena_k.at[new_pages, new_slots, l].set(
+            k_new.astype(arena_k.dtype))
+        arena_v = arena_v.at[new_pages, new_slots, l].set(
+            v_new.astype(arena_v.dtype))
+
+        q = L.apply_rope(q[:, None], pos_new[:, None], cfg.rope_theta)[:, 0]
+        k_l = jnp.concatenate([kg[:, :, l], k_new[:, None]], axis=1)
+        v_l = jnp.concatenate([vg[:, :, l], v_new[:, None]], axis=1)
+        k_l = L.apply_rope(k_l, kv_pos, cfg.rope_theta)        # realign
+
+        qr = q.reshape(N, Hkv, G, -1)
+        s = jnp.einsum("nhgd,nshd->nhgs", qr, k_l,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(kv_valid[:, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("nhgs,nshd->nhgd", p.astype(v_l.dtype), v_l)
+        o = o.reshape(N, cfg.n_heads, -1)
+        x = x + jnp.einsum("nhe,hed->nd", o, lp["wo"])
+        x = x + ENG.mlp_block(L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps),
+                              lp, cfg)
+
+    xf = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return xf @ head, arena_k, arena_v
+
+
+if jax.default_backend() in ("tpu", "gpu"):
+    _jit_decode_step = jax.jit(_decode_step, static_argnums=(8,),
+                               donate_argnums=(6, 7))
+else:
+    _jit_decode_step = jax.jit(_decode_step, static_argnums=(8,))
+
+
+class BatchEngine:
+    """Multi-request prefill + paged continuous decode on real hardware."""
+
+    def __init__(self, params, cfg: LMConfig, pool: Optional[PagedKVPool]
+                 = None, sel: Optional[ENG.SelectiveConfig] = None,
+                 bucket: int = 64, decode_bucket: int = 8):
+        self.params = params
+        self.cfg = cfg
+        self.pool = pool if pool is not None else pool_for(cfg)
+        self.sel = sel or ENG.SelectiveConfig()
+        self.bucket = bucket
+        self.decode_bucket = decode_bucket
+        self.last_stats: Dict[int, ENG.EngineStats] = {}
+
+    # ------------------------------ prefill --------------------------------
+    def prefill(self, reqs: Sequence[BatchRequest], mode: str = "full"
+                ) -> np.ndarray:
+        """Prefill a batch; KV lands in the pool.  -> logits (N, V)."""
+        if mode == "full":
+            return self._prefill_full(reqs)
+        if mode == "rcllm":
+            return np.stack([self._prefill_selective(r) for r in reqs])
+        raise ValueError(mode)
+
+    def _prefill_full(self, reqs: Sequence[BatchRequest]) -> np.ndarray:
+        lens = [len(r.tokens) for r in reqs]
+        S = max(self.bucket,
+                -(-max(lens) // self.bucket) * self.bucket)
+        # batch dim is a traced shape too: pad it to a bucket so varying
+        # batch compositions reuse compiled steps (pad rows: one PAD
+        # token at position 0, logits discarded, nothing pooled)
+        N = -(-len(reqs) // self.decode_bucket) * self.decode_bucket
+        toks = np.zeros((N, S), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :lens[i]] = r.tokens
+        last = np.zeros(N, np.int32)
+        last[:len(reqs)] = [n - 1 for n in lens]
+        logits, k, v = ENG._jit_batched_prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(last), self.cfg)
+        k = np.asarray(k, np.float32)
+        v = np.asarray(v, np.float32)
+        for i, r in enumerate(reqs):
+            self.pool.alloc(r.rid, lens[i] + r.n_reserve)
+            self.pool.write_prompt(r.rid, k[i, :lens[i]], v[i, :lens[i]])
+        return np.asarray(logits, np.float32)[:len(reqs)]
+
+    def _prefill_selective(self, r: BatchRequest) -> np.ndarray:
+        if r.plan is None:
+            raise ValueError(f"request {r.rid}: rcllm prefill needs a plan")
+        logits, stats, k_all, v_all = ENG.selective_prefill_with_kv(
+            self.params, self.cfg, r.plan, r.cached_k, r.cached_v,
+            r.have, self.sel, bucket=self.bucket)
+        self.last_stats[r.rid] = stats
+        n = r.plan.n
+        self.pool.alloc(r.rid, n + r.n_reserve)
+        # block-granular insertion of the assembled cache spans...
+        self.pool.write_plan(r.rid, r.plan, r.cached_k, r.cached_v)
+        # ...fresh KV scattered over the recompute set only...
+        r_pos = np.where(stats.recompute_mask)[0]
+        self.pool.write_at(r.rid, r_pos, k_all[r_pos], v_all[r_pos])
+        # ...and layer 0 is always computed fully (HH identification), so
+        # its plane is fresh for every token.
+        self.pool.write_at(r.rid, np.arange(n), k_all[:, 0], v_all[:, 0],
+                           layer=0)
+        return logits
+
+    # ------------------------------- decode --------------------------------
+    def decode(self, rids: Sequence[int], last_tokens: Sequence[int]
+               ) -> np.ndarray:
+        """One token for each running request.  -> logits (N, V)."""
+        n = len(rids)
+        n_pad = -(-n // self.decode_bucket) * self.decode_bucket
+        tables, lens = self.pool.batch_tables(rids)
+        pages, slots = self.pool.append_slots(rids)
+        toks = np.zeros(n_pad, np.int32)
+        toks[:n] = np.asarray(last_tokens, np.int32)
+        tables_p = np.zeros((n_pad, tables.shape[1]), np.int32)
+        tables_p[:n] = tables
+        lens_p = np.zeros(n_pad, np.int32)
+        lens_p[:n] = lens
+        pages_p = np.zeros(n_pad, np.int32)     # pad rows: scratch page 0
+        slots_p = np.zeros(n_pad, np.int32)
+        pages_p[:n], slots_p[:n] = pages, slots
+        logits, ak, av = _jit_decode_step(
+            self.params, jnp.asarray(toks), jnp.asarray(tables_p),
+            jnp.asarray(lens_p), jnp.asarray(pages_p),
+            jnp.asarray(slots_p), self.pool.arena_k, self.pool.arena_v,
+            self.cfg)
+        self.pool.update_arenas(ak, av)
+        return np.asarray(logits, np.float32)[:n]
+
+    def release(self, rid: int) -> None:
+        self.pool.free(rid)
+        self.last_stats.pop(rid, None)

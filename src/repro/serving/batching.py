@@ -2,15 +2,22 @@
 
 Requests arrive asynchronously; the batcher forms prefill batches under a
 token budget and interleaves decode iterations (prefill-prioritized, like
-vLLM's default).  Drives the simulator clock in tests/benchmarks; on real
-hardware the same loop drives the jitted prefill/decode steps.
+vLLM's default).  The *same loop* drives both execution targets through
+the `EngineBackend` seam:
+
+* `SimBackend` — the analytic cost model as a virtual clock (tests,
+  scheduling/benchmark sweeps; the seed behaviour);
+* `JaxEngineBackend` — the real batched JAX engine + paged KV pool
+  (`serving.batch_engine`), timed on the wall clock.
+
+A backend returns the seconds each step took; the batcher only ever adds
+those to its clock, so scheduling policy is identical in both worlds.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
+import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Protocol, Sequence
 
 import numpy as np
 
@@ -21,6 +28,8 @@ class PendingRequest:
     rid: int = field(compare=False)
     n_tokens: int = field(compare=False)
     decode_steps: int = field(compare=False, default=4)
+    # real-engine payload (None for the simulator)
+    tokens: Optional[np.ndarray] = field(compare=False, default=None)
 
 
 @dataclass
@@ -31,22 +40,140 @@ class Completion:
     done_s: float
 
 
-class ContinuousBatcher:
-    """Single-instance continuous batching over a virtual clock."""
+class EngineBackend(Protocol):
+    """What the batching loop needs from an execution target."""
+
+    def prefill(self, batch: Sequence[PendingRequest]) -> float:
+        """Run one prefill batch; -> seconds it took."""
+
+    def decode(self, batch: Sequence[PendingRequest]) -> float:
+        """Run one decode iteration for `batch`; -> seconds it took."""
+
+    def can_admit(self, req: PendingRequest,
+                  batch: Sequence[PendingRequest] = ()) -> bool:
+        """Room for this request *on top of* the forming `batch`?  False
+        defers admission (backpressure) until running requests finish
+        and free capacity."""
+
+    def finish(self, req: PendingRequest) -> None:
+        """Request left the decode set — release its resources."""
+
+
+class SimBackend:
+    """Virtual clock: analytic prefill/decode time functions."""
 
     def __init__(self, prefill_time_fn: Callable[[int], float],
-                 decode_time_fn: Callable[[int], float],
-                 max_batch_tokens: int = 8192,
-                 max_decode_batch: int = 64):
+                 decode_time_fn: Callable[[int], float]):
         self.prefill_time_fn = prefill_time_fn
         self.decode_time_fn = decode_time_fn
+
+    def prefill(self, batch: Sequence[PendingRequest]) -> float:
+        return self.prefill_time_fn(sum(r.n_tokens for r in batch))
+
+    def decode(self, batch: Sequence[PendingRequest]) -> float:
+        return self.decode_time_fn(len(batch))
+
+    def can_admit(self, req: PendingRequest,
+                  batch: Sequence[PendingRequest] = ()) -> bool:
+        return True
+
+    def finish(self, req: PendingRequest) -> None:
+        pass
+
+
+class JaxEngineBackend:
+    """Real hardware: the batched JAX engine behind the same seam.
+
+    `mode="full"` prefills every prompt exactly; `mode="rcllm"` runs the
+    beyond-prefix selective path (requests then need `.plan`/cached KV —
+    supply them via `plans`).  Greedy sampling; generated tokens are kept
+    per request for inspection.
+    """
+
+    def __init__(self, engine, mode: str = "full", plans: Optional[Dict]
+                 = None):
+        self.engine = engine
+        self.mode = mode
+        self.plans = plans or {}
+        self.last_token: Dict[int, int] = {}
+        self.generated: Dict[int, List[int]] = {}
+
+    def _batch_requests(self, batch: Sequence[PendingRequest]):
+        from repro.serving.batch_engine import BatchRequest
+        out = []
+        for r in batch:
+            if r.tokens is None:
+                raise ValueError(f"request {r.rid}: real engine needs tokens")
+            # decode appends decode_steps-1 KV slots: the first output
+            # token comes from prefill and the last sampled token is
+            # never written back
+            br = BatchRequest(rid=r.rid, tokens=r.tokens,
+                              n_reserve=max(r.decode_steps - 1, 0))
+            if self.mode == "rcllm":
+                plan, ck, cv, have = self.plans[r.rid]
+                br.plan, br.cached_k, br.cached_v, br.have = plan, ck, cv, have
+            out.append(br)
+        return out
+
+    def prefill(self, batch: Sequence[PendingRequest]) -> float:
+        t0 = time.perf_counter()
+        logits = self.engine.prefill(self._batch_requests(batch), self.mode)
+        for r, lg in zip(batch, logits):
+            tok = int(np.argmax(lg))
+            self.last_token[r.rid] = tok
+            self.generated[r.rid] = [tok]
+        return time.perf_counter() - t0
+
+    def can_admit(self, req: PendingRequest,
+                  batch: Sequence[PendingRequest] = ()) -> bool:
+        # pages for the prompt + the decode tokens it will append, on top
+        # of what the rest of the forming batch will claim
+        pool = self.engine.pool
+        need = sum(pool.pages_for(r.n_tokens + max(r.decode_steps - 1, 0))
+                   for r in (*batch, req))
+        return need <= pool.free_pages
+
+    def decode(self, batch: Sequence[PendingRequest]) -> float:
+        t0 = time.perf_counter()
+        rids = [r.rid for r in batch]
+        logits = self.engine.decode(rids, [self.last_token[r] for r in rids])
+        for rid, lg in zip(rids, logits):
+            tok = int(np.argmax(lg))
+            self.last_token[rid] = tok
+            self.generated[rid].append(tok)
+        return time.perf_counter() - t0
+
+    def finish(self, req: PendingRequest) -> None:
+        self.engine.release(req.rid)
+        self.last_token.pop(req.rid, None)
+
+
+class ContinuousBatcher:
+    """Single-instance continuous batching over an `EngineBackend`.
+
+    Backward-compatible construction: passing `prefill_time_fn` /
+    `decode_time_fn` (the seed API) wraps them in a `SimBackend`.
+    """
+
+    def __init__(self, prefill_time_fn: Optional[Callable[[int], float]]
+                 = None,
+                 decode_time_fn: Optional[Callable[[int], float]] = None,
+                 max_batch_tokens: int = 8192,
+                 max_decode_batch: int = 64,
+                 backend: Optional[EngineBackend] = None):
+        if backend is None:
+            if prefill_time_fn is None or decode_time_fn is None:
+                raise ValueError("need a backend or both time functions")
+            backend = SimBackend(prefill_time_fn, decode_time_fn)
+        self.backend = backend
         self.max_batch_tokens = max_batch_tokens
         self.max_decode_batch = max_decode_batch
 
     def run(self, requests: List[PendingRequest]) -> List[Completion]:
         pending = sorted(requests)
         waiting: List[PendingRequest] = []
-        decoding: List[Tuple[PendingRequest, float, int]] = []  # (req, ttft, left)
+        # decode set entries: [req, ttft_s, decode_steps_left]
+        decoding: List[list] = []
         done: List[Completion] = []
         t = 0.0
         i = 0
@@ -58,33 +185,50 @@ class ContinuousBatcher:
             if not waiting and not decoding:
                 t = pending[i].arrival_s
                 continue
+            batch, tok = [], 0
             if waiting:
-                # prefill-priority: batch under the token budget
-                batch, tok = [], 0
+                # prefill-priority: batch under the token budget; requests
+                # the backend has no capacity for wait (KV-pool backpressure)
                 for r in list(waiting):
                     if tok + r.n_tokens > self.max_batch_tokens and batch:
                         break
+                    if not self.backend.can_admit(r, batch):
+                        # strict FCFS under backpressure: never admit a
+                        # younger request past one waiting on capacity
+                        # (head-of-line wait beats unbounded starvation)
+                        break
                     batch.append(r)
                     tok += r.n_tokens
+                if not batch and not decoding:
+                    raise RuntimeError(
+                        f"request {waiting[0].rid} ({waiting[0].n_tokens} "
+                        "tokens) can never be admitted: KV pool too small "
+                        "even with no other request running")
+            if batch:
                 for r in batch:
                     waiting.remove(r)
-                dt = self.prefill_time_fn(tok)
-                t += dt
+                t += self.backend.prefill(batch)
                 for r in batch:
-                    decoding.append((r, t - r.arrival_s, r.decode_steps))
+                    if r.decode_steps <= 1:      # TTFT token was the output
+                        done.append(Completion(r.rid, r.arrival_s,
+                                               t, t))
+                        self.backend.finish(r)
+                    else:
+                        decoding.append([r, t - r.arrival_s,
+                                         r.decode_steps - 1])
             else:
                 # one decode iteration for the running batch
                 batch = decoding[:self.max_decode_batch]
-                t += self.decode_time_fn(len(batch))
+                t += self.backend.decode([e[0] for e in batch])
+                for e in batch:
+                    e[2] -= 1
                 keep = []
-                for r, ttft, left in decoding:
-                    if (r, ttft, left) in batch or left > 0:
-                        pass
-                    left2 = left - 1 if (r, ttft, left) in batch else left
-                    if left2 <= 0:
-                        done.append(Completion(r.rid, r.arrival_s,
-                                               r.arrival_s + ttft, t))
+                for e in decoding:
+                    if e[2] <= 0:
+                        done.append(Completion(e[0].rid, e[0].arrival_s,
+                                               e[0].arrival_s + e[1], t))
+                        self.backend.finish(e[0])
                     else:
-                        keep.append((r, ttft, left2))
+                        keep.append(e)
                 decoding = keep
         return done

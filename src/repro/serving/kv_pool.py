@@ -1,0 +1,237 @@
+"""Paged KV cache pool for the batched serving path (vLLM-style).
+
+One preallocated device arena holds every request's per-layer KV in
+fixed-size pages; a free-list allocator hands pages to requests and a
+per-request page table maps logical token slots to (page, slot) physical
+locations.  K and V are stored **pre-RoPE** — the same convention as the
+item / semantic cache pools — so a page written from an assembled cache
+block needs no rewrite, and decode realigns keys to their request
+positions with one rotation (RoPE's group property, §III-C3).
+
+Insertion is block-granular: `write_plan` walks the assembly plan's
+contiguous spans (`core.assembly.plan_spans`) and copies each cached
+block's run with one slice op; the selective engine then scatters only
+the recomputed tokens' fresh KV on top (`write_at`).
+
+Host-side writes use eager ``.at[].set`` (a copy per call on CPU); the
+decode hot loop instead threads the arenas through the jitted decode
+step (`serving.batch_engine`) and installs the returned buffers, so the
+new tokens' KV lands in-step (the arenas are donated on TPU/GPU, making
+the update in-place; CPU lacks donation and copies).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.core.assembly import RECOMPUTE, AssemblyPlan, plan_spans
+
+
+class PoolExhausted(RuntimeError):
+    """No free pages left — caller should defer admission (backpressure)."""
+
+
+@dataclass(frozen=True)
+class PoolStats:
+    n_pages: int
+    page_size: int
+    pages_in_use: int
+    n_requests: int
+    tokens_resident: int
+
+    @property
+    def utilization(self) -> float:
+        return self.pages_in_use / max(self.n_pages, 1)
+
+    @property
+    def internal_fragmentation(self) -> float:
+        """Fraction of allocated slots holding no token."""
+        cap = self.pages_in_use * self.page_size
+        return 1.0 - self.tokens_resident / max(cap, 1)
+
+
+class PagedKVPool:
+    """Fixed-page KV arena + free-list allocator + per-request page tables.
+
+    Arena layout: (n_pages, page_size, n_layers, n_kv_heads, head_dim)
+    for K and V separately, dtype float32 (pre-RoPE values).
+    """
+
+    def __init__(self, n_layers: int, n_kv_heads: int, head_dim: int,
+                 page_size: int = 16, n_pages: int = 512,
+                 dtype: str = "float32"):
+        self.page_size = int(page_size)
+        self.n_pages = int(n_pages)
+        self.n_layers = n_layers
+        shape = (self.n_pages, self.page_size, n_layers, n_kv_heads, head_dim)
+        self.arena_k = jnp.zeros(shape, jnp.dtype(dtype))
+        self.arena_v = jnp.zeros(shape, jnp.dtype(dtype))
+        # page 0 is reserved as scratch: padded decode-batch rows write
+        # their dummy token there, and padded page-table entries point at
+        # it (reads are masked by seq_lens).  It is never allocated.
+        self._free: List[int] = list(range(self.n_pages - 1, 0, -1))
+        self.page_tables: Dict[int, List[int]] = {}
+        self.seq_lens: Dict[int, int] = {}
+        self.peak_pages = 0
+
+    # ------------------------------ allocator ------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 1) // self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return len(self._free) >= self.pages_for(n_tokens)
+
+    def alloc(self, rid: int, n_tokens: int) -> List[int]:
+        """Reserve pages for `n_tokens` slots; seq_len starts at 0."""
+        if rid in self.page_tables:
+            raise KeyError(f"request {rid} already allocated")
+        need = self.pages_for(n_tokens)
+        if need > len(self._free):
+            raise PoolExhausted(
+                f"need {need} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(need)]
+        self.page_tables[rid] = pages
+        self.seq_lens[rid] = 0
+        self.peak_pages = max(self.peak_pages,
+                              self.n_pages - 1 - len(self._free))
+        return pages
+
+    def free(self, rid: int) -> None:
+        for p in self.page_tables.pop(rid):
+            self._free.append(p)
+        del self.seq_lens[rid]
+
+    def stats(self) -> PoolStats:
+        in_use = sum(len(t) for t in self.page_tables.values())
+        return PoolStats(n_pages=self.n_pages, page_size=self.page_size,
+                         pages_in_use=in_use,
+                         n_requests=len(self.page_tables),
+                         tokens_resident=sum(self.seq_lens.values()))
+
+    # ------------------------------- writes --------------------------------
+    def _phys(self, rid: int, positions: np.ndarray
+              ) -> Tuple[np.ndarray, np.ndarray]:
+        """Logical token slots -> (page ids, in-page slots), growing the
+        page table if a position lands past current capacity."""
+        table = self.page_tables[rid]
+        top = int(positions.max())
+        while top >= len(table) * self.page_size:
+            if not self._free:
+                raise PoolExhausted("decode append: no free pages")
+            table.append(self._free.pop())
+            self.peak_pages = max(self.peak_pages,
+                                  self.n_pages - 1 - len(self._free))
+        pt = np.asarray(table, np.int32)
+        return pt[positions // self.page_size], positions % self.page_size
+
+    def write_at(self, rid: int, positions: np.ndarray,
+                 k: np.ndarray, v: np.ndarray,
+                 layer: Optional[int] = None) -> None:
+        """Scatter pre-RoPE (k, v) into logical slots.
+
+        k/v: (t, L, Hkv, Dh), or (t, Hkv, Dh) when `layer` selects a
+        single layer plane (e.g. the always-fresh layer-0 KV from the
+        selective engine).
+        """
+        positions = np.asarray(positions, np.int64)
+        pages, slots = self._phys(rid, positions)
+        if layer is None:
+            self.arena_k = self.arena_k.at[pages, slots].set(k)
+            self.arena_v = self.arena_v.at[pages, slots].set(v)
+        else:
+            self.arena_k = self.arena_k.at[pages, slots, layer].set(k)
+            self.arena_v = self.arena_v.at[pages, slots, layer].set(v)
+        self.seq_lens[rid] = max(self.seq_lens[rid],
+                                 int(positions.max()) + 1)
+
+    def write_prompt(self, rid: int, k: np.ndarray, v: np.ndarray) -> None:
+        """Insert a full prompt cache (n, L, Hkv, Dh) starting at slot 0."""
+        self.write_at(rid, np.arange(k.shape[0]), k, v)
+
+    def write_plan(self, rid: int, plan: AssemblyPlan,
+                   cached_k: np.ndarray, cached_v: np.ndarray) -> int:
+        """Block-granular insertion of an assembly plan's cached spans.
+
+        cached_k/v: (n, L, Hkv, Dh) pre-RoPE as returned by
+        `assembly.gather_cached_kv`.  RECOMPUTE spans are skipped (the
+        engine scatters fresh KV there after the selective pass).
+        -> number of tokens inserted from cache blocks.
+        """
+        inserted = 0
+        for span in plan_spans(plan):
+            if span.source == RECOMPUTE:
+                continue
+            pos = np.arange(span.start, span.end)
+            self.write_at(rid, pos, cached_k[span.start:span.end],
+                          cached_v[span.start:span.end])
+            inserted += span.n
+        return inserted
+
+    def append_slots(self, rids: Sequence[int]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Claim the next physical slot for each request's new decode token.
+
+        Grows page tables across page boundaries and bumps seq_lens; the
+        actual KV write happens inside the jitted decode step (which owns
+        the arena buffers).  -> (pages (N,), slots (N,)) int32.
+        """
+        pages = np.zeros(len(rids), np.int32)
+        slots = np.zeros(len(rids), np.int32)
+        for i, rid in enumerate(rids):
+            pos = np.asarray([self.seq_lens[rid]])
+            pg, sl = self._phys(rid, pos)
+            pages[i], slots[i] = pg[0], sl[0]
+            self.seq_lens[rid] += 1
+        return pages, slots
+
+    def update_arenas(self, arena_k, arena_v) -> None:
+        """Install arenas returned by the (donating) jitted decode step."""
+        self.arena_k = arena_k
+        self.arena_v = arena_v
+
+    # -------------------------------- reads --------------------------------
+    def seq_len(self, rid: int) -> int:
+        return self.seq_lens[rid]
+
+    def gather(self, rid: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-side readback of one request's (k, v): (S, L, Hkv, Dh)."""
+        n = self.seq_lens[rid]
+        pt = np.asarray(self.page_tables[rid], np.int32)
+        k = np.asarray(self.arena_k[pt]).reshape(
+            -1, *self.arena_k.shape[2:])[:n]
+        v = np.asarray(self.arena_v[pt]).reshape(
+            -1, *self.arena_v.shape[2:])[:n]
+        return k, v
+
+    def batch_tables(self, rids: Sequence[int], pad_pages_to: int = 4
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded page-table batch for the jitted decode step.
+
+        -> (tables (N, P) int32, seq_lens (N,) int32).  P is padded to a
+        multiple of `pad_pages_to` to bound jit retraces; pad entries
+        point at page 0 and are masked by seq_lens.
+        """
+        max_p = max(len(self.page_tables[r]) for r in rids)
+        max_p = -(-max_p // pad_pages_to) * pad_pages_to
+        tables = np.zeros((len(rids), max_p), np.int32)
+        lens = np.zeros(len(rids), np.int32)
+        for i, r in enumerate(rids):
+            t = self.page_tables[r]
+            tables[i, :len(t)] = t
+            lens[i] = self.seq_lens[r]
+        return tables, lens
+
+
+def pool_for(cfg: LMConfig, page_size: int = 16, n_pages: int = 512
+             ) -> PagedKVPool:
+    """Pool sized from a model config (serving launcher convenience)."""
+    return PagedKVPool(cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim,
+                       page_size=page_size, n_pages=n_pages)

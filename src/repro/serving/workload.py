@@ -1,0 +1,42 @@
+"""Serving workload construction shared by the launcher, benchmarks and
+tests: a synthetic request trace becomes batcher requests plus the
+per-request assembly artifacts the rcllm prefill path needs.
+
+Keeping this in one place means the (plan, cached_k, cached_v, have)
+tuple shape consumed by `JaxEngineBackend` has a single producer.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+from repro.serving.batch_engine import BatchRequest
+from repro.serving.batching import PendingRequest
+
+
+def rcllm_workload(system, trace: Sequence, decode_steps: int = 4
+                   ) -> Tuple[List[PendingRequest], Dict[int, tuple]]:
+    """Route each traced request, build its assembly plan and gather its
+    cached KV.  -> (pending requests for `ContinuousBatcher`,
+    {rid: (plan, cached_k, cached_v, have)} for `JaxEngineBackend`)."""
+    plans: Dict[int, tuple] = {}
+    pend: List[PendingRequest] = []
+    for rid, rq in enumerate(trace):
+        inst = system.best_instance(rq)
+        plan = system.plan_for(rq, inst)
+        ck, cv, have = system.cached_kv(plan, inst)
+        plans[rid] = (plan, ck, cv, have)
+        pend.append(PendingRequest(
+            arrival_s=float(rq.arrival_s), rid=rid, n_tokens=plan.n,
+            decode_steps=decode_steps, tokens=plan.tokens))
+    return pend, plans
+
+
+def rcllm_batch_requests(system, trace: Sequence, n_reserve: int = 0
+                         ) -> List[BatchRequest]:
+    """Direct `BatchEngine.prefill(mode="rcllm")` inputs for a trace —
+    the no-batcher variant used by parity tests and microbenchmarks."""
+    _, plans = rcllm_workload(system, trace)
+    return [BatchRequest(rid=rid, tokens=plan.tokens, plan=plan,
+                         cached_k=ck, cached_v=cv, have=have,
+                         n_reserve=n_reserve)
+            for rid, (plan, ck, cv, have) in sorted(plans.items())]

@@ -1,0 +1,36 @@
+"""Optional-hypothesis shim.
+
+`hypothesis` is a dev-only dependency (requirements-dev.txt).  Importing
+`given / settings / st` from here instead of from `hypothesis` keeps a
+mixed test module importable without it: plain tests run as usual, and
+each property test skips itself via ``pytest.importorskip`` at call time
+(a module-level importorskip would skip the plain tests too).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for `hypothesis.strategies` at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        def deco(fn):
+            def skipper(*args, **kwargs):
+                pytest.importorskip("hypothesis")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*a, **k):
+        return lambda fn: fn

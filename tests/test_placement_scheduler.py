@@ -1,7 +1,7 @@
 """Algorithm 1 + Eq. 2 scheduler: invariants and property-based tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep
 
 from repro.core import placement as PL
 from repro.core import scheduler as SCH

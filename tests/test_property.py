@@ -2,7 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+from _hypothesis_compat import given, settings, st  # optional dep
 
 from repro.core import metrics as MET
 from repro.core.semantic_cache import LSH, position_features
