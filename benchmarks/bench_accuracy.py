@@ -15,7 +15,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit
 from repro.core import metrics as MET
 from repro.core.engine import SelectiveConfig
 from repro.core.rcllm import RcLLMSystem, make_tiny_system

@@ -11,7 +11,7 @@ from benchmarks.common import emit, time_call
 from repro.kernels.block_gather.ops import assemble_kv
 from repro.kernels.embedding_bag.ops import bag_sum
 from repro.kernels.flash_attention.ops import mha_flash
-from repro.kernels.selective_attention.ops import flop_reduction, selective_mha
+from repro.kernels.selective_attention.ops import flop_reduction
 
 
 def run(out_dir: str = "results/bench", quick: bool = False) -> None:

@@ -10,7 +10,6 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs import registry as REG
 from repro.core import cost_model as CM
-from repro.core import placement as PL
 from repro.core import scheduler as SCH
 from repro.core import simulator as SIM
 

@@ -6,7 +6,6 @@ from __future__ import annotations
 import json
 import os
 
-import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.configs import registry as REG

@@ -10,6 +10,7 @@ default sizes reproduce the paper's structure in full.
   tableIII    ranking accuracy: Full vs RcLLM vs CacheBlend vs EPIC
   kernels     Pallas kernel probes + analytic FLOP reductions
   serving     continuous batching: sim-engine vs real jax-engine TTFT
+  cluster     K real engines + sharded item caches: dispatch policies
 
 Each entry also writes a JSON artifact into ``--out`` (see
 docs/benchmarks.md for the full flag and output reference).
@@ -18,7 +19,6 @@ from __future__ import annotations
 
 import argparse
 import functools
-import sys
 import time
 
 print = functools.partial(print, flush=True)   # keep CSV ordered through pipes
@@ -27,7 +27,8 @@ print = functools.partial(print, flush=True)   # keep CSV ordered through pipes
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="fig6|fig8_9|fig10|fig11|tableIII|kernels|serving|all")
+                    help="comma-separated subset of fig6|fig8_9|fig10|fig11|"
+                         "tableIII|kernels|serving|cluster, or all")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--planted", action="store_true",
                     help="tableIII: train the planted-preference ranker")
@@ -58,9 +59,17 @@ def main(argv=None) -> int:
         "serving": lambda: __import__(
             "benchmarks.bench_serving", fromlist=["run"]).run(
                 args.out, quick=args.quick),
+        "cluster": lambda: __import__(
+            "benchmarks.bench_cluster", fromlist=["run"]).run(
+                args.out, quick=args.quick),
     }
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+    unknown = only - set(jobs) - {"all"}
+    if unknown:
+        ap.error(f"unknown --only entries {sorted(unknown)}; "
+                 f"choose from {['all', *jobs]}")
     for name, job in jobs.items():
-        if args.only not in ("all", name):
+        if "all" not in only and name not in only:
             continue
         job()
     print(f"# total_bench_seconds,{time.time() - t0:.1f},")

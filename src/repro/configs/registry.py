@@ -3,7 +3,6 @@ their input-shape sets (40 dry-run cells), and ShapeDtypeStruct input specs.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Dict, Iterator, Tuple
 

@@ -10,7 +10,6 @@ as block-table indirection in HBM instead of a CPU↔GPU UVA path.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -81,7 +80,6 @@ def build_plan(tokens: np.ndarray, seg_kind: np.ndarray, seg_id: np.ndarray,
                 n_local += len(positions)
             else:
                 n_remote += len(positions)
-            start = positions[0]
             for off, pos in enumerate(positions):
                 if off >= len(blk.tokens):
                     continue

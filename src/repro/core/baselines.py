@@ -20,7 +20,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import LMConfig
 from repro.core.assembly import FROM_ITEM, FROM_SEMANTIC, RECOMPUTE, AssemblyPlan
-from repro.core import engine as ENG
 from repro.core.engine import EngineStats, _jit_layer0, _pad_to, run_selective_layers
 
 

@@ -8,9 +8,7 @@ overlap] + selective prefill compute + LM head.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Optional
 
 from repro.configs.base import LMConfig
 

@@ -15,18 +15,16 @@ in JAX.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import LMConfig
-from repro.core.assembly import (FROM_ITEM, FROM_SEMANTIC, RECOMPUTE,
-                                 AssemblyPlan, gather_cached_kv)
+from repro.core.assembly import FROM_ITEM, FROM_SEMANTIC, AssemblyPlan
 from repro.models import layers as L
 
 

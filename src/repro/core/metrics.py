@@ -1,7 +1,6 @@
 """Ranking metrics: HR@K, MRR, NDCG@K (Table III)."""
 from __future__ import annotations
 
-from typing import Sequence
 
 import numpy as np
 

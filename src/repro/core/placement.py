@@ -12,9 +12,8 @@ by boundary Kernighan–Lin refinement sweeps.  Same objective, same contract.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -38,6 +37,14 @@ class Placement:
 
     def items_on(self, instance: int) -> np.ndarray:
         return np.where((self.shard_of == instance) | (self.shard_of < 0))[0]
+
+    def hit_rate(self, items: Sequence[int], instance: int) -> float:
+        """Fraction of `items` resident on `instance` (hot replicas hit
+        everywhere).  Runtime-facing: the cluster reports this per worker."""
+        if len(items) == 0:
+            return 1.0
+        return float(np.mean([self.is_local(int(i), instance)
+                              for i in items]))
 
 
 def popularity_from_requests(n_items: int,
@@ -73,7 +80,6 @@ def partition(n_items: int, popularity: np.ndarray,
               hot_frac: float = 0.001, balance_slack: float = 1.1,
               refine_sweeps: int = 2, seed: int = 0) -> Placement:
     """Algorithm 1, Phases 1–5."""
-    rng = np.random.default_rng(seed)
     order = np.argsort(-popularity)
     n_hot = max(1, int(np.ceil(hot_frac * n_items)))
     hot = order[:n_hot]

@@ -7,7 +7,7 @@ distributed latency path is `repro.core.simulator`.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import jax

@@ -9,8 +9,7 @@ they are the policies of Fig. 10.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 import numpy as np
@@ -84,3 +83,32 @@ def route(items: np.ndarray, placement: Placement, state: SchedulerState,
 
 POLICIES = ("affinity", "hit_only", "load_only", "round_robin",
             "least_loaded", "random")
+
+
+class ClusterScheduler:
+    """Runtime-facing Eq. 2 dispatcher over *live* worker load.
+
+    The simulator rebuilds queue depths analytically each event; real
+    serving instead hands the scheduler measured per-worker backlog at
+    every arrival (`serving.batching.WorkerState.backlog_seconds`).  The
+    object is stateful so round-robin and the RNG behave across calls.
+    """
+
+    def __init__(self, placement: Placement, policy: str = "affinity",
+                 alpha: float = 0.7, beta: float = 0.3, seed: int = 0):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+        self.placement = placement
+        self.policy = policy
+        self.alpha = alpha
+        self.beta = beta
+        self.state = SchedulerState.fresh(placement.k)
+        self.rng = np.random.default_rng(seed)
+
+    def dispatch(self, items: Sequence[int],
+                 queue_depth: Sequence[float]) -> int:
+        """Route one request given its item set and live queue depths."""
+        self.state.queue_depth = np.asarray(queue_depth, float)
+        return route(np.asarray(items), self.placement, self.state,
+                     policy=self.policy, alpha=self.alpha, beta=self.beta,
+                     rng=self.rng)

@@ -13,12 +13,9 @@ tokens in new reviews match near-identically (Insight 1 / Fig. 3b).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -11,9 +11,7 @@ hit rates and per-replica footprints (Fig. 9).
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -21,7 +19,7 @@ import numpy as np
 from repro.configs.base import LMConfig
 from repro.core import cost_model as CM
 from repro.core.placement import Placement
-from repro.core.scheduler import SchedulerState, hit_ratio, route
+from repro.core.scheduler import SchedulerState, route
 
 
 @dataclass
@@ -173,9 +171,10 @@ def make_sim_setup(profile_name: str = "amazon", k: int = 40,
     a profile-shaped catalog, a request trace with the paper's prompt
     composition (median prefill 2.2–3.0K tokens, 207-token instruction),
     and an Algorithm-1 placement built from a separate history trace."""
+    import dataclasses as _dc
+
     from repro.core import placement as PL
     from repro.data import synth as SY
-    import dataclasses as _dc
 
     prof = SY.PROFILES[profile_name]
     if n_items is not None:

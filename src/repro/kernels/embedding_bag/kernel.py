@@ -8,7 +8,6 @@ across f — legal under TPU's sequential-last-axis grid semantics).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

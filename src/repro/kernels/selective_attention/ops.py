@@ -1,8 +1,6 @@
 """Jit'd wrapper for the selective-attention kernel."""
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -18,6 +16,14 @@ def selective_mha(q, q_positions, k, v, hh_mask, *, window: int = 256,
     positions/mask (it IS the point of the kernel — static tile skipping),
     so this wrapper is not jit-traceable end-to-end; callers jit around it.
     """
+    if isinstance(q_positions, jax.core.Tracer) or \
+            isinstance(hh_mask, jax.core.Tracer):
+        raise TypeError(
+            "selective_mha cannot be traced end-to-end by jax.jit: the "
+            "block-liveness map is computed host-side from *concrete* "
+            "q_positions/hh_mask (static tile skipping is the point of the "
+            "kernel). Call it outside jit — or close over concrete "
+            "positions/mask and jit only the surrounding computation.")
     b, r, hq, d = q.shape
     hkv = k.shape[2]
     g = hq // hkv

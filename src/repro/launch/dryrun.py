@@ -5,7 +5,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # count at first init.  Everything else follows.
 import argparse          # noqa: E402
 import json              # noqa: E402
-import re                # noqa: E402
 import time              # noqa: E402
 import traceback         # noqa: E402
 

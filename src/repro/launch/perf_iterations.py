@@ -186,7 +186,6 @@ def cell_C(out, probe: bool):
         "terms": t3,
         "confirmed": t3["overlapped_s"] < t2["serial_s"]})
     if probe:
-        import numpy as np
         mesh64 = jax.make_mesh((64, 4), ("data", "model"),
                                devices=jax.devices()[:256])
         log.append({"iter": "evidence",

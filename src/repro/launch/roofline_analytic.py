@@ -59,7 +59,6 @@ def lm_analytic(cfg: LMConfig, step: str, dims: Dict[str, int],
       selective_recompute   — RcLLM prefill: fraction of tokens recomputed
                               beyond layer 0 (the paper's own technique)
     """
-    tp_degree = n_chips // data_par
     b, s = dims["batch"], dims["seq"]
     L = cfg.n_layers
 

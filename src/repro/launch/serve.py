@@ -6,11 +6,18 @@
     # real hardware: continuous batching + paged KV pool on one instance
     PYTHONPATH=src python -m repro.launch.serve --engine jax --requests 8 --k 1
 
-Both paths drive the *same* `ContinuousBatcher` loop; `--engine` picks the
-backend behind its seam (`serving.batching.EngineBackend`).  With
-``--engine jax --mode rcllm`` each prompt goes through decomposition →
-assembly plan → beyond-prefix cache insertion → selective recompute →
-paged decode; ``--mode full`` is the Full-Recompute reference.  See
+    # real hardware, K instances: affinity-scheduled cluster of JAX
+    # engines over sharded item caches (per-request TTFT, per-worker
+    # hit rates, explicit cross-shard transfers)
+    PYTHONPATH=src python -m repro.launch.serve --engine jax --k 4 \\
+        --requests 12 --mode rcllm
+
+All paths drive the *same* batching loop; `--engine` picks the backend
+behind its seam (`serving.batching.EngineBackend`) and `--k` with
+``--engine jax`` picks single-instance vs the `serving.cluster` path.
+With ``--mode rcllm`` each prompt goes through decomposition → assembly
+plan → beyond-prefix cache insertion → selective recompute → paged
+decode; ``--mode full`` is the Full-Recompute reference.  See
 examples/serve_cluster.py for the narrated simulator; this entry point
 emits machine-readable JSON.
 """
@@ -37,6 +44,58 @@ def run_sim(args) -> dict:
                                      r_item=args.r_item, r_rev=args.r_rev))
     return {"engine": "sim", "k": args.k, "qps": qps, "mode": args.mode,
             "policy": args.policy, **res.summary()}
+
+
+def run_jax_cluster(args) -> dict:
+    """K real engine workers behind the Eq. 2 scheduler (serving.cluster)."""
+    from repro.core.rcllm import make_tiny_system
+    from repro.data import synth as SY
+    from repro.serving.cluster import ClusterEngine
+
+    if args.mode == "prefix":
+        raise SystemExit("--engine jax supports --mode rcllm|full "
+                         "(prefix caching is a simulator-only baseline)")
+    qps = args.qps if args.qps is not None else 8.0
+    system, pool_rv, prof, _ = make_tiny_system(
+        n_items=80, n_requests_hist=40, k_instances=args.k,
+        n_layers=2, d_model=32)
+    trace = SY.make_trace(system.catalog, pool_rv, prof, args.requests,
+                          qps=qps, n_users=max(3, args.requests // 2),
+                          n_candidates=8, reviews_per_user=1, seed=2)
+
+    def make_cluster():
+        return ClusterEngine(system, k=args.k, mode=args.mode,
+                             policy=args.policy, page_size=args.page_size,
+                             n_pages=args.pages,
+                             max_batch_tokens=args.max_batch_tokens)
+
+    if args.warmup:
+        make_cluster().run(trace, decode_steps=args.decode_steps)
+    rep = make_cluster().run(trace, decode_steps=args.decode_steps)
+
+    ttft = rep.ttft()
+    return {
+        "engine": "jax-cluster", "k": args.k, "mode": args.mode,
+        "policy": rep.policy, "requests": len(rep.completions),
+        "decode_steps": args.decode_steps,
+        "includes_jit_compile": not args.warmup,
+        "per_request_ttft_s": [round(float(x), 4) for x in ttft],
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p90_s": float(np.percentile(ttft, 90)),
+        "ttft_mean_s": float(ttft.mean()),
+        "mean_hit_rate": rep.mean_hit_rate(),
+        "per_worker": [{
+            "worker": w.worker, "requests": w.n_requests,
+            "mean_hit_rate": (round(w.mean_hit_rate, 4)
+                              if w.mean_hit_rate is not None else None),
+            "transfer_blocks": w.transfer_blocks,
+            "transfer_tokens": w.transfer_tokens,
+            "transfer_mbytes": round(w.transfer_bytes / 1e6, 3),
+            "transfer_seconds": round(w.transfer_seconds, 6),
+            "pool_peak_pages": w.pool_peak_pages,
+            "busy_seconds": round(w.busy_seconds, 4),
+        } for w in rep.workers],
+    }
 
 
 def run_jax(args) -> dict:
@@ -132,8 +191,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", default="sim", choices=["sim", "jax"],
                     help="sim: analytic cluster simulator; jax: real "
-                         "batched engine + paged KV pool on this host")
-    ap.add_argument("--k", type=int, default=40)
+                         "batched engine + paged KV pool on this host "
+                         "(--k > 1 runs the serving.cluster path: K "
+                         "engines over sharded item caches)")
+    ap.add_argument("--k", type=int, default=None,
+                    help="instance count; default 40 for --engine sim, "
+                         "1 for --engine jax (pass --k N for the real "
+                         "multi-instance cluster)")
     ap.add_argument("--qps", type=float, default=None)
     ap.add_argument("--requests", type=int, default=1500)
     ap.add_argument("--model", default="rcllm-qwen3-8b")
@@ -153,7 +217,14 @@ def main():
                          "exclude jit compilation")
     args = ap.parse_args()
 
-    out = run_jax(args) if args.engine == "jax" else run_sim(args)
+    if args.k is None:
+        # 40 instances is the simulator's paper-scale default; a real
+        # multi-engine cluster on this host must be asked for explicitly
+        args.k = 1 if args.engine == "jax" else 40
+    if args.engine == "jax":
+        out = run_jax_cluster(args) if args.k > 1 else run_jax(args)
+    else:
+        out = run_sim(args)
     print(json.dumps(out, indent=1))
 
 

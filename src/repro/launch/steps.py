@@ -6,8 +6,7 @@ Returned bundle: (fn, args_abstract, in_shardings, out_shardings) ready for
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

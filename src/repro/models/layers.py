@@ -527,8 +527,6 @@ def moe_apply(x: jax.Array, params: dict, *, n_experts: int, top_k: int,
 
     C = max(1, int(capacity_factor * T * K / E))
     flat_e = expert_idx.reshape(T * K)
-    flat_tok = jnp.repeat(jnp.arange(T), K)
-    flat_gate = gate_vals.reshape(T * K)
 
     order = jnp.argsort(flat_e, stable=True)
     sorted_e = flat_e[order]

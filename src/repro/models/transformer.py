@@ -11,8 +11,7 @@ Three entry points (the dry-run lowers exactly these):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

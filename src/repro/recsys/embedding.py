@@ -8,7 +8,7 @@ layout the RcLLM item-KV pool uses: one sharded store, id-indexed).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

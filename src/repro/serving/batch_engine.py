@@ -22,9 +22,8 @@ decode) so steady-state serving retraces O(1) times.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,4 @@
-"""Continuous batching for the serving path.
+"""Continuous batching for the serving path — single instance or cluster.
 
 Requests arrive asynchronously; the batcher forms prefill batches under a
 token budget and interleaves decode iterations (prefill-prioritized, like
@@ -10,11 +10,19 @@ the `EngineBackend` seam:
 * `JaxEngineBackend` — the real batched JAX engine + paged KV pool
   (`serving.batch_engine`), timed on the wall clock.
 
-A backend returns the seconds each step took; the batcher only ever adds
-those to its clock, so scheduling policy is identical in both worlds.
+A backend returns the seconds each step took; the loop only ever adds
+those to a clock, so scheduling policy is identical in both worlds.
+
+The loop state lives in `WorkerState` — one serving instance's clock,
+FIFO admission queue and decode set — so the same step logic scales from
+one backend (`ContinuousBatcher`) to K concurrent backends behind a
+dispatch policy (`ClusterBatcher`): per-worker clocks, per-worker KV-pool
+backpressure, one shared arrival stream.  `serving.cluster` plugs the
+Eq. 2 affinity router into the dispatch hook.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Protocol, Sequence
@@ -38,6 +46,7 @@ class Completion:
     arrival_s: float
     first_token_s: float      # TTFT
     done_s: float
+    worker: int = 0           # serving instance that ran the request
 
 
 class EngineBackend(Protocol):
@@ -94,7 +103,7 @@ class JaxEngineBackend:
                  = None):
         self.engine = engine
         self.mode = mode
-        self.plans = plans or {}
+        self.plans = plans if plans is not None else {}
         self.last_token: Dict[int, int] = {}
         self.generated: Dict[int, List[int]] = {}
 
@@ -148,11 +157,178 @@ class JaxEngineBackend:
         self.last_token.pop(req.rid, None)
 
 
+class WorkerState:
+    """One serving instance inside a (possibly multi-worker) batching loop.
+
+    Owns its backend, FIFO admission queue, decode set and clock.  The
+    loop only ever adds backend-reported step seconds to `clock`, so K
+    workers model K instances running in parallel regardless of how their
+    steps actually execute (virtual clock, or serialized on one host's
+    wall clock).  Backpressure is per worker: a full KV pool stalls this
+    worker's admission queue and nobody else's.
+    """
+
+    def __init__(self, backend: EngineBackend, wid: int = 0,
+                 max_batch_tokens: int = 8192, max_decode_batch: int = 64):
+        self.backend = backend
+        self.wid = wid
+        self.max_batch_tokens = max_batch_tokens
+        self.max_decode_batch = max_decode_batch
+        self.clock = 0.0
+        self.busy_seconds = 0.0          # step time only, no idle gaps
+        self.waiting: List[PendingRequest] = []
+        # decode set entries: [req, ttft_s, decode_steps_left]
+        self.decoding: List[list] = []
+        self.done: List[Completion] = []
+        # measured service rates (EWMA over observed steps) — these feed
+        # the router's live queue-depth estimate, so load balancing uses
+        # what this worker actually costs, not an a-priori model
+        self._prefill_s_per_tok = 0.0
+        self._decode_s_per_step = 0.0
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.decoding)
+
+    def ready_time(self) -> float:
+        """Earliest instant this worker can take its next step."""
+        if self.decoding:
+            return self.clock
+        return max(self.clock, self.waiting[0].arrival_s)
+
+    def backlog_seconds(self, t: float) -> float:
+        """Estimated seconds of outstanding work as seen at time `t`:
+        busy time already on the clock plus queued work at this worker's
+        measured service rates (0 until the first step is observed)."""
+        est = max(self.clock - t, 0.0)
+        est += sum(r.n_tokens for r in self.waiting) * self._prefill_s_per_tok
+        if self.decoding:
+            est += max(e[2] for e in self.decoding) * self._decode_s_per_step
+        return est
+
+    @staticmethod
+    def _ewma(old: float, new: float) -> float:
+        return new if old == 0.0 else 0.5 * old + 0.5 * new
+
+    def step(self) -> None:
+        """One scheduling step: a prefill batch if one can form under the
+        token budget and pool capacity, else one decode iteration
+        (prefill-prioritized, identical to the seed single-instance loop).
+        """
+        self.clock = self.ready_time()
+        batch: List[PendingRequest] = []
+        tok = 0
+        for r in self.waiting:
+            if r.arrival_s > self.clock:
+                break
+            if tok + r.n_tokens > self.max_batch_tokens and batch:
+                break
+            if not self.backend.can_admit(r, batch):
+                # strict FCFS under backpressure: never admit a younger
+                # request past one waiting on capacity (head-of-line
+                # wait beats unbounded starvation)
+                break
+            batch.append(r)
+            tok += r.n_tokens
+        if not batch and not self.decoding:
+            raise RuntimeError(
+                f"request {self.waiting[0].rid} ({self.waiting[0].n_tokens} "
+                "tokens) can never be admitted: KV pool too small "
+                "even with no other request running")
+        if batch:
+            for r in batch:
+                self.waiting.remove(r)
+            dt = self.backend.prefill(batch)
+            self.clock += dt
+            self.busy_seconds += dt
+            self._prefill_s_per_tok = self._ewma(self._prefill_s_per_tok,
+                                                 dt / max(tok, 1))
+            for r in batch:
+                if r.decode_steps <= 1:      # TTFT token was the output
+                    self.done.append(Completion(r.rid, r.arrival_s,
+                                                self.clock, self.clock,
+                                                self.wid))
+                    self.backend.finish(r)
+                else:
+                    self.decoding.append([r, self.clock - r.arrival_s,
+                                          r.decode_steps - 1])
+        else:
+            db = self.decoding[:self.max_decode_batch]
+            dt = self.backend.decode([e[0] for e in db])
+            self.clock += dt
+            self.busy_seconds += dt
+            self._decode_s_per_step = self._ewma(self._decode_s_per_step, dt)
+            for e in db:
+                e[2] -= 1
+            keep = []
+            for e in self.decoding:
+                if e[2] <= 0:
+                    self.done.append(Completion(e[0].rid, e[0].arrival_s,
+                                                e[0].arrival_s + e[1],
+                                                self.clock, self.wid))
+                    self.backend.finish(e[0])
+                else:
+                    keep.append(e)
+            self.decoding = keep
+
+
+# dispatch hook: (request, arrival time, workers) -> worker index
+DispatchFn = Callable[[PendingRequest, float, List[WorkerState]], int]
+
+
+def least_backlog_dispatch(req: PendingRequest, t: float,
+                           workers: List[WorkerState]) -> int:
+    """Default dispatch: the worker with the least estimated backlog."""
+    return min(range(len(workers)),
+               key=lambda i: (workers[i].backlog_seconds(t), i))
+
+
+class ClusterBatcher:
+    """Continuous batching across K workers sharing one arrival stream.
+
+    Each worker is an independent `WorkerState` over its own backend
+    (own KV pool, own clock, own backpressure); `dispatch` assigns every
+    arrival to a worker *at its arrival time*, seeing live worker state —
+    the Eq. 2 affinity router plugs in here (`serving.cluster`).  Events
+    are processed in global time order: an arrival is dispatched only
+    once every busy worker's next step lies at or after it, so queue
+    depths observed by the router are exactly what a real global
+    scheduler would see.
+    """
+
+    def __init__(self, backends: Sequence[EngineBackend],
+                 dispatch: Optional[DispatchFn] = None,
+                 max_batch_tokens: int = 8192, max_decode_batch: int = 64):
+        self.workers = [WorkerState(b, wid=i,
+                                    max_batch_tokens=max_batch_tokens,
+                                    max_decode_batch=max_decode_batch)
+                        for i, b in enumerate(backends)]
+        self.dispatch = dispatch or least_backlog_dispatch
+
+    def run(self, requests: Sequence[PendingRequest]) -> List[Completion]:
+        pending = sorted(requests)
+        i = 0
+        while i < len(pending) or any(w.has_work() for w in self.workers):
+            busy = [w for w in self.workers if w.has_work()]
+            t_work = min((w.ready_time() for w in busy), default=math.inf)
+            t_arr = pending[i].arrival_s if i < len(pending) else math.inf
+            if t_arr <= t_work:
+                req = pending[i]
+                i += 1
+                wid = int(self.dispatch(req, t_arr, self.workers))
+                self.workers[wid].waiting.append(req)
+            else:
+                min(busy, key=lambda w: (w.ready_time(), w.wid)).step()
+        done = [c for w in self.workers for c in w.done]
+        done.sort(key=lambda c: c.done_s)       # stable: in-step order kept
+        return done
+
+
 class ContinuousBatcher:
     """Single-instance continuous batching over an `EngineBackend`.
 
     Backward-compatible construction: passing `prefill_time_fn` /
     `decode_time_fn` (the seed API) wraps them in a `SimBackend`.
+    Internally this is a one-worker `ClusterBatcher`.
     """
 
     def __init__(self, prefill_time_fn: Optional[Callable[[int], float]]
@@ -170,65 +346,7 @@ class ContinuousBatcher:
         self.max_decode_batch = max_decode_batch
 
     def run(self, requests: List[PendingRequest]) -> List[Completion]:
-        pending = sorted(requests)
-        waiting: List[PendingRequest] = []
-        # decode set entries: [req, ttft_s, decode_steps_left]
-        decoding: List[list] = []
-        done: List[Completion] = []
-        t = 0.0
-        i = 0
-        while i < len(pending) or waiting or decoding:
-            # admit arrivals
-            while i < len(pending) and pending[i].arrival_s <= t:
-                waiting.append(pending[i])
-                i += 1
-            if not waiting and not decoding:
-                t = pending[i].arrival_s
-                continue
-            batch, tok = [], 0
-            if waiting:
-                # prefill-priority: batch under the token budget; requests
-                # the backend has no capacity for wait (KV-pool backpressure)
-                for r in list(waiting):
-                    if tok + r.n_tokens > self.max_batch_tokens and batch:
-                        break
-                    if not self.backend.can_admit(r, batch):
-                        # strict FCFS under backpressure: never admit a
-                        # younger request past one waiting on capacity
-                        # (head-of-line wait beats unbounded starvation)
-                        break
-                    batch.append(r)
-                    tok += r.n_tokens
-                if not batch and not decoding:
-                    raise RuntimeError(
-                        f"request {waiting[0].rid} ({waiting[0].n_tokens} "
-                        "tokens) can never be admitted: KV pool too small "
-                        "even with no other request running")
-            if batch:
-                for r in batch:
-                    waiting.remove(r)
-                t += self.backend.prefill(batch)
-                for r in batch:
-                    if r.decode_steps <= 1:      # TTFT token was the output
-                        done.append(Completion(r.rid, r.arrival_s,
-                                               t, t))
-                        self.backend.finish(r)
-                    else:
-                        decoding.append([r, t - r.arrival_s,
-                                         r.decode_steps - 1])
-            else:
-                # one decode iteration for the running batch
-                batch = decoding[:self.max_decode_batch]
-                t += self.backend.decode([e[0] for e in batch])
-                for e in batch:
-                    e[2] -= 1
-                keep = []
-                for e in decoding:
-                    if e[2] <= 0:
-                        done.append(Completion(e[0].rid, e[0].arrival_s,
-                                               e[0].arrival_s + e[1], t))
-                        self.backend.finish(e[0])
-                    else:
-                        keep.append(e)
-                decoding = keep
-        return done
+        return ClusterBatcher(
+            [self.backend], dispatch=lambda req, t, ws: 0,
+            max_batch_tokens=self.max_batch_tokens,
+            max_decode_batch=self.max_decode_batch).run(requests)

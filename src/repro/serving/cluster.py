@@ -1,0 +1,288 @@
+"""Multi-instance real serving: K JAX engines over sharded item caches.
+
+This is the distributed half of the paper running on real engines rather
+than the analytic simulator: `ClusterEngine` instantiates K
+`serving.batch_engine.BatchEngine` workers — each with its own
+`PagedKVPool`, its own continuous-batching queue and its own
+Algorithm-1 item-cache shard (hot items replicated everywhere, long-tail
+items resident only on their shard) — behind the Eq. 2 affinity
+scheduler, which dispatches every arrival using *live* per-worker
+backlog and the real placement map.
+
+Residency is enforced, not simulated: a request routed to a worker whose
+shard lacks one of its item blocks triggers an explicit transfer step —
+the bytes are pulled from the holder shard through
+`core.item_cache.ShardClient` (ledgered per block) and the worker's
+clock is charged the modeled network time (`core.cost_model.fetch_time_s`
+with the paper's 100 Gbps interconnect).  Routing therefore changes
+*where* a request runs and what it costs, never *what* it decodes: the
+staged bytes are identical on every worker, which the parity tests pin
+down.
+
+Wall-clock semantics: the K engines execute serially on this host, but
+each worker's clock accumulates only its own backend-reported step
+seconds — the cluster models K instances running in parallel on
+dedicated hardware (per-worker TTFT is each instance's own wall work).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import assembly as ASM
+from repro.core import cost_model as CM
+from repro.core import engine as ENG
+from repro.core import item_cache as IC
+from repro.core import scheduler as SCH
+from repro.serving.batch_engine import BatchEngine
+from repro.serving.batching import (
+    ClusterBatcher,
+    Completion,
+    JaxEngineBackend,
+    PendingRequest,
+    WorkerState,
+)
+from repro.serving.kv_pool import pool_for
+
+
+class ClusterWorkerBackend(JaxEngineBackend):
+    """`JaxEngineBackend` plus the explicit item-block transfer step.
+
+    A request whose plan references blocks not resident on this worker's
+    shard pays a modeled network transfer the first time it prefills;
+    the bytes really were pulled from the peer shard (`ShardClient`
+    ledger), so the step is measurable in both seconds and bytes.
+    """
+
+    def __init__(
+        self,
+        engine: BatchEngine,
+        shard: Optional[IC.ShardClient] = None,
+        mode: str = "rcllm",
+        hw: CM.Hardware = CM.V5E_1,
+    ):
+        super().__init__(engine, mode=mode, plans={})
+        self.shard = shard
+        self.hw = hw
+        self.pending_transfer_s: Dict[int, float] = {}  # rid -> seconds owed
+        self.transfer_seconds = 0.0
+
+    def prefill(self, batch: Sequence[PendingRequest]) -> float:
+        dt = super().prefill(batch)
+        moved = sum(self.pending_transfer_s.pop(r.rid, 0.0) for r in batch)
+        self.transfer_seconds += moved
+        return dt + moved
+
+    def finish(self, req: PendingRequest) -> None:
+        # unlike the single-engine backend (caller owns and may reuse the
+        # plans dict across passes), the cluster binds each plan exactly
+        # once at dispatch — release its assembled KV with the request,
+        # or a long run retains every request's (n, L, Hkv, Dh) arrays
+        super().finish(req)
+        self.plans.pop(req.rid, None)
+        self.pending_transfer_s.pop(req.rid, None)
+
+
+@dataclass
+class WorkerReport:
+    worker: int
+    n_requests: int
+    mean_hit_rate: Optional[float]   # None when no request ran here
+    transfer_blocks: int
+    transfer_tokens: int
+    transfer_bytes: int
+    transfer_seconds: float
+    pool_peak_pages: int
+    busy_seconds: float
+
+
+@dataclass
+class ClusterReport:
+    """What one cluster run produced, per request and per worker."""
+
+    completions: List[Completion]
+    assigned: Dict[int, int]  # rid -> worker
+    hit_rate: Dict[int, float]  # rid -> item-cache hit rate on its worker
+    generated: Dict[int, List[int]]  # rid -> decoded tokens
+    workers: List[WorkerReport]
+    policy: str
+
+    def ttft(self) -> np.ndarray:
+        done = sorted(self.completions, key=lambda c: c.rid)
+        return np.asarray([c.first_token_s - c.arrival_s for c in done])
+
+    def mean_hit_rate(self) -> float:
+        return float(np.mean(list(self.hit_rate.values())))
+
+    def summary(self) -> dict:
+        ttft = self.ttft()
+        return {
+            "policy": self.policy,
+            "requests": len(self.completions),
+            "mean_hit_rate": round(self.mean_hit_rate(), 4),
+            "ttft_p50_s": float(np.percentile(ttft, 50)),
+            "ttft_p90_s": float(np.percentile(ttft, 90)),
+            "ttft_mean_s": float(ttft.mean()),
+            "transfer_blocks": sum(w.transfer_blocks for w in self.workers),
+            "transfer_mbytes": round(
+                sum(w.transfer_bytes for w in self.workers) / 1e6, 3
+            ),
+            "transfer_seconds": round(
+                sum(w.transfer_seconds for w in self.workers), 6
+            ),
+        }
+
+
+class ClusterEngine:
+    """K real engine workers behind the Eq. 2 affinity dispatcher.
+
+    `system` is an `RcLLMSystem` whose placement was built with
+    `k_instances == k`; each worker w serves placement shard w.  `mode`
+    selects the prefill path ("rcllm" beyond-prefix selective, or "full"
+    recompute — the latter never touches the item cache, so transfers
+    and hit rates degenerate to the placement map only).
+    """
+
+    def __init__(
+        self,
+        system,
+        k: int,
+        mode: str = "rcllm",
+        policy: str = "affinity",
+        alpha: float = 0.7,
+        beta: float = 0.3,
+        page_size: int = 16,
+        n_pages: int = 512,
+        max_batch_tokens: int = 4096,
+        max_decode_batch: int = 64,
+        sel: Optional[ENG.SelectiveConfig] = None,
+        hw: CM.Hardware = CM.V5E_1,
+        seed: int = 0,
+    ):
+        if system.placement.k != k:
+            raise ValueError(
+                f"placement has {system.placement.k} shards, cluster wants "
+                f"{k} workers: rebuild the system with k_instances={k}"
+            )
+        if mode == "rcllm" and system.item_store is None:
+            raise ValueError(
+                "mode='rcllm' needs the system's item store (the sharded "
+                "item-KV pool); build the system with one, or use "
+                "mode='full'"
+            )
+        self.system = system
+        self.k = k
+        self.mode = mode
+        self.hw = hw
+        self.backends: List[ClusterWorkerBackend] = []
+        for w in range(k):
+            engine = BatchEngine(
+                system.params,
+                system.cfg,
+                pool=pool_for(system.cfg, page_size=page_size, n_pages=n_pages),
+                sel=sel or ENG.SelectiveConfig(),
+            )
+            shard = None
+            if system.item_store is not None:
+                shard = IC.ShardClient(system.item_store, w)
+            backend = ClusterWorkerBackend(engine, shard, mode=mode, hw=hw)
+            self.backends.append(backend)
+        self.scheduler = SCH.ClusterScheduler(
+            system.placement, policy=policy, alpha=alpha, beta=beta, seed=seed
+        )
+        self.batcher = ClusterBatcher(
+            self.backends,
+            dispatch=self._dispatch,
+            max_batch_tokens=max_batch_tokens,
+            max_decode_batch=max_decode_batch,
+        )
+        self._trace_by_rid: Dict[int, object] = {}
+        self.assigned: Dict[int, int] = {}
+        self.hit_rate: Dict[int, float] = {}
+
+    # ------------------------------ dispatch ------------------------------
+    def _dispatch(
+        self, req: PendingRequest, t: float, workers: List[WorkerState]
+    ) -> int:
+        rq = self._trace_by_rid[req.rid]
+        depths = [w.backlog_seconds(t) for w in workers]
+        wid = self.scheduler.dispatch(rq.candidate_items, depths)
+        self._bind(req, rq, wid)
+        return wid
+
+    def _bind(self, req: PendingRequest, rq, wid: int) -> None:
+        """Build the request's plan *for the chosen worker*, stage its
+        item blocks against that worker's shard (recording transfers),
+        and hand plan + assembled KV to the worker's backend."""
+        system = self.system
+        backend = self.backends[wid]
+        plan = system.plan_for(rq, wid)
+        req.tokens = plan.tokens
+        req.n_tokens = plan.n
+        self.assigned[req.rid] = wid
+        n_item = plan.n_local + plan.n_remote + plan.n_miss
+        self.hit_rate[req.rid] = plan.n_local / max(n_item, 1)
+        if self.mode != "rcllm":
+            return
+        items = np.unique(plan.block_item[plan.source == ASM.FROM_ITEM])
+        staged, moved_tokens = backend.shard.stage(items)
+        ck, cv, have = ASM.gather_cached_kv(
+            plan,
+            IC.StagedBlocks(staged),
+            system.semantic,
+            wid,
+            system.cfg.n_layers,
+            system.cfg.n_kv_heads,
+            system.cfg.resolved_head_dim,
+        )
+        backend.plans[req.rid] = (plan, ck, cv, have)
+        if moved_tokens:
+            backend.pending_transfer_s[req.rid] = CM.fetch_time_s(
+                system.cfg, self.hw, 0, moved_tokens
+            )
+
+    # -------------------------------- run ---------------------------------
+    def run(self, trace: Sequence, decode_steps: int = 4) -> ClusterReport:
+        """Serve a synthetic request trace end to end. -> ClusterReport."""
+        pend = []
+        for rid, rq in enumerate(trace):
+            self._trace_by_rid[rid] = rq
+            req = PendingRequest(
+                arrival_s=float(rq.arrival_s),
+                rid=rid,
+                n_tokens=0,  # set at dispatch, once the plan exists
+                decode_steps=decode_steps,
+            )
+            pend.append(req)
+        completions = self.batcher.run(pend)
+        generated = {}
+        workers = []
+        for w, backend in enumerate(self.backends):
+            generated.update(backend.generated)
+            rids = [r for r, i in self.assigned.items() if i == w]
+            shard = backend.shard
+            hit = None
+            if rids:
+                hit = float(np.mean([self.hit_rate[r] for r in rids]))
+            report = WorkerReport(
+                worker=w,
+                n_requests=len(rids),
+                mean_hit_rate=hit,
+                transfer_blocks=len(shard.transfers) if shard else 0,
+                transfer_tokens=shard.transferred_tokens() if shard else 0,
+                transfer_bytes=shard.transferred_bytes() if shard else 0,
+                transfer_seconds=backend.transfer_seconds,
+                pool_peak_pages=backend.engine.pool.peak_pages,
+                busy_seconds=self.batcher.workers[w].busy_seconds,
+            )
+            workers.append(report)
+        return ClusterReport(
+            completions=completions,
+            assigned=dict(self.assigned),
+            hit_rate=dict(self.hit_rate),
+            generated=generated,
+            workers=workers,
+            policy=self.scheduler.policy,
+        )

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 from jax import lax

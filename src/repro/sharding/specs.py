@@ -6,13 +6,12 @@ per tensor.  These are the *baseline* layouts; §Perf hillclimbs mutate them.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import GNNConfig, LMConfig, RecsysConfig
+from repro.configs.base import LMConfig, RecsysConfig
 from repro.launch.mesh import axis_size, data_axes
 
 
@@ -40,7 +39,6 @@ def lm_param_specs(cfg: LMConfig, mesh, *, mode: str = "train") -> Dict[str, Any
     m = "model"
     msz = mesh.shape[m]
     dax = data_axes(mesh)
-    dh = cfg.resolved_head_dim
     kv_heads_div = cfg.n_kv_heads % msz == 0
 
     # serve mode: shard the d_model (input) dim of projections over data

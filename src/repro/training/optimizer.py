@@ -6,7 +6,7 @@ state to O(rows + cols) per matrix (see DESIGN.md §8).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -116,7 +116,6 @@ def adafactor(lr: float = 1e-3, decay: float = 0.8, eps1: float = 1e-30,
             new_p = p.astype(jnp.float32) - lr * scale * u
             return new_p.astype(p.dtype), new_s
 
-        is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
         flat_p, tdef = jax.tree_util.tree_flatten(params)
         flat_g = tdef.flatten_up_to(grads)
         flat_s = tdef.flatten_up_to(state.inner)

@@ -11,14 +11,11 @@ Features exercised by tests/examples:
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterator, Optional
+from dataclasses import dataclass
+from typing import Callable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import checkpoint as CKPT
 from repro.training import optimizer as OPT

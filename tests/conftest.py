@@ -2,6 +2,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (tier-1 CI runs -m 'not slow'; the full "
+        "suite still covers these)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -125,6 +125,7 @@ def test_paged_decode_matches_full_forward(tiny, rng):
             last[rid] = int(np.argmax(out[i]))
 
 
+@pytest.mark.slow
 def test_selective_batch_prefill_matches_engine(tiny_system):
     """The rcllm-mode batched prefill is the same selective path as the
     single-request engine — logits must agree exactly, and the pool must

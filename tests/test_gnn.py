@@ -2,12 +2,14 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import registry as R
 from repro.gnn import sampler as S
 from repro.gnn import schnet as G
 
 
+@pytest.mark.slow
 def test_graph_regime(rng):
     cfg = R.get_config("schnet", smoke=True)
     n, e, df, nc = 50, 200, 32, 7
@@ -24,6 +26,7 @@ def test_graph_regime(rng):
     assert logits.shape == (n, nc) and not bool(jnp.isnan(logits).any())
 
 
+@pytest.mark.slow
 def test_molecule_regime(rng):
     cfg = R.get_config("schnet", smoke=True)
     p = G.init_params(jax.random.PRNGKey(0), cfg)
@@ -76,7 +79,6 @@ def test_sampled_subgraph_trains():
     g = S.CSRGraph(500, src, dst)
     rng = np.random.default_rng(1)
     sub = S.sample_subgraph(g, np.arange(8), (4, 2), rng)
-    n = len(sub["node_ids"])
     feats = rng.normal(size=(500, 16)).astype(np.float32)
     coords = rng.normal(size=(500, 3)).astype(np.float32)
     p = G.init_params(jax.random.PRNGKey(0), cfg, d_feat=16, n_classes=5)

@@ -67,6 +67,32 @@ def test_selective_attention_sweep(R_, S, window, n_hh, rng):
                                atol=1e-5, rtol=1e-5)
 
 
+def test_selective_mha_rejects_jit_tracing():
+    """selective_mha is documented as not jit-traceable end-to-end (the
+    block-liveness map needs concrete positions/mask); it must fail with
+    a clear error at the wrapper, not deep inside the host-side
+    computation."""
+    # local generator: draining the session rng here would shift the
+    # stream the order-sensitive sweep tests above draw from
+    rng = np.random.default_rng(3)
+    B, R_, S, Hq, Hkv, D = 1, 16, 64, 2, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, R_, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    qpos = jnp.asarray(np.sort(rng.choice(S, R_, replace=False)), jnp.int32)
+    hh = jnp.asarray(np.zeros(S, np.int8))
+
+    jitted = jax.jit(lambda qp, m: selective_mha(
+        q, qp, k, v, m, window=8, q_block=16, kv_block=32, interpret=True))
+    with pytest.raises(TypeError, match="not .*jit|jit.*host-side|traced"):
+        jitted(qpos, hh)
+    # closing over concrete positions/mask and jitting around the wrapper
+    # stays supported
+    out = selective_mha(q, qpos, k, v, hh, window=8, q_block=16,
+                        kv_block=32, interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+
+
 @pytest.mark.parametrize("npages,page,d,n_logical,rotate", [
     (16, 8, 32, 6, True), (8, 16, 64, 8, False), (32, 8, 128, 4, True)])
 def test_block_gather_sweep(npages, page, d, n_logical, rotate, rng):

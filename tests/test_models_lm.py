@@ -14,6 +14,7 @@ from repro.models import transformer as T
 LM_ARCHS = [a for a in R.ASSIGNED if R.family_of(a) == "lm"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_smoke_forward_and_train(arch):
     cfg = R.get_config(arch, smoke=True)

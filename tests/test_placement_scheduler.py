@@ -1,6 +1,5 @@
 """Algorithm 1 + Eq. 2 scheduler: invariants and property-based tests."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st  # optional dep
 
 from repro.core import placement as PL

@@ -1,9 +1,6 @@
 """RcLLM core: semantic cache, assembly, selective engine, baselines,
 simulator — the paper's mechanisms end-to-end on a tiny model."""
-import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -37,6 +37,7 @@ def _batch(cfg, B, with_labels=True):
     return b
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", RS_ARCHS)
 def test_smoke_train_score_retrieval(arch):
     cfg = R.get_config(arch, smoke=True)

@@ -2,7 +2,6 @@
 and dry-run artifact integrity."""
 import glob
 import json
-import os
 
 import numpy as np
 import pytest
@@ -10,7 +9,7 @@ from _hypothesis_compat import given, settings, st  # optional dep
 
 from repro.configs import registry as REG
 from repro.core import cost_model as CM
-from repro.serving.batching import Completion, ContinuousBatcher, PendingRequest
+from repro.serving.batching import ContinuousBatcher, PendingRequest
 
 
 def test_continuous_batcher_completes_all():

@@ -100,6 +100,7 @@ def test_checkpoint_roundtrip_and_gc():
                                           np.asarray(b, np.float32))
 
 
+@pytest.mark.slow
 def test_train_loop_resume_and_failures():
     cfg = R.get_config("gemma-7b", smoke=True)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
