@@ -1,0 +1,165 @@
+"""Attention-backend benchmark: jnp vs pallas-interpret, batched vs loop.
+
+Two comparisons on the real serving engine (tiny CPU model):
+
+* **backend** — the same batched rcllm prefill and one paged decode
+  iteration timed under ``attn_backend="jnp"`` (masked-einsum reference)
+  and ``attn_backend="pallas"`` (flash/selective kernels through the
+  Pallas *interpreter* — CPU has no Mosaic lowering, so this measures
+  the seam's overhead off-TPU, not kernel speed; on TPU the same code
+  path compiles for real).
+
+* **batched_prefill** — the beyond-prefix selective prefill as one
+  bucketed batched step (`engine.selective_prefill_batch` + the fused
+  pool scatter) vs the legacy per-request loop, at growing batch sizes.
+  Requests are drawn from one (padded length) bucket — the composition
+  the continuous batcher produces under load and the case batching
+  exists for; the batched path amortizes layer-0 dispatch, host scoring
+  rounds, the selective-layer dispatch and the arena copies across the
+  bucket.  The JSON asserts it is strictly faster at batch 4 (the CI
+  regression guard reads this artifact).
+
+Emits the standard ``name,us_per_call,derived`` CSV rows plus
+``attn_backend.json`` in `out_dir`; ``--quick`` shrinks repeats (CI).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from collections import Counter
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.rcllm import make_tiny_system
+from repro.data import synth as SY
+from repro.serving.batch_engine import BatchEngine
+from repro.serving.kv_pool import pool_for
+from repro.serving.workload import rcllm_batch_requests
+
+DECODE_STEPS = 2
+
+
+def _best_of(fn, repeats: int) -> float:
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _engine(system, backend: str, batched: bool) -> BatchEngine:
+    cfg = dataclasses.replace(system.cfg, attn_backend=backend)
+    return BatchEngine(
+        system.params,
+        cfg,
+        pool=pool_for(cfg, n_pages=512),
+        bucket=64,
+        batched_selective=batched,
+    )
+
+
+def _prefill_pass(eng: BatchEngine, brs) -> None:
+    eng.prefill(brs, mode="rcllm")
+    for r in brs:
+        eng.release(r.rid)
+
+
+def run(out_dir: str = "results/bench", quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    repeats = 3 if quick else 6
+    batches = (1, 4) if quick else (1, 2, 4)
+
+    system, pool_rv, prof, _ = make_tiny_system(
+        n_items=60, n_requests_hist=30, k_instances=2, n_layers=2, d_model=32
+    )
+    trace = SY.make_trace(
+        system.catalog,
+        pool_rv,
+        prof,
+        3 * max(batches),
+        qps=4.0,
+        n_users=6,
+        n_candidates=8,
+        reviews_per_user=1,
+        seed=13,
+    )
+    # one shape bucket: keep the requests whose padded length lands in
+    # the trace's most common 64-token bucket, so a batch really stacks
+    # into one jitted step (the composition continuous batching forms
+    # under load — heterogeneous batches split across buckets and are
+    # measured end-to-end by bench_serving instead)
+    all_brs = rcllm_batch_requests(system, trace, n_reserve=DECODE_STEPS)
+    pads = [-(-r.plan.n // 64) * 64 for r in all_brs]
+    bucket_pad = Counter(pads).most_common(1)[0][0]
+    brs = [r for r, p in zip(all_brs, pads) if p == bucket_pad]
+    assert len(brs) >= max(batches), (len(brs), bucket_pad)
+    out = {"quick": quick, "decode_steps": DECODE_STEPS, "backend": {}}
+
+    # --- jnp vs pallas-interpret: batched rcllm prefill + one decode ---
+    bsz = min(4, max(batches))
+    for backend in ("jnp", "pallas"):
+        eng = _engine(system, backend, batched=True)
+        _prefill_pass(eng, brs[:bsz])               # warm the jit caches
+        prefill_s = _best_of(lambda: _prefill_pass(eng, brs[:bsz]), repeats)
+        logits = eng.prefill(brs[:bsz], mode="rcllm")
+        rids = [r.rid for r in brs[:bsz]]
+        last = [int(np.argmax(lg)) for lg in logits]
+        eng.decode(rids, last)                      # warm decode shapes
+        decode_s = _best_of(lambda: eng.decode(rids, last), repeats)
+        for r in brs[:bsz]:
+            eng.release(r.rid)
+        out["backend"][backend] = {
+            "prefill_batch%d_s" % bsz: prefill_s,
+            "decode_step_s": decode_s,
+        }
+        emit(
+            f"attn_backend/{backend}",
+            prefill_s * 1e6,
+            f"decode_step_us={decode_s * 1e6:.1f}",
+        )
+    jnp_s = out["backend"]["jnp"]["prefill_batch%d_s" % bsz]
+    pallas_s = out["backend"]["pallas"]["prefill_batch%d_s" % bsz]
+    out["pallas_interpret_over_jnp_prefill"] = round(pallas_s / jnp_s, 3)
+
+    # --- batched rcllm prefill vs the per-request loop ---
+    out["batched_prefill"] = {}
+    for bsz in batches:
+        eng_b = _engine(system, "jnp", batched=True)
+        eng_l = _engine(system, "jnp", batched=False)
+        _prefill_pass(eng_b, brs[:bsz])
+        _prefill_pass(eng_l, brs[:bsz])
+        t_batched = _best_of(lambda: _prefill_pass(eng_b, brs[:bsz]), repeats)
+        t_loop = _best_of(lambda: _prefill_pass(eng_l, brs[:bsz]), repeats)
+        speedup = t_loop / t_batched
+        out["batched_prefill"][str(bsz)] = {
+            "loop_s": t_loop,
+            "batched_s": t_batched,
+            "speedup": round(speedup, 3),
+        }
+        emit(
+            f"attn_backend/batched_b{bsz}",
+            t_batched * 1e6,
+            f"loop_us={t_loop * 1e6:.1f} speedup={speedup:.2f}",
+        )
+        # the acceptance bar: batching must pay for itself at batch 4.
+        # Full runs (the committed artifact) demand strictly > 1; quick
+        # CI runs on noisy shared runners get a slack bar that still
+        # catches a structurally slower batched path.
+        bar = 0.85 if quick else 1.0
+        assert bsz < 4 or speedup > bar, (
+            f"batched rcllm prefill slower than the per-request loop at "
+            f"batch {bsz}: {t_batched:.4f}s vs {t_loop:.4f}s "
+            f"(speedup {speedup:.2f} <= {bar})"
+        )
+    out["batched_speedup_at_4"] = out["batched_prefill"]["4"]["speedup"]
+
+    with open(os.path.join(out_dir, "attn_backend.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -70,10 +70,12 @@ def run(out_dir: str = "results/bench", quick: bool = False) -> None:
 
     # --- jax engine: real batched prefill + paged decode, wall clock ---
     for mode in ("full", "rcllm"):
-        # two passes over the same workload: the first warms the jit
-        # caches at every shape bucket, the second is measured — without
-        # it, trace/compile time dominates sub-ms steps on tiny models
-        for _pass in range(2):
+        # three passes over the same workload: the first warms the jit
+        # caches, the second warms the *steady-state* shape buckets (a
+        # fast clock composes different prefill batches than the
+        # compile-heavy first pass), the third is measured — without
+        # this, trace/compile time dominates sub-ms steps on tiny models
+        for _pass in range(3):
             engine = BatchEngine(system.params, cfg,
                                  pool=pool_for(cfg, n_pages=512))
             backend = JaxEngineBackend(engine, mode=mode,

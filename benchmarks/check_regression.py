@@ -1,0 +1,163 @@
+"""Bench-smoke regression guard.
+
+CI's bench-smoke job used to only *upload* the quick-run artifacts; this
+turns them into a gate: the fresh quick-run numbers are compared against
+the committed full-run baselines in ``results/bench/*.json`` and the job
+fails on regression instead of silently archiving one.
+
+Quick runs are smaller than the committed full runs (fewer requests, so
+less queueing) and CI machines vary, hence the *generous* tolerances:
+
+* ``time`` metrics (lower is better) may be up to ``--time-slack`` times
+  the baseline;
+* ``rate`` metrics (higher is better, already in [0, 1]) may drop at
+  most ``--rate-slack`` absolutely;
+* ``floor`` metrics must stay above an absolute bar regardless of the
+  baseline (e.g. batched-prefill speedup > 1: batching must never
+  regress into being slower than the per-request loop).
+
+A metric whose file or key is missing from the *baseline* is skipped
+(new benchmarks adopt the guard on their first committed artifact); a
+file missing from the *current* run fails — the smoke didn't produce
+what it was asked for.
+
+Usage (what CI runs)::
+
+    PYTHONPATH=src python -m benchmarks.run \\
+        --only serving,cluster,attn_backend --quick --out /tmp/bench
+    PYTHONPATH=src python -m benchmarks.check_regression \\
+        --baseline results/bench --current /tmp/bench
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Metric:
+    file: str
+    path: Tuple[str, ...]
+    kind: str  # "time" | "rate" | "floor"
+    floor: float = 0.0  # only read for kind="floor"
+
+    @property
+    def name(self) -> str:
+        return f"{self.file}:{'.'.join(self.path)}"
+
+
+METRICS = (
+    Metric("serving.json", ("jax/full", "ttft_p50_s"), "time"),
+    Metric("serving.json", ("jax/rcllm", "ttft_p50_s"), "time"),
+    Metric("cluster.json", ("policies", "affinity", "ttft_p50_s"), "time"),
+    Metric("cluster.json", ("policies", "affinity", "mean_hit_rate"), "rate"),
+    Metric("cluster.json", ("affinity_hit_gain_vs_round_robin",), "rate"),
+    Metric("attn_backend.json", ("batched_prefill", "4", "batched_s"), "time"),
+    # the committed full-run artifact shows > 1; quick runs on shared
+    # runners get timing noise, so the guard's bar is the structural one
+    Metric("attn_backend.json", ("batched_speedup_at_4",), "floor", floor=0.85),
+)
+
+
+def _load(dirname: str, fname: str) -> Optional[dict]:
+    p = os.path.join(dirname, fname)
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def _dig(doc: dict, path: Tuple[str, ...]):
+    cur = doc
+    for key in path:
+        if not isinstance(cur, dict) or key not in cur:
+            return None
+        cur = cur[key]
+    return cur
+
+
+def check(
+    baseline_dir: str, current_dir: str, time_slack: float, rate_slack: float
+) -> int:
+    """Compare current quick-run artifacts against the baselines.
+    Prints one line per metric; -> number of failures."""
+    failures = 0
+    cur_docs, base_docs = {}, {}
+    for m in METRICS:
+        if m.file not in base_docs:
+            base_docs[m.file] = _load(baseline_dir, m.file)
+            cur_docs[m.file] = _load(current_dir, m.file)
+        base_doc, cur_doc = base_docs[m.file], cur_docs[m.file]
+        if base_doc is None:
+            print(f"SKIP  {m.name}: no committed baseline")
+            continue
+        base = _dig(base_doc, m.path)
+        if base is None:
+            print(f"SKIP  {m.name}: metric absent from baseline")
+            continue
+        if cur_doc is None:
+            print(f"FAIL  {m.name}: {m.file} missing from current run")
+            failures += 1
+            continue
+        cur = _dig(cur_doc, m.path)
+        if cur is None:
+            print(f"FAIL  {m.name}: metric missing from current run")
+            failures += 1
+            continue
+        if m.kind == "time":
+            ok = cur <= base * time_slack
+            detail = (
+                f"current={cur:.6g}s baseline={base:.6g}s "
+                f"(allowed <= {time_slack:g}x)"
+            )
+        elif m.kind == "rate":
+            ok = cur >= base - rate_slack
+            detail = (
+                f"current={cur:.4g} baseline={base:.4g} "
+                f"(allowed drop <= {rate_slack:g})"
+            )
+        else:  # floor
+            ok = cur > m.floor
+            detail = f"current={cur:.4g} (must stay > {m.floor:g})"
+        print(f"{'ok   ' if ok else 'FAIL '} {m.name}: {detail}")
+        failures += 0 if ok else 1
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--baseline",
+        default="results/bench",
+        help="committed full-run artifacts",
+    )
+    ap.add_argument(
+        "--current", required=True, help="fresh quick-run artifacts to vet"
+    )
+    ap.add_argument(
+        "--time-slack",
+        type=float,
+        default=4.0,
+        help="time metrics may be up to this x baseline",
+    )
+    ap.add_argument(
+        "--rate-slack",
+        type=float,
+        default=0.15,
+        help="rate metrics may drop at most this (absolute)",
+    )
+    args = ap.parse_args(argv)
+    failures = check(args.baseline, args.current, args.time_slack, args.rate_slack)
+    if failures:
+        print(f"{failures} benchmark regression(s) vs {args.baseline}")
+        return 1
+    print("no benchmark regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,7 @@ default sizes reproduce the paper's structure in full.
   kernels     Pallas kernel probes + analytic FLOP reductions
   serving     continuous batching: sim-engine vs real jax-engine TTFT
   cluster     K real engines + sharded item caches: dispatch policies
+  attn_backend  jnp vs pallas attention; batched vs per-request prefill
 
 Each entry also writes a JSON artifact into ``--out`` (see
 docs/benchmarks.md for the full flag and output reference).
@@ -28,7 +29,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma-separated subset of fig6|fig8_9|fig10|fig11|"
-                         "tableIII|kernels|serving|cluster, or all")
+                         "tableIII|kernels|serving|cluster|attn_backend, "
+                         "or all")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--planted", action="store_true",
                     help="tableIII: train the planted-preference ranker")
@@ -61,6 +63,9 @@ def main(argv=None) -> int:
                 args.out, quick=args.quick),
         "cluster": lambda: __import__(
             "benchmarks.bench_cluster", fromlist=["run"]).run(
+                args.out, quick=args.quick),
+        "attn_backend": lambda: __import__(
+            "benchmarks.bench_attn_backend", fromlist=["run"]).run(
                 args.out, quick=args.quick),
     }
     only = {s.strip() for s in args.only.split(",") if s.strip()}

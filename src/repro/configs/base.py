@@ -43,6 +43,11 @@ class LMConfig:
     attn_kv_chunk: int = 1024
     remat: bool = True
     use_pallas: bool = False        # Pallas kernels (TPU); pure-JAX otherwise
+    # Serving attention backend: "jnp" (einsum/chunked reference) or
+    # "pallas" (flash/selective kernels — interpret mode off-TPU, real
+    # Mosaic lowering on TPU).  Layer-0 Eq. 3 scoring always runs jnp
+    # (it needs materialized attention probabilities).
+    attn_backend: str = "jnp"
     causal_block_pairing: bool = False  # §Perf: skip fully-masked causal blocks
     optimizer: str = "adamw"        # adamw | adafactor
     # RcLLM serving integration

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,23 @@ import numpy as np
 
 from repro.configs.base import LMConfig
 from repro.core.assembly import FROM_ITEM, FROM_SEMANTIC, AssemblyPlan
+from repro.kernels import default_interpret
+from repro.kernels.flash_attention.ops import mha_flash
+from repro.kernels.selective_attention.ops import (build_block_liveness,
+                                                  selective_mha)
 from repro.models import layers as L
+
+# Pallas tile sizes for the serving-path kernels.  The engine's shape
+# buckets are multiples of 64, so these tiles add no padding on the tiny
+# CI models while still being MXU-shaped (padded to 128 lanes by Mosaic)
+# on real hardware.
+PALLAS_Q_BLOCK = 64
+PALLAS_KV_BLOCK = 64
+
+# Placeholder liveness map for the jnp backend: the jitted selective
+# entry points take `live` positionally so the pallas/jnp traces share
+# one signature; the jnp trace never reads it.
+_NO_LIVE = np.zeros((1, 1, 1), np.int32)
 
 
 @dataclass
@@ -58,7 +74,22 @@ def qkv_proj(h, lp, cfg: LMConfig, positions):
 
 
 def full_attn(q, k, v, cfg: LMConfig, q_pos, k_pos, return_probs=False,
-              k_valid=None):
+              k_valid=None, contiguous=False):
+    """Single-request attention: q (Sq, Hq, Dh) vs k/v (Sk, Hkv, Dh).
+
+    `cfg.attn_backend` picks the implementation.  The pallas route
+    (flash kernel) needs `contiguous=True` — the caller's assertion that
+    q_pos/k_pos are the standard aranges, which the kernel's iota-based
+    causal mask assumes — and cannot return probabilities (flash never
+    materializes P), so Eq. 3 layer-0 scoring always takes the jnp path.
+    """
+    if cfg.attn_backend == "pallas" and contiguous and not return_probs:
+        kv_valid = None if k_valid is None else k_valid[None]
+        o = mha_flash(q[None], k[None], v[None], kv_valid=kv_valid,
+                      causal=True, q_block=PALLAS_Q_BLOCK,
+                      kv_block=PALLAS_KV_BLOCK,
+                      interpret=default_interpret())[0]
+        return o
     Hq, Hkv = q.shape[1], k.shape[1]
     G = Hq // Hkv
     scale = 1.0 / (q.shape[-1] ** 0.5)
@@ -72,6 +103,36 @@ def full_attn(q, k, v, cfg: LMConfig, q_pos, k_pos, return_probs=False,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("hgqk,khd->qhgd", p.astype(v.dtype), v)
     o = o.reshape(q.shape[0], Hq, -1)
+    if return_probs:
+        return o, p
+    return o
+
+
+def full_attn_batched(q, k, v, cfg: LMConfig, q_pos, k_pos,
+                      return_probs=False, k_valid=None):
+    """Batched jnp attention: q (B, Sq, Hq, Dh) vs k/v (B, Sk, Hkv, Dh).
+
+    q_pos/k_pos: (Sq,)/(Sk,) shared or (B, Sq)/(B, Sk) per row;
+    k_valid: optional (B, Sk) bool.  The jnp reference for the batched
+    selective path (the pallas route goes through `selective_mha`).
+    """
+    B, Sq = q.shape[:2]
+    Sk = k.shape[1]
+    Hq, Hkv = q.shape[2], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    qr = q.reshape(B, Sq, Hkv, G, -1)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    qp = q_pos if q_pos.ndim == 2 else jnp.broadcast_to(q_pos[None], (B, Sq))
+    kp = k_pos if k_pos.ndim == 2 else jnp.broadcast_to(k_pos[None], (B, Sk))
+    mask = qp[:, :, None] >= kp[:, None, :]                 # (B, Sq, Sk)
+    if k_valid is not None:
+        mask = mask & k_valid[:, None, :]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    o = o.reshape(B, Sq, Hq, -1)
     if return_probs:
         return o, p
     return o
@@ -119,10 +180,15 @@ def _batched_forward(params, toks, valid, cfg: LMConfig):
         vs.append(v)
         q = L.apply_rope(q, pos, cfg.rope_theta)
         k = L.apply_rope(k_raw, pos, cfg.rope_theta)
-        o = L.chunked_attention(q, k, v, causal=True, q_positions=pos,
-                                kv_positions=pos, kv_valid=valid,
-                                q_chunk=min(cfg.attn_q_chunk, S),
-                                kv_chunk=min(cfg.attn_kv_chunk, S))
+        if cfg.attn_backend == "pallas":
+            o = mha_flash(q, k, v, kv_valid=valid, causal=True,
+                          q_block=PALLAS_Q_BLOCK, kv_block=PALLAS_KV_BLOCK,
+                          interpret=default_interpret())
+        else:
+            o = L.chunked_attention(q, k, v, causal=True, q_positions=pos,
+                                    kv_positions=pos, kv_valid=valid,
+                                    q_chunk=min(cfg.attn_q_chunk, S),
+                                    kv_chunk=min(cfg.attn_kv_chunk, S))
         x = x + jnp.einsum("nshe,hed->nsd", o, lp["wo"])
         x = x + mlp_block_batched(L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps),
                                   lp, cfg)
@@ -210,7 +276,7 @@ def precompute_kv(params, cfg: LMConfig, tokens: np.ndarray
         q, k, k_raw, v = _qkv(h, lp, cfg, pos)
         ks.append(np.asarray(k_raw, np.float32))
         vs.append(np.asarray(v, np.float32))
-        o = _full_attn(q, k, v, cfg, pos, pos)
+        o = _full_attn(q, k, v, cfg, pos, pos, contiguous=True)
         x = x + jnp.einsum("she,hed->sd", o, lp["wo"])
         x = x + _mlp(L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps), lp, cfg)
     k_all = np.stack(ks, axis=1)
@@ -293,67 +359,119 @@ def _jit_layer0_kv(params, toks, valid, ck0, cv0, cfg: LMConfig):
     return _layer0_impl(params, toks, valid, ck0, cv0, cfg)
 
 
+
+
+def _sel_attn(qr, k_l, v_l, cfg: LMConfig, r_pos, pos, valid, live):
+    """One selective-layer attention: recomputed queries vs assembled keys.
+
+    Backend seam: jnp runs the batched masked-softmax reference; pallas
+    runs `selective_mha` with every valid key marked attendable (window
+    0 + hh = the key-validity mask ⇒ causal attention over valid keys,
+    exactly the reference's mask) and the precomputed block-liveness map
+    `live`, which keeps the wrapper jit-traceable.
+    qr: (B, R, Hq, Dh); k_l/v_l: (B, S, Hkv, Dh); r_pos: (B, R);
+    valid: (B, S) bool; live: (B, nq, nk) int32 (unused under jnp).
+    """
+    if cfg.attn_backend == "pallas":
+        return selective_mha(qr, r_pos, k_l, v_l, valid.astype(jnp.int8),
+                             live=live, window=0, q_block=PALLAS_Q_BLOCK,
+                             kv_block=PALLAS_KV_BLOCK,
+                             interpret=default_interpret())
+    return full_attn_batched(qr, k_l, v_l, cfg, r_pos, pos, k_valid=valid)
+
+
 def _selective_layers_impl(params, x, r_idx, r_valid, ck, cv, valid,
                            key_rot_pos, final_slot, cfg: LMConfig,
-                           collect_kv: bool):
-    n = x.shape[0]
+                           live, collect_kv: bool):
+    """Batched layers 1..L-1 over the recompute sets.
+
+    x: (B, n, D); r_idx/r_valid: (B, R); ck/cv: (B, n, L, Hkv, Dh);
+    valid: (B, n); key_rot_pos: (n,) shared or (B, n); final_slot: (B,).
+    -> logits (B, V) [+ merged pre-RoPE (k, v): (B, n, L-1, Hkv, Dh)].
+    """
+    B, n, _ = x.shape
     pos = jnp.arange(n)
-    r_pos = jnp.clip(r_idx, 0, n - 1)
-    xr = jnp.take(x, r_pos, axis=0)                            # (R, D)
+    rows = jnp.arange(B)
+    r_pos = jnp.clip(r_idx, 0, n - 1)                          # (B, R)
+    xr = jnp.take_along_axis(x, r_pos[..., None], axis=1)      # (B, R, D)
     ks, vs = [], []
     for l in range(1, cfg.n_layers):
         lp = layer_params(params, l)
         hr = L.rms_norm(xr, lp["attn_norm"], cfg.norm_eps)
-        qr = jnp.einsum("rd,dhe->rhe", hr, lp["wq"])
-        kr_raw = jnp.einsum("rd,dhe->rhe", hr, lp["wk"])
-        vr = jnp.einsum("rd,dhe->rhe", hr, lp["wv"])
-        qr = L.apply_rope(qr[None], r_pos, cfg.rope_theta)[0]
-        kr = L.apply_rope(kr_raw[None], r_pos, cfg.rope_theta)[0]
+        qr = jnp.einsum("brd,dhe->brhe", hr, lp["wq"])
+        kr_raw = jnp.einsum("brd,dhe->brhe", hr, lp["wk"])
+        vr = jnp.einsum("brd,dhe->brhe", hr, lp["wv"])
+        qr = L.apply_rope(qr, r_pos, cfg.rope_theta)
+        kr = L.apply_rope(kr_raw, r_pos, cfg.rope_theta)
         # assembled keys: cached pre-RoPE keys rotated per key_rot_pos
-        k_l = L.apply_rope(ck[:, l][None], key_rot_pos, cfg.rope_theta)[0]
-        v_l = cv[:, l]
+        k_l = L.apply_rope(ck[:, :, l], key_rot_pos, cfg.rope_theta)
+        v_l = cv[:, :, l]
         widx = jnp.where(r_valid, r_idx, n)                    # n → dropped
-        k_l = k_l.at[widx].set(kr, mode="drop")
-        v_l = v_l.at[widx].set(vr.astype(v_l.dtype), mode="drop")
+        k_l = k_l.at[rows[:, None], widx].set(kr, mode="drop")
+        v_l = v_l.at[rows[:, None], widx].set(vr.astype(v_l.dtype),
+                                              mode="drop")
         if collect_kv:
             # merged pre-RoPE cache: cached blocks + fresh recomputed keys
-            ks.append(ck[:, l].at[widx].set(kr_raw, mode="drop"))
+            ks.append(ck[:, :, l].at[rows[:, None], widx].set(kr_raw,
+                                                              mode="drop"))
             vs.append(v_l)
-        o = full_attn(qr, k_l, v_l.astype(kr.dtype), cfg, r_pos, pos,
-                      k_valid=valid)
-        xr = xr + jnp.einsum("rhe,hed->rd", o, lp["wo"])
-        xr = xr + mlp_block(L.rms_norm(xr, lp["mlp_norm"], cfg.norm_eps),
-                            lp, cfg)
+        o = _sel_attn(qr, k_l, v_l.astype(kr.dtype), cfg, r_pos, pos,
+                      valid, live)
+        xr = xr + jnp.einsum("brhe,hed->brd", o, lp["wo"])
+        xr = xr + mlp_block_batched(
+            L.rms_norm(xr, lp["mlp_norm"], cfg.norm_eps), lp, cfg)
 
-    xf = L.rms_norm(xr[final_slot][None], params["final_norm"], cfg.norm_eps)
+    xf = L.rms_norm(xr[rows, final_slot], params["final_norm"],
+                    cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = (xf @ head)[0]
+    logits = xf @ head                                         # (B, V)
     if collect_kv:
-        return logits, jnp.stack(ks, axis=1), jnp.stack(vs, axis=1)
+        return logits, jnp.stack(ks, axis=2), jnp.stack(vs, axis=2)
     return logits
 
 
 @functools.partial(jax.jit, static_argnums=(9,))
 def _jit_selective_layers(params, x, r_idx, r_valid, ck, cv, valid,
-                          key_rot_pos, final_slot, cfg: LMConfig):
-    """Layers 1..L-1 computed only for the (padded) recompute set; final
-    logits at the recompute slot `final_slot` (the prompt's last token).
+                          key_rot_pos, final_slot, cfg: LMConfig,
+                          live=_NO_LIVE):
+    """Layers 1..L-1 computed only for the (padded) recompute sets; final
+    logits at the recompute slot `final_slot` (each prompt's last token).
     `key_rot_pos` rotates cached pre-RoPE keys (RcLLM: the request position
-    = exact realignment; CacheBlend baseline: the block's original position)."""
+    = exact realignment; CacheBlend baseline: the block's original position).
+    All array args carry a leading batch dim — the single-request path is
+    the B=1 special case."""
     return _selective_layers_impl(params, x, r_idx, r_valid, ck, cv, valid,
-                                  key_rot_pos, final_slot, cfg,
+                                  key_rot_pos, final_slot, cfg, live,
                                   collect_kv=False)
 
 
 @functools.partial(jax.jit, static_argnums=(9,))
 def _jit_selective_layers_kv(params, x, r_idx, r_valid, ck, cv, valid,
-                             key_rot_pos, final_slot, cfg: LMConfig):
+                             key_rot_pos, final_slot, cfg: LMConfig,
+                             live=_NO_LIVE):
     """As `_jit_selective_layers`, but also returns the merged pre-RoPE
-    (k, v) for layers 1..L-1: (n, L-1, Hkv, Dh) — cached blocks with the
-    recomputed tokens' fresh keys scattered in."""
+    (k, v) for layers 1..L-1: (B, n, L-1, Hkv, Dh) — cached blocks with
+    the recomputed tokens' fresh keys scattered in."""
     return _selective_layers_impl(params, x, r_idx, r_valid, ck, cv, valid,
-                                  key_rot_pos, final_slot, cfg,
+                                  key_rot_pos, final_slot, cfg, live,
                                   collect_kv=True)
+
+
+def _liveness_for(cfg: LMConfig, r_idx_p: np.ndarray, valid: np.ndarray
+                  ) -> np.ndarray:
+    """Host-side block-liveness for the selective pallas route.
+
+    r_idx_p: (B, R) padded recompute indices; valid: (B, n) key-validity.
+    Under the jnp backend returns the shared placeholder (the trace never
+    reads it), so both backends call the jitted entry points identically.
+    """
+    if cfg.attn_backend != "pallas":
+        return _NO_LIVE
+    n = valid.shape[1]
+    r_pos = np.clip(np.asarray(r_idx_p, np.int64), 0, n - 1)
+    return build_block_liveness(r_pos, valid.astype(np.int8), window=0,
+                                q_block=PALLAS_Q_BLOCK,
+                                kv_block=PALLAS_KV_BLOCK)
 
 
 def run_selective_layers(params, cfg, x, recompute: np.ndarray,
@@ -362,7 +480,8 @@ def run_selective_layers(params, cfg, x, recompute: np.ndarray,
                          return_kv: bool = False):
     """Pad the recompute set + sequence, dispatch the jitted layer stack.
 
-    With ``return_kv`` the merged pre-RoPE caches for layers 1..L-1 come
+    Single-request wrapper over the batched (B=1) selective stack.  With
+    ``return_kv`` the merged pre-RoPE caches for layers 1..L-1 come
     back too: -> (logits, k (n, L-1, Hkv, Dh), v) — the serving engine's
     source for paged-pool insertion.
     """
@@ -380,15 +499,19 @@ def run_selective_layers(params, cfg, x, recompute: np.ndarray,
     else:
         key_positions = _pad_to(key_positions.astype(np.int64), n)
     final_slot = r_count - 1          # last recomputed token = prompt tail
-    args = (params, x, jnp.asarray(r_idx_p), jnp.asarray(r_valid),
-            jnp.asarray(ck), jnp.asarray(cv), jnp.asarray(valid),
-            jnp.asarray(key_positions), final_slot, cfg)
+    live = _liveness_for(cfg, r_idx_p[None], valid[None])
+    args = (params, x[None], jnp.asarray(r_idx_p[None]),
+            jnp.asarray(r_valid[None]), jnp.asarray(ck)[None],
+            jnp.asarray(cv)[None], jnp.asarray(valid[None]),
+            jnp.asarray(key_positions), jnp.asarray([final_slot]), cfg,
+            jnp.asarray(live))
     if return_kv:
         logits, k_m, v_m = _jit_selective_layers_kv(*args)
-        return (np.asarray(logits, np.float32),
-                np.asarray(k_m, np.float32), np.asarray(v_m, np.float32))
+        return (np.asarray(logits[0], np.float32),
+                np.asarray(k_m[0], np.float32),
+                np.asarray(v_m[0], np.float32))
     logits = _jit_selective_layers(*args)
-    return np.asarray(logits, np.float32)
+    return np.asarray(logits[0], np.float32)
 
 
 def selective_prefill_logits(
@@ -422,6 +545,46 @@ def selective_prefill_with_kv(
                               have_cache, sel, bucket, return_kv=True)
 
 
+def select_recompute(plan: AssemblyPlan, have: np.ndarray,
+                     attn_mass, div_raw, sel: SelectiveConfig
+                     ) -> Tuple[np.ndarray, EngineStats]:
+    """Eq. 3 scoring + heavy-hitter selection under per-class budgets.
+
+    attn_mass/div_raw: layer-0 outputs (padded; only [:n] is read).
+    Shared by the single-request and batched selective prefills, so the
+    two paths cannot drift on *which* tokens they recompute.
+    -> (recompute mask (n,), EngineStats).
+    """
+    n = plan.n
+    attn_mass = np.asarray(attn_mass)[:n]
+    a_norm = attn_mass / max(attn_mass.max(), 1e-9)
+    div = np.asarray(div_raw)[:n] * have.astype(np.float32)
+    div = div / max(div.max(), 1e-9)
+    s_score = (1.0 - sel.lam) * a_norm + sel.lam * div              # Eq. 3
+
+    src = plan.source
+    recompute = ~have.copy()                                 # misses
+    recompute |= plan.seg_kind == 0                          # instructions
+    recompute[max(0, n - sel.window):] = True                # local window
+    n_hh = 0
+    for kind, budget in ((2, sel.r_item), (1, sel.r_rev)):
+        cls = np.where((plan.seg_kind == kind) & ~recompute)[0]
+        if len(cls) == 0:
+            continue
+        k_top = int(np.ceil(budget * len(cls)))
+        top = cls[np.argsort(-s_score[cls])[:k_top]]
+        recompute[top] = True
+        n_hh += len(top)
+
+    stats = EngineStats(
+        n_tokens=n, n_recomputed=int(recompute.sum()),
+        n_reused_item=int(((src == FROM_ITEM) & ~recompute).sum()),
+        n_reused_semantic=int(((src == FROM_SEMANTIC) & ~recompute).sum()),
+        n_heavy_hitters=n_hh, layer0_full=sel.layer0_full,
+        recompute_mask=recompute.copy())
+    return recompute, stats
+
+
 def _selective_prefill(
     params, cfg: LMConfig, plan: AssemblyPlan,
     cached_k: np.ndarray, cached_v: np.ndarray, have_cache: np.ndarray,
@@ -445,33 +608,7 @@ def _selective_prefill(
     else:
         x, attn_mass, div_raw = out0
         k0_raw = v0 = None
-    attn_mass = np.asarray(attn_mass)[:n]
-    a_norm = attn_mass / max(attn_mass.max(), 1e-9)
-    div = np.asarray(div_raw)[:n] * have.astype(np.float32)
-    div = div / max(div.max(), 1e-9)
-    s_score = (1.0 - sel.lam) * a_norm + sel.lam * div              # Eq. 3
-
-    # ---- heavy-hitter selection under per-class budgets ----
-    src = plan.source
-    recompute = ~have.copy()                                 # misses
-    recompute |= plan.seg_kind == 0                          # instructions
-    recompute[max(0, n - sel.window):] = True                # local window
-    n_hh = 0
-    for kind, budget in ((2, sel.r_item), (1, sel.r_rev)):
-        cls = np.where((plan.seg_kind == kind) & ~recompute)[0]
-        if len(cls) == 0:
-            continue
-        k_top = int(np.ceil(budget * len(cls)))
-        top = cls[np.argsort(-s_score[cls])[:k_top]]
-        recompute[top] = True
-        n_hh += len(top)
-
-    stats = EngineStats(
-        n_tokens=n, n_recomputed=int(recompute.sum()),
-        n_reused_item=int(((src == FROM_ITEM) & ~recompute).sum()),
-        n_reused_semantic=int(((src == FROM_SEMANTIC) & ~recompute).sum()),
-        n_heavy_hitters=n_hh, layer0_full=sel.layer0_full,
-        recompute_mask=recompute.copy())
+    recompute, stats = select_recompute(plan, have, attn_mass, div_raw, sel)
 
     if not return_kv:
         logits = run_selective_layers(params, cfg, x, recompute, ckp, cvp, n)
@@ -484,3 +621,111 @@ def _selective_prefill(
     v_all = np.concatenate(
         [np.asarray(v0, np.float32)[:, None], v_rest], axis=1)[:n]
     return logits, stats, k_all, v_all
+
+
+def _pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+def selective_prefill_batch(
+    params, cfg: LMConfig, items: Sequence, sel: SelectiveConfig,
+    bucket: int = 128, r_bucket: int = 64, return_kv: bool = True,
+):
+    """Batched beyond-prefix prefill over many requests at once.
+
+    Phase 1 runs layer 0 + Eq. 3 scoring per request — the *identical*
+    padded dispatches as the single-request path, so the batched
+    prefill's selection and activations are bit-for-bit the loop's.
+    (Stacking layer 0 buys no compute: it materializes (B, H, G, S, S)
+    probability tensors that thrash CPU caches, and its dispatch count
+    is not the bottleneck.)  Phase 2 is where batching pays: ONE jitted
+    selective-layer step per (padded length, padded recompute budget)
+    bucket over the stacked recompute sets, with the batch axis padded
+    to the next power of two — so steady-state serving retraces
+    O(#distinct buckets · log batch) regardless of how the continuous
+    batcher composes batches, at ≤ 2× padded-row waste.
+
+    items: sequence of (plan, cached_k, cached_v, have) tuples.
+    -> list of (logits (V,), EngineStats, k_all (n, L, Hkv, Dh), v_all)
+    per request, in input order (k_all/v_all None unless ``return_kv``).
+    """
+    if not items:
+        return []
+    # ---- phase 1: per-request layer 0 + host-side Eq. 3 selection ----
+    npad_of = []
+    x_of, rec_of, stats_of, k0_of, v0_of, ckp_of, cvp_of = (
+        {}, {}, {}, {}, {}, {}, {})
+    layer0 = _jit_layer0_kv if return_kv else _jit_layer0
+    for i, (plan, ck, cv, have) in enumerate(items):
+        n_pad = ((plan.n + bucket - 1) // bucket) * bucket
+        npad_of.append(n_pad)
+        toks = _pad_to(plan.tokens.astype(np.int32), n_pad)
+        valid = np.zeros(n_pad, bool)
+        valid[:plan.n] = True
+        ckp = _pad_to(ck.astype(np.float32), n_pad)
+        cvp = _pad_to(cv.astype(np.float32), n_pad)
+        out0 = layer0(params, jnp.asarray(toks), jnp.asarray(valid),
+                      jnp.asarray(ckp[:, 0]), jnp.asarray(cvp[:, 0]), cfg)
+        if return_kv:
+            x, attn_mass, div_raw, k0, v0 = out0
+            k0_of[i] = np.asarray(k0, np.float32)
+            v0_of[i] = np.asarray(v0, np.float32)
+        else:
+            x, attn_mass, div_raw = out0
+            k0_of[i] = v0_of[i] = None
+        rec_of[i], stats_of[i] = select_recompute(
+            plan, have, attn_mass, div_raw, sel)
+        x_of[i] = x
+        ckp_of[i], cvp_of[i] = ckp, cvp
+
+    # ---- phase 2: selective layers per (n_pad, r_pad) bucket ----
+    results = [None] * len(items)
+    by_shape: Dict[tuple, list] = {}
+    for i in range(len(items)):
+        r_count = int(rec_of[i].sum())
+        r_pad = max(r_bucket, ((r_count + r_bucket - 1) // r_bucket)
+                    * r_bucket)
+        by_shape.setdefault((npad_of[i], r_pad), []).append(i)
+    for (n_pad, r_pad), idxs in sorted(by_shape.items()):
+        B = _pow2(len(idxs))
+        r_idx_p = np.zeros((B, r_pad), np.int32)
+        r_valid = np.zeros((B, r_pad), bool)
+        valid = np.zeros((B, n_pad), bool)
+        final_slot = np.zeros(B, np.int32)
+        for bi, i in enumerate(idxs):
+            plan = items[i][0]
+            r_idx = np.where(rec_of[i])[0]
+            r_idx_p[bi] = _pad_to(r_idx.astype(np.int32), r_pad,
+                                  fill=plan.n - 1)
+            r_valid[bi, :len(r_idx)] = True
+            valid[bi, :plan.n] = True
+            final_slot[bi] = len(r_idx) - 1
+        live = _liveness_for(cfg, r_idx_p, valid)
+        zrow_x = jnp.zeros_like(x_of[idxs[0]])
+        zrow_ck = np.zeros_like(ckp_of[idxs[0]])
+        xs = [x_of[i] for i in idxs] + [zrow_x] * (B - len(idxs))
+        cks = [ckp_of[i] for i in idxs] + [zrow_ck] * (B - len(idxs))
+        cvs = [cvp_of[i] for i in idxs] + [zrow_ck] * (B - len(idxs))
+        args = (params, jnp.stack(xs),
+                jnp.asarray(r_idx_p), jnp.asarray(r_valid),
+                jnp.asarray(np.stack(cks)), jnp.asarray(np.stack(cvs)),
+                jnp.asarray(valid), jnp.arange(n_pad),
+                jnp.asarray(final_slot), cfg, jnp.asarray(live))
+        if return_kv:
+            logits, k_rest, v_rest = _jit_selective_layers_kv(*args)
+            k_rest = np.asarray(k_rest, np.float32)
+            v_rest = np.asarray(v_rest, np.float32)
+        else:
+            logits = _jit_selective_layers(*args)
+            k_rest = v_rest = None
+        logits = np.asarray(logits, np.float32)
+        for bi, i in enumerate(idxs):
+            n = items[i][0].n
+            k_all = v_all = None
+            if return_kv:
+                k_all = np.concatenate(
+                    [k0_of[i][:, None], k_rest[bi]], axis=1)[:n]
+                v_all = np.concatenate(
+                    [v0_of[i][:, None], v_rest[bi]], axis=1)[:n]
+            results[i] = (logits[bi], stats_of[i], k_all, v_all)
+    return results

@@ -1,3 +1,16 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Whether Pallas kernels should run in interpret mode.
+
+    Real Mosaic lowering needs a TPU; everywhere else (CPU CI, tests,
+    laptops) the kernels execute through the Pallas interpreter so the
+    exact same kernel bodies stay on the hot path.
+    """
+    return jax.default_backend() != "tpu"

@@ -5,6 +5,16 @@ sequential on TPU, so the (m, l, acc) running-softmax state lives in VMEM
 scratch across kv steps.  Block shapes are MXU-aligned (q_block × d and
 kv_block × d tiles, d a multiple of 128 for full MXU utilization; smaller
 d still lowers, padded by Mosaic).
+
+Two mask sources compose:
+
+* ``causal`` — the static iota-based triangle (contiguous positions);
+* ``kv_valid`` — an optional per-row key-liveness bitmap, the serving
+  engine's ragged-batch mask (padded prompt tails, paged-decode slots
+  past a request's length).  It rides in as a normal kernel input tiled
+  (1, kv_block) with NB mask rows shared across each row's heads by
+  BlockSpec index arithmetic — never materialized per head — so the
+  wrapper stays jit-traceable end-to-end.
 """
 from __future__ import annotations
 
@@ -18,9 +28,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
-                  *, causal: bool, sm_scale: float, q_block: int,
-                  kv_block: int, kv_len: int):
+def _flash_kernel(*refs, causal: bool, sm_scale: float, q_block: int,
+                  kv_block: int, kv_len: int, has_valid: bool):
+    if has_valid:
+        q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -42,6 +55,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
     k_pos = ki * kv_block + jax.lax.broadcasted_iota(jnp.int32,
                                                      (q_block, kv_block), 1)
     mask = k_pos < kv_len
+    if has_valid:
+        mask &= valid_ref[0][None, :] > 0
     if causal:
         mask &= q_pos >= k_pos
     s = jnp.where(mask, s, NEG_INF)
@@ -66,11 +81,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    kv_valid: jax.Array = None,
                     causal: bool = True, q_block: int = 128,
                     kv_block: int = 128,
                     interpret: bool = False) -> jax.Array:
     """q: (BH, Sq, D); k, v: (BH, Skv, D) — heads pre-flattened (GQA groups
-    expanded by the ops wrapper).  Returns (BH, Sq, D)."""
+    expanded by the ops wrapper).  `kv_valid`: optional (NB, Skv) bool/int8
+    key-liveness mask with NB dividing BH — mask row b·NB/BH serves
+    flattened row b, so a per-request mask is shared by that request's
+    heads without per-head copies.  Returns (BH, Sq, D)."""
     bh, sq, d = q.shape
     skv = k.shape[1]
     sq_p = ((sq + q_block - 1) // q_block) * q_block
@@ -83,17 +102,30 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     nq = sq_p // q_block
     nk = skv_p // kv_block
 
+    in_specs = [
+        pl.BlockSpec((1, q_block, d), lambda b, qi, ki: (b, qi, 0)),
+        pl.BlockSpec((1, kv_block, d), lambda b, qi, ki: (b, ki, 0)),
+        pl.BlockSpec((1, kv_block, d), lambda b, qi, ki: (b, ki, 0)),
+    ]
+    args = [q, k, v]
+    if kv_valid is not None:
+        nb = kv_valid.shape[0]
+        if bh % nb:
+            raise ValueError(f"kv_valid batch {nb} must divide BH={bh}")
+        kvv = jnp.pad(kv_valid.astype(jnp.int8),
+                      ((0, 0), (0, skv_p - skv)))
+        in_specs.append(pl.BlockSpec((1, kv_block),
+                                     lambda b, qi, ki: (b * nb // bh, ki)))
+        args.append(kvv)
+
     kernel = functools.partial(
         _flash_kernel, causal=causal, sm_scale=1.0 / d ** 0.5,
-        q_block=q_block, kv_block=kv_block, kv_len=skv)
+        q_block=q_block, kv_block=kv_block, kv_len=skv,
+        has_valid=kv_valid is not None)
     out = pl.pallas_call(
         kernel,
         grid=(bh, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, q_block, d), lambda b, qi, ki: (b, qi, 0)),
-            pl.BlockSpec((1, kv_block, d), lambda b, qi, ki: (b, ki, 0)),
-            pl.BlockSpec((1, kv_block, d), lambda b, qi, ki: (b, ki, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, q_block, d), lambda b, qi, ki: (b, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq_p, d), q.dtype),
         scratch_shapes=[
@@ -102,5 +134,5 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((q_block, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*args)
     return out[:, :sq]

@@ -9,12 +9,29 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention.kernel import flash_attention
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block",
-                                             "interpret"))
-def mha_flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
-              causal: bool = True, q_block: int = 128, kv_block: int = 128,
-              interpret: bool = False) -> jax.Array:
-    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0."""
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_block", "kv_block", "interpret"),
+)
+def mha_flash(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    kv_valid: jax.Array = None,
+    causal: bool = True,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+
+    `kv_valid`: optional (B, Skv) bool mask of attendable keys per batch
+    row (the serving engine's ragged-batch mask); the kernel shares each
+    row's mask across its query heads by BlockSpec index arithmetic, so
+    no per-head copy is ever materialized.  Fully traceable — the mask
+    is a kernel input, so this wrapper jits end-to-end.
+    """
     b, sq, hq, d = q.shape
     hkv = k.shape[2]
     g = hq // hkv
@@ -23,6 +40,14 @@ def mha_flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
     kf = k.transpose(0, 2, 1, 3).reshape(b * hq, -1, d)
     vf = v.transpose(0, 2, 1, 3).reshape(b * hq, -1, d)
-    of = flash_attention(qf, kf, vf, causal=causal, q_block=q_block,
-                         kv_block=kv_block, interpret=interpret)
+    of = flash_attention(
+        qf,
+        kf,
+        vf,
+        kv_valid=kv_valid,
+        causal=causal,
+        q_block=q_block,
+        kv_block=kv_block,
+        interpret=interpret,
+    )
     return of.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

@@ -2,11 +2,24 @@
 
 Computes attention for the R recomputed queries against keys restricted to
 (heavy hitters ∪ causal sliding window ∪ recomputed tokens): the paper's
-per-token mask becomes a *block-sparse* pattern — the host precomputes a
-(nq, nk) block liveness map; dead (query-block, key-block) tiles are
-skipped entirely (`@pl.when`), live tiles apply the fine-grained bitmap in
-VREGs.  This is the TPU-native form of the CUDA selective mask: static
+per-token mask becomes a *block-sparse* pattern — a (nq, nk) block liveness
+map marks which (query-block, key-block) tiles can contribute; dead tiles
+are skipped entirely (`@pl.when`), live tiles apply the fine-grained bitmap
+in VREGs.  This is the TPU-native form of the CUDA selective mask: static
 128×128 MXU tiles + predicated skip, instead of per-row divergence.
+
+The liveness map is *data* (a kernel input), not trace-time control flow:
+callers precompute it host-side with `block_liveness` from concrete
+positions/mask and pass it in, which makes the whole wrapper jit-traceable
+— the serving engine bakes the map per shape bucket and runs the kernel
+inside its jitted selective-prefill step.  When `live` is omitted the
+kernel computes it on the host (concrete inputs only, the pre-seam
+behaviour).
+
+Masks are per *mask row*: `q_positions`/`hh_mask`/`live` carry a leading
+NB dim that divides the flattened BH batch·head dim, so one request's
+masks are shared by its heads without materializing BH copies (NB=1 is
+the fully-shared single-request case).
 """
 from __future__ import annotations
 
@@ -19,6 +32,53 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+
+def block_liveness(q_positions, hh_mask, *, window: int,
+                   q_block: int = 128, kv_block: int = 128) -> np.ndarray:
+    """Host-side block-liveness map for `selective_attention`.
+
+    q_positions: (R,) or (NB, R) int absolute query positions (pad = -1);
+    hh_mask: (S,) or (NB, S) heavy-hitter/recomputed key bitmap.  Tile
+    (qi, kj) is live iff any query in it can see any key in the tile
+    (window hit, or any HH key causally visible).  -> (NB, nq, nk) int32.
+    """
+    qp = np.asarray(q_positions)
+    hh = np.asarray(hh_mask)
+    if qp.ndim == 1:
+        qp = qp[None]
+    if hh.ndim == 1:
+        hh = hh[None]
+    nb, r = qp.shape
+    s_len = hh.shape[1]
+    r_p = ((r + q_block - 1) // q_block) * q_block
+    s_p = ((s_len + kv_block - 1) // kv_block) * kv_block
+    qp = np.pad(qp.astype(np.int64), ((0, 0), (0, r_p - r)),
+                constant_values=-1)
+    hh = np.pad(hh.astype(np.int8), ((0, 0), (0, s_p - s_len)))
+    nq, nk = r_p // q_block, s_p // kv_block
+    live = np.zeros((nb, nq, nk), np.int32)
+    for bi in range(nb):
+        qpos_r = qp[bi].reshape(nq, q_block)
+        hh_r = hh[bi].reshape(nk, kv_block)
+        for qi in range(nq):
+            qmax = int(qpos_r[qi].max())
+            qmin_valid = qpos_r[qi][qpos_r[qi] >= 0]
+            qmin = int(qmin_valid.min()) if len(qmin_valid) else -1
+            if qmin < 0 and qmax < 0:
+                continue
+            for kj in range(nk):
+                k_lo, k_hi = kj * kv_block, (kj + 1) * kv_block - 1
+                if k_lo > qmax:
+                    continue                         # fully acausal
+                # window liveness: ∃ q∈[qmin,qmax], k∈[k_lo,k_hi] with
+                # 0 ≤ q−k < window ⟺ [qmin−window+1, qmax] ∩ [k_lo, k_hi] ≠ ∅
+                # (conservative superset for non-contiguous q positions)
+                win_hit = k_hi > qmin - window and k_lo <= qmax
+                hh_hit = bool(hh_r[kj].any())
+                if win_hit or hh_hit:
+                    live[bi, qi, kj] = 1
+    return live
 
 
 def _sel_kernel(qpos_ref, live_ref, q_ref, k_ref, v_ref, mask_ref,
@@ -34,14 +94,14 @@ def _sel_kernel(qpos_ref, live_ref, q_ref, k_ref, v_ref, mask_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    @pl.when(live_ref[0, 0] > 0)
+    @pl.when(live_ref[0, 0, 0] > 0)
     def _compute():
         q = q_ref[0]
         k = k_ref[0]
         v = v_ref[0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * sm_scale
-        q_pos = qpos_ref[...][:, None]                      # (q_block, 1)
+        q_pos = qpos_ref[0][:, None]                        # (q_block, 1)
         k_pos = ki * kv_block + jax.lax.broadcasted_iota(
             jnp.int32, (q_block, kv_block), 1)
         in_window = (q_pos >= k_pos) & (q_pos - k_pos < window)
@@ -68,47 +128,43 @@ def _sel_kernel(qpos_ref, live_ref, q_ref, k_ref, v_ref, mask_ref,
 
 def selective_attention(q: jax.Array, q_positions: jax.Array,
                         k: jax.Array, v: jax.Array, hh_mask: jax.Array, *,
-                        window: int = 256, q_block: int = 128,
+                        live=None, window: int = 256, q_block: int = 128,
                         kv_block: int = 128,
                         interpret: bool = False) -> jax.Array:
-    """q: (BH, R, D) recomputed queries with absolute positions
-    q_positions: (R,); k, v: (BH, S, D) assembled keys; hh_mask: (S,) int8
-    marking heavy-hitter/recomputed keys.  Attend where causal AND
-    (within `window` OR hh_mask)."""
+    """q: (BH, R, D) recomputed queries; q_positions: (R,) or (NB, R)
+    absolute positions; k, v: (BH, S, D) assembled keys; hh_mask: (S,) or
+    (NB, S) int8 marking heavy-hitter/recomputed keys.  NB must divide BH
+    (mask row b·NB/BH serves flattened row b).  Attend where causal AND
+    (within `window` OR hh_mask).  `live`: optional precomputed
+    (NB, nq, nk) block-liveness map (`block_liveness`); required for
+    jit-traced calls, computed host-side when omitted."""
     bh, r, d = q.shape
     s_len = k.shape[1]
+    qp2 = q_positions if q_positions.ndim == 2 else q_positions[None]
+    hh2 = hh_mask if hh_mask.ndim == 2 else hh_mask[None]
+    nb = qp2.shape[0]
+    if bh % nb or hh2.shape[0] != nb:
+        raise ValueError(
+            f"mask batch {nb}/{hh2.shape[0]} must divide BH={bh}")
     r_p = ((r + q_block - 1) // q_block) * q_block
     s_p = ((s_len + kv_block - 1) // kv_block) * kv_block
     q = jnp.pad(q, ((0, 0), (0, r_p - r), (0, 0)))
-    qpos = jnp.pad(q_positions.astype(jnp.int32), (0, r_p - r),
+    qpos = jnp.pad(qp2.astype(jnp.int32), ((0, 0), (0, r_p - r)),
                    constant_values=-1)
     k = jnp.pad(k, ((0, 0), (0, s_p - s_len), (0, 0)))
     v = jnp.pad(v, ((0, 0), (0, s_p - s_len), (0, 0)))
-    hh = jnp.pad(hh_mask.astype(jnp.int8), (0, s_p - s_len))
+    hh = jnp.pad(hh2.astype(jnp.int8), ((0, 0), (0, s_p - s_len)))
     nq, nk = r_p // q_block, s_p // kv_block
 
-    # host-side block liveness: tile (qi, kj) is live iff any query in it can
-    # see any key in the tile (window hit or any HH key causally visible)
-    qpos_r = np.asarray(qpos).reshape(nq, q_block)
-    hh_r = np.asarray(hh).reshape(nk, kv_block)
-    live = np.zeros((nq, nk), np.int32)
-    for qi in range(nq):
-        qmax = int(qpos_r[qi].max())
-        qmin_valid = qpos_r[qi][qpos_r[qi] >= 0]
-        qmin = int(qmin_valid.min()) if len(qmin_valid) else -1
-        if qmin < 0 and qmax < 0:
-            continue
-        for kj in range(nk):
-            k_lo, k_hi = kj * kv_block, (kj + 1) * kv_block - 1
-            if k_lo > qmax:
-                continue                         # fully acausal
-            # window liveness: ∃ q∈[qmin,qmax], k∈[k_lo,k_hi] with
-            # 0 ≤ q−k < window ⟺ [qmin−window+1, qmax] ∩ [k_lo, k_hi] ≠ ∅
-            # (conservative superset for non-contiguous q positions)
-            win_hit = k_hi > qmin - window and k_lo <= qmax
-            hh_hit = bool(hh_r[kj].any())
-            if win_hit or hh_hit:
-                live[qi, kj] = 1
+    if live is None:
+        # host-side fallback: needs concrete positions/mask (the ops
+        # wrapper raises a clear TypeError under tracing before this)
+        live = block_liveness(np.asarray(qp2), np.asarray(hh2),
+                              window=window, q_block=q_block,
+                              kv_block=kv_block)
+    live = jnp.asarray(live, jnp.int32)
+    if live.ndim == 2:
+        live = live[None]
 
     kernel = functools.partial(
         _sel_kernel, sm_scale=1.0 / d ** 0.5, q_block=q_block,
@@ -117,12 +173,13 @@ def selective_attention(q: jax.Array, q_positions: jax.Array,
         kernel,
         grid=(bh, nq, nk),
         in_specs=[
-            pl.BlockSpec((q_block,), lambda b, qi, ki: (qi,)),
-            pl.BlockSpec((1, 1), lambda b, qi, ki: (qi, ki)),
+            pl.BlockSpec((1, q_block), lambda b, qi, ki: (b * nb // bh, qi)),
+            pl.BlockSpec((1, 1, 1),
+                         lambda b, qi, ki: (b * nb // bh, qi, ki)),
             pl.BlockSpec((1, q_block, d), lambda b, qi, ki: (b, qi, 0)),
             pl.BlockSpec((1, kv_block, d), lambda b, qi, ki: (b, ki, 0)),
             pl.BlockSpec((1, kv_block, d), lambda b, qi, ki: (b, ki, 0)),
-            pl.BlockSpec((1, kv_block), lambda b, qi, ki: (0, ki)),
+            pl.BlockSpec((1, kv_block), lambda b, qi, ki: (b * nb // bh, ki)),
         ],
         out_specs=pl.BlockSpec((1, q_block, d), lambda b, qi, ki: (b, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, r_p, d), q.dtype),
@@ -132,5 +189,5 @@ def selective_attention(q: jax.Array, q_positions: jax.Array,
             pltpu.VMEM((q_block, d), jnp.float32),
         ],
         interpret=interpret,
-    )(qpos, jnp.asarray(live), q, k, v, hh[None])
+    )(qpos, live, q, k, v, hh)
     return out[:, :r]

@@ -4,26 +4,74 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.selective_attention.kernel import selective_attention
+from repro.kernels.selective_attention.kernel import (
+    block_liveness,
+    selective_attention,
+)
 
 
-def selective_mha(q, q_positions, k, v, hh_mask, *, window: int = 256,
-                  q_block: int = 128, kv_block: int = 128,
-                  interpret: bool = False):
-    """q: (B, R, Hq, D); k, v: (B, S, Hkv, D); hh_mask: (S,).
+def build_block_liveness(
+    q_positions,
+    hh_mask,
+    *,
+    window: int,
+    q_block: int = 128,
+    kv_block: int = 128,
+):
+    """Precompute the (NB, nq, nk) block-liveness map host-side.
 
-    Note: the block-liveness map is computed host-side from concrete
-    positions/mask (it IS the point of the kernel — static tile skipping),
-    so this wrapper is not jit-traceable end-to-end; callers jit around it.
+    This is the jit seam: the map depends only on *concrete* query
+    positions and the heavy-hitter bitmap — both known on the host before
+    the engine dispatches its jitted selective step — so callers bake it
+    per shape bucket and pass it to `selective_mha(..., live=...)`, which
+    is then traceable end-to-end (the map rides into the kernel as data).
     """
-    if isinstance(q_positions, jax.core.Tracer) or \
-            isinstance(hh_mask, jax.core.Tracer):
+    return block_liveness(
+        q_positions,
+        hh_mask,
+        window=window,
+        q_block=q_block,
+        kv_block=kv_block,
+    )
+
+
+def selective_mha(
+    q,
+    q_positions,
+    k,
+    v,
+    hh_mask,
+    *,
+    live=None,
+    window: int = 256,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = False,
+):
+    """q: (B, R, Hq, D); k, v: (B, S, Hkv, D); q_positions: (R,) or
+    (B, R); hh_mask: (S,) or (B, S).
+
+    With ``live=None`` the block-liveness map is computed host-side from
+    concrete positions/mask, so the call is NOT jit-traceable (the
+    pre-seam behaviour, kept for direct kernel use).  Pass a precomputed
+    ``live`` (`build_block_liveness`) and the wrapper traces end-to-end —
+    this is how the serving engine runs it inside its jitted selective
+    prefill.  Per-request masks (2-D q_positions/hh_mask) are shared
+    across that request's heads inside the kernel without materializing
+    per-head copies.
+    """
+    if live is None and (
+        isinstance(q_positions, jax.core.Tracer)
+        or isinstance(hh_mask, jax.core.Tracer)
+    ):
         raise TypeError(
-            "selective_mha cannot be traced end-to-end by jax.jit: the "
-            "block-liveness map is computed host-side from *concrete* "
-            "q_positions/hh_mask (static tile skipping is the point of the "
-            "kernel). Call it outside jit — or close over concrete "
-            "positions/mask and jit only the surrounding computation.")
+            "selective_mha cannot be traced end-to-end by jax.jit without "
+            "a precomputed liveness map: the block-liveness map is "
+            "computed host-side from *concrete* q_positions/hh_mask "
+            "(static tile skipping is the point of the kernel). Either "
+            "call it outside jit, or precompute the map with "
+            "build_block_liveness(...) and pass it via live=."
+        )
     b, r, hq, d = q.shape
     hkv = k.shape[2]
     g = hq // hkv
@@ -32,9 +80,18 @@ def selective_mha(q, q_positions, k, v, hh_mask, *, window: int = 256,
     qf = q.transpose(0, 2, 1, 3).reshape(b * hq, r, d)
     kf = kk.transpose(0, 2, 1, 3).reshape(b * hq, -1, d)
     vf = vv.transpose(0, 2, 1, 3).reshape(b * hq, -1, d)
-    of = selective_attention(qf, q_positions, kf, vf, hh_mask,
-                             window=window, q_block=q_block,
-                             kv_block=kv_block, interpret=interpret)
+    of = selective_attention(
+        qf,
+        q_positions,
+        kf,
+        vf,
+        hh_mask,
+        live=live,
+        window=window,
+        q_block=q_block,
+        kv_block=kv_block,
+        interpret=interpret,
+    )
     return of.reshape(b, hq, r, d).transpose(0, 2, 1, 3)
 
 

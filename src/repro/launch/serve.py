@@ -67,7 +67,8 @@ def run_jax_cluster(args) -> dict:
         return ClusterEngine(system, k=args.k, mode=args.mode,
                              policy=args.policy, page_size=args.page_size,
                              n_pages=args.pages,
-                             max_batch_tokens=args.max_batch_tokens)
+                             max_batch_tokens=args.max_batch_tokens,
+                             attn_backend=args.attn_backend)
 
     if args.warmup:
         make_cluster().run(trace, decode_steps=args.decode_steps)
@@ -76,6 +77,7 @@ def run_jax_cluster(args) -> dict:
     ttft = rep.ttft()
     return {
         "engine": "jax-cluster", "k": args.k, "mode": args.mode,
+        "attn_backend": args.attn_backend,
         "policy": rep.policy, "requests": len(rep.completions),
         "decode_steps": args.decode_steps,
         "includes_jit_compile": not args.warmup,
@@ -100,6 +102,8 @@ def run_jax_cluster(args) -> dict:
 
 def run_jax(args) -> dict:
     """Continuous batching over the real engine on this host's devices."""
+    import dataclasses
+
     from repro.core import engine as ENG
     from repro.serving.batch_engine import BatchEngine
     from repro.serving.batching import (ContinuousBatcher, JaxEngineBackend,
@@ -150,6 +154,12 @@ def run_jax(args) -> dict:
                 decode_steps=args.decode_steps,
                 tokens=rng.integers(1, cfg.vocab_size, n).astype(np.int32)))
 
+    # the attention-backend seam: jnp reference vs Pallas kernels inside
+    # the engine's jitted prefill/decode steps (offline caches above were
+    # built with the default backend; their pre-RoPE bytes are
+    # backend-invariant)
+    cfg = dataclasses.replace(cfg, attn_backend=args.attn_backend)
+
     def make_batcher():
         engine = BatchEngine(
             params, cfg, pool=pool_for(cfg, page_size=args.page_size,
@@ -172,7 +182,8 @@ def run_jax(args) -> dict:
     n_toks = sum(len(backend.generated[c.rid]) for c in done)
     stats = engine.pool.stats()
     return {
-        "engine": "jax", "mode": mode, "requests": len(done),
+        "engine": "jax", "mode": mode,
+        "attn_backend": backend.attn_backend, "requests": len(done),
         "decode_steps": args.decode_steps,
         "includes_jit_compile": not args.warmup,
         "per_request_ttft_s": [round(float(x), 4) for x in ttft],
@@ -203,6 +214,11 @@ def main():
     ap.add_argument("--model", default="rcllm-qwen3-8b")
     ap.add_argument("--mode", default="rcllm",
                     choices=["rcllm", "prefix", "full"])
+    ap.add_argument("--attn-backend", default="jnp",
+                    choices=["jnp", "pallas"],
+                    help="attention inside the jax engine's jitted steps: "
+                         "jnp reference, or the Pallas flash/selective "
+                         "kernels (interpret mode off-TPU)")
     ap.add_argument("--policy", default="affinity")
     ap.add_argument("--r-item", type=float, default=0.3)
     ap.add_argument("--r-rev", type=float, default=0.3)

@@ -4,18 +4,28 @@ Two jitted steps drive every request:
 
 * **prefill** — a padded multi-request step.  ``mode="full"`` runs the
   Full-Recompute batch (`core.engine._jit_batched_prefill`); ``mode=
-  "rcllm"`` runs the beyond-prefix selective path per request
-  (`core.engine.selective_prefill_with_kv` — the same Eq. 3 scoring and
-  layer stack as the single-request engine, not a copy).  Either way the
-  prompt's pre-RoPE KV lands in the paged pool: cached spans are inserted
-  block-granularly from the assembly plan, then only the recomputed
-  tokens' fresh KV is scattered on top.
+  "rcllm"`` runs the beyond-prefix selective path *batched*
+  (`core.engine.selective_prefill_batch`): requests are bucketed by
+  (padded length, padded recompute budget), their plans and cached KV
+  stacked, and one jitted layer-0 + one jitted selective step run per
+  bucket — the same Eq. 3 scoring and layer stack as the single-request
+  engine, shared code, not a copy.  Either way the prompt's pre-RoPE KV
+  lands in the paged pool: cached spans are inserted block-granularly
+  from the assembly plan, then only the recomputed tokens' fresh KV is
+  scattered on top.
 
 * **decode** — a single-token batched step that reads K/V *through the
   page tables*: one arena gather per step, keys realigned to their
   request positions by RoPE's group property, GQA attention over the
   variable-length batch, and the new token's KV written back into the
   arena inside the jit.
+
+`cfg.attn_backend` selects the attention implementation inside both
+steps: ``jnp`` (masked-einsum reference) or ``pallas`` — the flash /
+selective kernels from `repro.kernels`, interpret mode off-TPU and real
+Mosaic lowering on TPU.  Decode's ragged batch rides into the flash
+kernel as a `kv_valid` bitmap (causality is implied: the new token is
+the newest position in its row).
 
 Shapes are bucketed (sequence bucket for prefill, page/batch buckets for
 decode) so steady-state serving retraces O(1) times.
@@ -31,9 +41,15 @@ import numpy as np
 
 from repro.configs.base import LMConfig
 from repro.core import engine as ENG
-from repro.core.assembly import AssemblyPlan
+from repro.core.assembly import RECOMPUTE, AssemblyPlan, plan_spans
+from repro.kernels import default_interpret
+from repro.kernels.flash_attention.ops import mha_flash
 from repro.models import layers as L
 from repro.serving.kv_pool import PagedKVPool, pool_for
+
+# Decode runs one query per request: a small q tile keeps the padded
+# query block cheap while kv tiles stay MXU-sized.
+DECODE_Q_BLOCK = 8
 
 
 @dataclass
@@ -42,6 +58,7 @@ class BatchRequest:
     required for the selective (rcllm) path and ignored for full prefill.
     `n_reserve` pre-reserves page capacity for that many decode tokens so
     decode never has to grab pages from the free list mid-flight."""
+
     rid: int
     tokens: np.ndarray
     plan: Optional[AssemblyPlan] = None
@@ -51,8 +68,48 @@ class BatchRequest:
     n_reserve: int = 0
 
 
-def _decode_step(params, toks, page_tables, seq_lens, new_pages,
-                 new_slots, arena_k, arena_v, cfg: LMConfig):
+def _decode_attn(q, k_l, v_l, kv_valid, cfg: LMConfig):
+    """One decode-layer attention: q (N, Hq, Dh) vs rotated k_l/v_l
+    (N, S+1, Hkv, Dh) under the per-row `kv_valid` (N, S+1) mask.
+
+    Causality never needs positions here: the new token is the newest in
+    its row, so the key-liveness mask IS the causal mask — which is what
+    lets the pallas route use the flash kernel with ``causal=False``.
+    """
+    if cfg.attn_backend == "pallas":
+        return mha_flash(
+            q[:, None],
+            k_l,
+            v_l,
+            kv_valid=kv_valid,
+            causal=False,
+            q_block=DECODE_Q_BLOCK,
+            kv_block=ENG.PALLAS_KV_BLOCK,
+            interpret=default_interpret(),
+        )[:, 0]
+    N = q.shape[0]
+    Hkv = cfg.n_kv_heads
+    G = cfg.n_heads // Hkv
+    scale = 1.0 / (cfg.resolved_head_dim**0.5)
+    qr = q.reshape(N, Hkv, G, -1)
+    s = jnp.einsum("nhgd,nshd->nhgs", qr, k_l, preferred_element_type=jnp.float32)
+    s = jnp.where(kv_valid[:, None, None, :], s * scale, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("nhgs,nshd->nhgd", p.astype(v_l.dtype), v_l)
+    return o.reshape(N, cfg.n_heads, -1)
+
+
+def _decode_step(
+    params,
+    toks,
+    page_tables,
+    seq_lens,
+    new_pages,
+    new_slots,
+    arena_k,
+    arena_v,
+    cfg: LMConfig,
+):
     """One decode token per request, K/V read through page tables.
 
     toks: (N,) last sampled token ids; page_tables: (N, P) page ids;
@@ -68,52 +125,46 @@ def _decode_step(params, toks, page_tables, seq_lens, new_pages,
     page = arena_k.shape[1]
     S = page_tables.shape[1] * page
 
-    x = params["embed"][toks].astype(jnp.dtype(cfg.dtype))     # (N, D)
+    x = params["embed"][toks].astype(jnp.dtype(cfg.dtype))  # (N, D)
     if cfg.tie_embeddings:
-        x = x * (cfg.d_model ** 0.5)
-    pos_new = seq_lens.astype(jnp.int32)                       # (N,)
+        x = x * (cfg.d_model**0.5)
+    pos_new = seq_lens.astype(jnp.int32)  # (N,)
 
     # one arena gather per step: (N, P, page, L, Hkv, Dh) -> (N, S, L, ...)
-    kg = arena_k[page_tables].reshape(N, S, cfg.n_layers,
-                                      *arena_k.shape[3:])
-    vg = arena_v[page_tables].reshape(N, S, cfg.n_layers,
-                                      *arena_v.shape[3:])
+    kg = arena_k[page_tables].reshape(N, S, cfg.n_layers, *arena_k.shape[3:])
+    vg = arena_v[page_tables].reshape(N, S, cfg.n_layers, *arena_v.shape[3:])
     slot_pos = jnp.arange(S)
     kv_pos = jnp.concatenate(
-        [jnp.broadcast_to(slot_pos[None], (N, S)), pos_new[:, None]], axis=1)
+        [jnp.broadcast_to(slot_pos[None], (N, S)), pos_new[:, None]], axis=1
+    )
     kv_valid = jnp.concatenate(
-        [slot_pos[None, :] < seq_lens[:, None],
-         jnp.ones((N, 1), bool)], axis=1)                      # (N, S+1)
+        [slot_pos[None, :] < seq_lens[:, None], jnp.ones((N, 1), bool)],
+        axis=1,
+    )  # (N, S+1)
 
-    scale = 1.0 / (cfg.resolved_head_dim ** 0.5)
-    Hkv = cfg.n_kv_heads
-    G = cfg.n_heads // Hkv
-    for l in range(cfg.n_layers):
-        lp = ENG.layer_params(params, l)
+    for layer in range(cfg.n_layers):
+        lp = ENG.layer_params(params, layer)
         h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
         q = jnp.einsum("nd,dhe->nhe", h, lp["wq"])
-        k_new = jnp.einsum("nd,dhe->nhe", h, lp["wk"])         # pre-RoPE
+        k_new = jnp.einsum("nd,dhe->nhe", h, lp["wk"])  # pre-RoPE
         v_new = jnp.einsum("nd,dhe->nhe", h, lp["wv"])
-        arena_k = arena_k.at[new_pages, new_slots, l].set(
-            k_new.astype(arena_k.dtype))
-        arena_v = arena_v.at[new_pages, new_slots, l].set(
-            v_new.astype(arena_v.dtype))
+        arena_k = arena_k.at[new_pages, new_slots, layer].set(
+            k_new.astype(arena_k.dtype)
+        )
+        arena_v = arena_v.at[new_pages, new_slots, layer].set(
+            v_new.astype(arena_v.dtype)
+        )
 
         q = L.apply_rope(q[:, None], pos_new[:, None], cfg.rope_theta)[:, 0]
-        k_l = jnp.concatenate([kg[:, :, l], k_new[:, None]], axis=1)
-        v_l = jnp.concatenate([vg[:, :, l], v_new[:, None]], axis=1)
-        k_l = L.apply_rope(k_l, kv_pos, cfg.rope_theta)        # realign
+        k_l = jnp.concatenate([kg[:, :, layer], k_new[:, None]], axis=1)
+        v_l = jnp.concatenate([vg[:, :, layer], v_new[:, None]], axis=1)
+        k_l = L.apply_rope(k_l, kv_pos, cfg.rope_theta)  # realign
 
-        qr = q.reshape(N, Hkv, G, -1)
-        s = jnp.einsum("nhgd,nshd->nhgs", qr, k_l,
-                       preferred_element_type=jnp.float32) * scale
-        s = jnp.where(kv_valid[:, None, None, :], s, -1e30)
-        p = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("nhgs,nshd->nhgd", p.astype(v_l.dtype), v_l)
-        o = o.reshape(N, cfg.n_heads, -1)
+        o = _decode_attn(q, k_l, v_l, kv_valid, cfg)
         x = x + jnp.einsum("nhe,hed->nd", o, lp["wo"])
-        x = x + ENG.mlp_block(L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps),
-                              lp, cfg)
+        x = x + ENG.mlp_block(
+            L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps), lp, cfg
+        )
 
     xf = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
@@ -121,81 +172,171 @@ def _decode_step(params, toks, page_tables, seq_lens, new_pages,
 
 
 if jax.default_backend() in ("tpu", "gpu"):
-    _jit_decode_step = jax.jit(_decode_step, static_argnums=(8,),
-                               donate_argnums=(6, 7))
+    _jit_decode_step = jax.jit(
+        _decode_step, static_argnums=(8,), donate_argnums=(6, 7)
+    )
 else:
     _jit_decode_step = jax.jit(_decode_step, static_argnums=(8,))
 
 
 class BatchEngine:
-    """Multi-request prefill + paged continuous decode on real hardware."""
+    """Multi-request prefill + paged continuous decode on real hardware.
 
-    def __init__(self, params, cfg: LMConfig, pool: Optional[PagedKVPool]
-                 = None, sel: Optional[ENG.SelectiveConfig] = None,
-                 bucket: int = 64, decode_bucket: int = 8):
+    ``batched_selective`` switches the rcllm prefill between the bucketed
+    batched path (`engine.selective_prefill_batch`, the default) and the
+    legacy per-request loop — kept for parity tests and the
+    `bench_attn_backend` batched-vs-loop comparison.
+    """
+
+    def __init__(
+        self,
+        params,
+        cfg: LMConfig,
+        pool: Optional[PagedKVPool] = None,
+        sel: Optional[ENG.SelectiveConfig] = None,
+        bucket: int = 64,
+        decode_bucket: int = 8,
+        batched_selective: bool = True,
+    ):
         self.params = params
         self.cfg = cfg
         self.pool = pool if pool is not None else pool_for(cfg)
         self.sel = sel or ENG.SelectiveConfig()
         self.bucket = bucket
         self.decode_bucket = decode_bucket
+        self.batched_selective = batched_selective
         self.last_stats: Dict[int, ENG.EngineStats] = {}
 
     # ------------------------------ prefill --------------------------------
-    def prefill(self, reqs: Sequence[BatchRequest], mode: str = "full"
-                ) -> np.ndarray:
+    def prefill(self, reqs: Sequence[BatchRequest], mode: str = "full") -> np.ndarray:
         """Prefill a batch; KV lands in the pool.  -> logits (N, V)."""
         if mode == "full":
             return self._prefill_full(reqs)
         if mode == "rcllm":
+            if self.batched_selective:
+                return self._prefill_selective_batch(reqs)
             return np.stack([self._prefill_selective(r) for r in reqs])
         raise ValueError(mode)
 
     def _prefill_full(self, reqs: Sequence[BatchRequest]) -> np.ndarray:
         lens = [len(r.tokens) for r in reqs]
-        S = max(self.bucket,
-                -(-max(lens) // self.bucket) * self.bucket)
+        S = max(self.bucket, -(-max(lens) // self.bucket) * self.bucket)
         # batch dim is a traced shape too: pad it to a bucket so varying
         # batch compositions reuse compiled steps (pad rows: one PAD
         # token at position 0, logits discarded, nothing pooled)
         N = -(-len(reqs) // self.decode_bucket) * self.decode_bucket
         toks = np.zeros((N, S), np.int32)
         for i, r in enumerate(reqs):
-            toks[i, :lens[i]] = r.tokens
+            toks[i, : lens[i]] = r.tokens
         last = np.zeros(N, np.int32)
-        last[:len(reqs)] = [n - 1 for n in lens]
+        last[: len(reqs)] = [n - 1 for n in lens]
         logits, k, v = ENG._jit_batched_prefill(
-            self.params, jnp.asarray(toks), jnp.asarray(last), self.cfg)
+            self.params, jnp.asarray(toks), jnp.asarray(last), self.cfg
+        )
         k = np.asarray(k, np.float32)
         v = np.asarray(v, np.float32)
         for i, r in enumerate(reqs):
             self.pool.alloc(r.rid, lens[i] + r.n_reserve)
-            self.pool.write_prompt(r.rid, k[i, :lens[i]], v[i, :lens[i]])
-        return np.asarray(logits, np.float32)[:len(reqs)]
+            self.pool.write_prompt(r.rid, k[i, : lens[i]], v[i, : lens[i]])
+        return np.asarray(logits, np.float32)[: len(reqs)]
 
-    def _prefill_selective(self, r: BatchRequest) -> np.ndarray:
+    @staticmethod
+    def _check_plan(r: BatchRequest) -> None:
         if r.plan is None:
             raise ValueError(f"request {r.rid}: rcllm prefill needs a plan")
-        logits, stats, k_all, v_all = ENG.selective_prefill_with_kv(
-            self.params, self.cfg, r.plan, r.cached_k, r.cached_v,
-            r.have, self.sel, bucket=self.bucket)
+
+    @staticmethod
+    def _selective_rows(r: BatchRequest, stats: ENG.EngineStats, k_all, v_all):
+        """Final pool rows for one selectively-prefilled request.
+
+        Block-granular semantics with host-side merging: cached span
+        values first (one contiguous run per plan span), then the
+        recomputed tokens' fresh KV overwriting them — resolved *before*
+        the arena scatter so the fused write sees unique positions
+        (duplicate slots in one XLA scatter have undefined order).
+        -> (positions, k rows, v rows).
+        """
+        plan = r.plan
+        write = np.zeros(plan.n, bool)
+        for s in plan_spans(plan):
+            if s.source != RECOMPUTE:
+                write[s.start : s.end] = True
+        kw = np.array(r.cached_k, np.float32)
+        vw = np.array(r.cached_v, np.float32)
+        rec = stats.recompute_mask
+        kw[rec] = k_all[rec]
+        vw[rec] = v_all[rec]
+        write |= rec
+        pos = np.where(write)[0]
+        return pos, kw[pos], vw[pos]
+
+    def _insert_selective(
+        self,
+        r: BatchRequest,
+        stats: ENG.EngineStats,
+        k_all: np.ndarray,
+        v_all: np.ndarray,
+    ) -> None:
+        """Pool insertion for one selectively-prefilled request: one
+        fused scatter for cached spans + recomputed KV, and one for the
+        always-fresh layer-0 plane (HH identification runs layer 0 in
+        full, so its KV is exact for every token)."""
         self.last_stats[r.rid] = stats
         n = r.plan.n
         self.pool.alloc(r.rid, n + r.n_reserve)
-        # block-granular insertion of the assembled cache spans...
-        self.pool.write_plan(r.rid, r.plan, r.cached_k, r.cached_v)
-        # ...fresh KV scattered over the recompute set only...
-        r_pos = np.where(stats.recompute_mask)[0]
-        self.pool.write_at(r.rid, r_pos, k_all[r_pos], v_all[r_pos])
-        # ...and layer 0 is always computed fully (HH identification), so
-        # its plane is fresh for every token.
-        self.pool.write_at(r.rid, np.arange(n), k_all[:, 0], v_all[:, 0],
-                           layer=0)
+        pos, kw, vw = self._selective_rows(r, stats, k_all, v_all)
+        self.pool.write_at(r.rid, pos, kw, vw)
+        self.pool.write_at(
+            r.rid, np.arange(n), k_all[:, 0], v_all[:, 0], layer=0
+        )
+
+    def _prefill_selective_batch(self, reqs: Sequence[BatchRequest]) -> np.ndarray:
+        """Batched rcllm prefill: bucketed stacked requests, one jitted
+        selective step per bucket (`engine.selective_prefill_batch`),
+        then ONE fused pool scatter for the whole batch (plus one for
+        the layer-0 planes) instead of per-request arena copies."""
+        for r in reqs:
+            self._check_plan(r)
+        results = ENG.selective_prefill_batch(
+            self.params,
+            self.cfg,
+            [(r.plan, r.cached_k, r.cached_v, r.have) for r in reqs],
+            self.sel,
+            bucket=self.bucket,
+        )
+        out = []
+        entries, entries_l0 = [], []
+        for r, (logits, stats, k_all, v_all) in zip(reqs, results):
+            self.last_stats[r.rid] = stats
+            n = r.plan.n
+            self.pool.alloc(r.rid, n + r.n_reserve)
+            pos, kw, vw = self._selective_rows(r, stats, k_all, v_all)
+            entries.append((r.rid, pos, kw, vw))
+            entries_l0.append((r.rid, np.arange(n), k_all[:, 0], v_all[:, 0]))
+            out.append(logits)
+        self.pool.write_at_batch(entries)
+        self.pool.write_at_batch(entries_l0, layer=0)
+        return np.stack(out)
+
+    def _prefill_selective(self, r: BatchRequest) -> np.ndarray:
+        """Legacy one-request-at-a-time selective prefill (parity and
+        benchmark reference for the batched path)."""
+        self._check_plan(r)
+        logits, stats, k_all, v_all = ENG.selective_prefill_with_kv(
+            self.params,
+            self.cfg,
+            r.plan,
+            r.cached_k,
+            r.cached_v,
+            r.have,
+            self.sel,
+            bucket=self.bucket,
+        )
+        self._insert_selective(r, stats, k_all, v_all)
         return logits
 
     # ------------------------------- decode --------------------------------
-    def decode(self, rids: Sequence[int], last_tokens: Sequence[int]
-               ) -> np.ndarray:
+    def decode(self, rids: Sequence[int], last_tokens: Sequence[int]) -> np.ndarray:
         """One token for each running request.  -> logits (N, V)."""
         n = len(rids)
         n_pad = -(-n // self.decode_bucket) * self.decode_bucket
@@ -207,14 +348,20 @@ class BatchEngine:
         tables_p[:n] = tables
         lens_p = np.zeros(n_pad, np.int32)
         lens_p[:n] = lens
-        pages_p = np.zeros(n_pad, np.int32)     # pad rows: scratch page 0
+        pages_p = np.zeros(n_pad, np.int32)  # pad rows: scratch page 0
         slots_p = np.zeros(n_pad, np.int32)
         pages_p[:n], slots_p[:n] = pages, slots
         logits, ak, av = _jit_decode_step(
-            self.params, jnp.asarray(toks), jnp.asarray(tables_p),
-            jnp.asarray(lens_p), jnp.asarray(pages_p),
-            jnp.asarray(slots_p), self.pool.arena_k, self.pool.arena_v,
-            self.cfg)
+            self.params,
+            jnp.asarray(toks),
+            jnp.asarray(tables_p),
+            jnp.asarray(lens_p),
+            jnp.asarray(pages_p),
+            jnp.asarray(slots_p),
+            self.pool.arena_k,
+            self.pool.arena_v,
+            self.cfg,
+        )
         self.pool.update_arenas(ak, av)
         return np.asarray(logits, np.float32)[:n]
 

@@ -8,7 +8,11 @@ the `EngineBackend` seam:
 * `SimBackend` — the analytic cost model as a virtual clock (tests,
   scheduling/benchmark sweeps; the seed behaviour);
 * `JaxEngineBackend` — the real batched JAX engine + paged KV pool
-  (`serving.batch_engine`), timed on the wall clock.
+  (`serving.batch_engine`), timed on the wall clock.  The engine's
+  `cfg.attn_backend` (threaded from `launch/serve.py --attn-backend`)
+  picks jnp vs Pallas attention inside its jitted steps; the batcher is
+  agnostic and surfaces the choice via `JaxEngineBackend.attn_backend`
+  for reporting.
 
 A backend returns the seconds each step took; the loop only ever adds
 those to a clock, so scheduling policy is identical in both worlds.
@@ -106,6 +110,11 @@ class JaxEngineBackend:
         self.plans = plans if plans is not None else {}
         self.last_token: Dict[int, int] = {}
         self.generated: Dict[int, List[int]] = {}
+
+    @property
+    def attn_backend(self) -> str:
+        """Attention implementation the wrapped engine runs (jnp/pallas)."""
+        return getattr(self.engine.cfg, "attn_backend", "jnp")
 
     def _batch_requests(self, batch: Sequence[PendingRequest]):
         from repro.serving.batch_engine import BatchRequest

@@ -26,6 +26,7 @@ dedicated hardware (per-worker TTFT is each instance's own wall work).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
@@ -160,6 +161,7 @@ class ClusterEngine:
         sel: Optional[ENG.SelectiveConfig] = None,
         hw: CM.Hardware = CM.V5E_1,
         seed: int = 0,
+        attn_backend: Optional[str] = None,
     ):
         if system.placement.k != k:
             raise ValueError(
@@ -176,12 +178,20 @@ class ClusterEngine:
         self.k = k
         self.mode = mode
         self.hw = hw
+        # the attention-backend seam: workers run the system's model under
+        # a possibly different attention implementation (jnp reference vs
+        # the Pallas kernels) — the offline caches were built once with
+        # the system's config and are backend-invariant (pre-RoPE bytes)
+        cfg = system.cfg
+        if attn_backend is not None:
+            cfg = dataclasses.replace(cfg, attn_backend=attn_backend)
+        self.cfg = cfg
         self.backends: List[ClusterWorkerBackend] = []
         for w in range(k):
             engine = BatchEngine(
                 system.params,
-                system.cfg,
-                pool=pool_for(system.cfg, page_size=page_size, n_pages=n_pages),
+                cfg,
+                pool=pool_for(cfg, page_size=page_size, n_pages=n_pages),
                 sel=sel or ENG.SelectiveConfig(),
             )
             shard = None

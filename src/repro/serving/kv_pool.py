@@ -9,15 +9,17 @@ block needs no rewrite, and decode realigns keys to their request
 positions with one rotation (RoPE's group property, §III-C3).
 
 Insertion is block-granular: `write_plan` walks the assembly plan's
-contiguous spans (`core.assembly.plan_spans`) and copies each cached
-block's run with one slice op; the selective engine then scatters only
-the recomputed tokens' fresh KV on top (`write_at`).
+contiguous spans (`core.assembly.plan_spans`) and fuses every cached
+block's run into one scatter; the selective engine merges the
+recomputed tokens' fresh KV host-side and inserts whole *batches* with
+`write_at_batch` — one arena update per batch instead of one per span.
 
-Host-side writes use eager ``.at[].set`` (a copy per call on CPU); the
-decode hot loop instead threads the arenas through the jitted decode
-step (`serving.batch_engine`) and installs the returned buffers, so the
-new tokens' KV lands in-step (the arenas are donated on TPU/GPU, making
-the update in-place; CPU lacks donation and copies).
+Host-side writes use eager ``.at[].set`` (a full-arena copy per call on
+CPU, which is why fusing matters); the decode hot loop instead threads
+the arenas through the jitted decode step (`serving.batch_engine`) and
+installs the returned buffers, so the new tokens' KV lands in-step (the
+arenas are donated on TPU/GPU, making the update in-place; CPU lacks
+donation and copies).
 """
 from __future__ import annotations
 
@@ -141,16 +143,40 @@ class PagedKVPool:
         single layer plane (e.g. the always-fresh layer-0 KV from the
         selective engine).
         """
-        positions = np.asarray(positions, np.int64)
-        pages, slots = self._phys(rid, positions)
+        self.write_at_batch([(rid, positions, k, v)], layer=layer)
+
+    def write_at_batch(self, entries: Sequence[tuple],
+                       layer: Optional[int] = None) -> None:
+        """Fused multi-request scatter: ONE arena update for any number
+        of requests' writes.
+
+        entries: sequence of (rid, positions, k, v).  Positions must be
+        unique within an entry (duplicate physical slots across a single
+        scatter have undefined write order under XLA).  Arena updates
+        are eager copies on CPU (`.at[].set`), so fusing a batch's
+        insertions into one scatter is what makes the batched prefill's
+        pool insertion O(1) copies instead of O(requests · spans).
+        """
+        pages_all, slots_all, ks, vs = [], [], [], []
+        for rid, positions, k, v in entries:
+            positions = np.asarray(positions, np.int64)
+            pages, slots = self._phys(rid, positions)
+            pages_all.append(pages)
+            slots_all.append(slots)
+            ks.append(np.asarray(k))
+            vs.append(np.asarray(v))
+            self.seq_lens[rid] = max(self.seq_lens[rid],
+                                     int(positions.max()) + 1)
+        pages = np.concatenate(pages_all)
+        slots = np.concatenate(slots_all)
+        k = np.concatenate(ks)
+        v = np.concatenate(vs)
         if layer is None:
             self.arena_k = self.arena_k.at[pages, slots].set(k)
             self.arena_v = self.arena_v.at[pages, slots].set(v)
         else:
             self.arena_k = self.arena_k.at[pages, slots, layer].set(k)
             self.arena_v = self.arena_v.at[pages, slots, layer].set(v)
-        self.seq_lens[rid] = max(self.seq_lens[rid],
-                                 int(positions.max()) + 1)
 
     def write_prompt(self, rid: int, k: np.ndarray, v: np.ndarray) -> None:
         """Insert a full prompt cache (n, L, Hkv, Dh) starting at slot 0."""
@@ -165,15 +191,16 @@ class PagedKVPool:
         engine scatters fresh KV there after the selective pass).
         -> number of tokens inserted from cache blocks.
         """
-        inserted = 0
-        for span in plan_spans(plan):
-            if span.source == RECOMPUTE:
-                continue
-            pos = np.arange(span.start, span.end)
-            self.write_at(rid, pos, cached_k[span.start:span.end],
-                          cached_v[span.start:span.end])
-            inserted += span.n
-        return inserted
+        pos_runs = [np.arange(s.start, s.end) for s in plan_spans(plan)
+                    if s.source != RECOMPUTE]
+        if not pos_runs:
+            return 0
+        # one fused scatter for all spans (each span is still one
+        # contiguous block-granular run; fusing just avoids paying a
+        # full-arena copy per span on CPU)
+        pos = np.concatenate(pos_runs)
+        self.write_at(rid, pos, cached_k[pos], cached_v[pos])
+        return len(pos)
 
     def append_slots(self, rids: Sequence[int]
                      ) -> Tuple[np.ndarray, np.ndarray]:

@@ -1,5 +1,10 @@
 """Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles,
-interpret=True (CPU executes the kernel bodies)."""
+interpret=True (CPU executes the kernel bodies).
+
+Every test owns a local `np.random.default_rng(seed)`: the session-scoped
+`rng` fixture is a shared stream, so a new test consuming it anywhere in
+the session would silently shift the draws these order-sensitive sweeps
+assert on."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -26,7 +31,8 @@ def _tol(dtype):
     ((1, 128, 256, 8, 2, 128), False),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_flash_attention_sweep(shape, causal, dtype, rng):
+def test_flash_attention_sweep(shape, causal, dtype):
+    rng = np.random.default_rng(0)
     B, Sq, Skv, Hq, Hkv, D = shape
     q = jnp.asarray(rng.normal(size=(B, Sq, Hq, D)), dtype)
     k = jnp.asarray(rng.normal(size=(B, Skv, Hkv, D)), dtype)
@@ -46,7 +52,8 @@ def test_flash_attention_sweep(shape, causal, dtype, rng):
 
 @pytest.mark.parametrize("R_,S,window,n_hh", [
     (32, 160, 24, 12), (16, 64, 8, 0), (48, 300, 64, 30)])
-def test_selective_attention_sweep(R_, S, window, n_hh, rng):
+def test_selective_attention_sweep(R_, S, window, n_hh):
+    rng = np.random.default_rng(1)
     B, Hq, Hkv, D = 1, 2, 2, 32
     q = jnp.asarray(rng.normal(size=(B, R_, Hq, D)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
@@ -72,8 +79,6 @@ def test_selective_mha_rejects_jit_tracing():
     block-liveness map needs concrete positions/mask); it must fail with
     a clear error at the wrapper, not deep inside the host-side
     computation."""
-    # local generator: draining the session rng here would shift the
-    # stream the order-sensitive sweep tests above draw from
     rng = np.random.default_rng(3)
     B, R_, S, Hq, Hkv, D = 1, 16, 64, 2, 2, 32
     q = jnp.asarray(rng.normal(size=(B, R_, Hq, D)), jnp.float32)
@@ -95,7 +100,8 @@ def test_selective_mha_rejects_jit_tracing():
 
 @pytest.mark.parametrize("npages,page,d,n_logical,rotate", [
     (16, 8, 32, 6, True), (8, 16, 64, 8, False), (32, 8, 128, 4, True)])
-def test_block_gather_sweep(npages, page, d, n_logical, rotate, rng):
+def test_block_gather_sweep(npages, page, d, n_logical, rotate):
+    rng = np.random.default_rng(2)
     pk = jnp.asarray(rng.normal(size=(npages, page, d)), jnp.float32)
     pv = jnp.asarray(rng.normal(size=(npages, page, d)), jnp.float32)
     bt = jnp.asarray(rng.choice(npages, n_logical, replace=False), jnp.int32)
@@ -112,7 +118,8 @@ def test_block_gather_sweep(npages, page, d, n_logical, rotate, rng):
 @pytest.mark.parametrize("rows,d,B,F", [(256, 16, 8, 5), (1000, 32, 4, 13),
                                         (64, 128, 16, 3)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_embedding_bag_sweep(rows, d, B, F, dtype, rng):
+def test_embedding_bag_sweep(rows, d, B, F, dtype):
+    rng = np.random.default_rng(4)
     table = jnp.asarray(rng.normal(size=(rows, d)), dtype)
     ids = jnp.asarray(rng.integers(0, rows, (B, F)), jnp.int32)
     out = bag_sum(table, ids, interpret=True)
@@ -122,8 +129,9 @@ def test_embedding_bag_sweep(rows, d, B, F, dtype, rng):
                                atol=_tol(dtype), rtol=_tol(dtype))
 
 
-def test_block_gather_matches_transformer_rope(rng):
+def test_block_gather_matches_transformer_rope():
     """Kernel RoPE == model RoPE (the realignment the engine relies on)."""
+    rng = np.random.default_rng(5)
     from repro.models.layers import apply_rope
     page, d = 8, 32
     pk = jnp.asarray(rng.normal(size=(4, page, d)), jnp.float32)
