@@ -1,0 +1,211 @@
+"""Cross-request KV reuse benchmark: the shared block store off vs on.
+
+One repeat-user Zipfian trace (a handful of heavy users + the catalog's
+own Zipf item popularity — the workload shape §III-A says dominates
+generative recommendation) streams twice through the single-instance
+jax engine as a pure TTFT workload (``decode_steps=1``: every request
+completes at its first token, the paper's headline metric): once with
+every request staging and recomputing privately, once against the
+stratified shared block store (`serving/block_store.py`) at steady
+state (warm caches).  The win is *compute*, not timer luck: a
+prefix-tier hit feeds the stored instruction rows back as cached KV,
+so the selective pass drops them from its recompute set — fewer
+recomputed rows through layers 1..L-1 — on top of the skipped staging
+writes and the admission-capacity credit.
+
+Decoded tokens must be bitwise identical in both runs (the store maps
+byte-equal pages and the dropped rows are byte-equal to their cached
+copies; asserted here and pinned by tests/test_block_store).
+
+Emits the standard ``name,us_per_call,derived`` CSV rows plus
+``reuse.json`` in `out_dir`; ``--quick`` shrinks the trace (CI).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.rcllm import make_tiny_system
+from repro.serving.batch_engine import BatchEngine
+from repro.serving.batching import ContinuousBatcher, JaxEngineBackend
+from repro.serving.block_store import SharedBlockStore
+from repro.serving.kv_pool import pool_for
+from repro.serving.workload import (
+    rcllm_reuse_info,
+    rcllm_workload,
+    zipf_repeat_trace,
+)
+
+POOL_PAGES = 72
+ZIPF_A = 1.3
+
+
+def _warm_buckets(system, plans):
+    """Compile every prefill shape the batcher can reach.
+
+    Admission waves are wall-clock sensitive: two passes over the same
+    trace can compose different prefill batches, so "warm then measure"
+    alone still lets the measured pass hit a cold (n_pad, r_pad, B)
+    bucket and book compile time as TTFT.  Instead, group the requests
+    by their jit bucket and pre-run every power-of-two batch size a wave
+    could form — on a throwaway big pool, since the prefill jits don't
+    depend on arena shape.
+    """
+    from repro.serving.batch_engine import BatchRequest
+    from repro.serving.block_store import shape_bucket
+
+    pool = pool_for(system.cfg, n_pages=2048)
+    engine = BatchEngine(system.params, system.cfg, pool=pool)
+    n_instr = len(system.instruction)
+    groups = {}
+    rid_gen = iter(range(10_000_000))
+    for plan, ck, cv, have in plans.values():
+        # the (n_pad, r_pad) jit bucket is deterministic from the plan
+        # shape (shape_bucket), so every reachable compile is known
+        # without running layer 0 — including the *prefix-hit* variant,
+        # where the cached instruction shrinks the recompute set
+        variants = [have]
+        have_hit = have.copy()
+        have_hit[:n_instr] = True
+        variants.append(have_hit)
+        for hv in variants:
+            key = shape_bucket(plan, hv, engine.sel, engine.bucket)
+            groups.setdefault(key, []).append(
+                BatchRequest(
+                    rid=next(rid_gen),
+                    tokens=plan.tokens,
+                    plan=plan,
+                    cached_k=ck,
+                    cached_v=cv,
+                    have=hv,
+                )
+            )
+    for reqs in groups.values():
+        # every power-of-two batch size a wave could form in this bucket
+        size = 1
+        while True:
+            engine.prefill(reqs[: min(size, len(reqs))], mode="rcllm")
+            for r in reqs[: min(size, len(reqs))]:
+                engine.release(r.rid)
+            if size >= len(reqs):
+                break
+            size *= 2
+
+
+def _run(system, pend, plans, reuse, kv_reuse: bool, measured: int = 3):
+    """Steady-state serving: ONE engine (one pool, one store) serves the
+    trace repeatedly — two warm passes fill the jit caches *and* the
+    block store (steady state for a serving instance is warm caches),
+    then `measured` passes keep the lowest mean TTFT (wave composition
+    is wall-clock sensitive, so a single pass can catch a straggler —
+    one late compile, one scheduler burp — that swamps the structural
+    difference; min-of-N is the standard robust estimator and both
+    modes get the same N).
+    """
+    pool = pool_for(system.cfg, n_pages=POOL_PAGES)
+    store = SharedBlockStore(pool) if kv_reuse else None
+    engine = BatchEngine(system.params, system.cfg, pool=pool, store=store)
+    backend = JaxEngineBackend(
+        engine,
+        mode="rcllm",
+        plans=plans,
+        reuse=reuse if kv_reuse else None,
+    )
+    best = None
+    for i in range(2 + measured):
+        batcher = ContinuousBatcher(backend=backend, max_batch_tokens=4096)
+        done = batcher.run(list(pend))
+        ttft = np.asarray(
+            [
+                c.first_token_s - c.arrival_s
+                for c in sorted(done, key=lambda c: c.rid)
+            ]
+        )
+        if i >= 2 and (best is None or ttft.mean() < best[0].mean()):
+            best = (ttft, backend, engine)
+    return best
+
+
+def run(out_dir: str = "results/bench", quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    n_req = 6 if quick else 14
+    # TTFT is a prefill metric: requests complete at their first token,
+    # so the measured quantity is the prefill stream itself (decode
+    # parity has its own tests; scheduling noise has no decode phases
+    # to hide in)
+    decode_steps = 1
+
+    system, pool_rv, prof, _ = make_tiny_system(
+        n_items=60, n_requests_hist=30, k_instances=2, n_layers=4, d_model=32
+    )
+    trace = zipf_repeat_trace(
+        system.catalog,
+        pool_rv,
+        prof,
+        n_req,
+        qps=200.0,
+        n_users=max(3, n_req // 3),
+        zipf_a=ZIPF_A,
+        seed=5,
+    )
+    pend, plans = rcllm_workload(system, trace, decode_steps=decode_steps)
+    reuse = rcllm_reuse_info(system, trace, plans)
+
+    _warm_buckets(system, plans)
+    ttft_off, b_off, _ = _run(system, pend, plans, reuse, kv_reuse=False)
+    ttft_on, b_on, e_on = _run(system, pend, plans, reuse, kv_reuse=True)
+
+    identical = all(b_off.generated[r] == b_on.generated[r] for r in b_off.generated)
+    assert identical, "kv-reuse changed decoded tokens (must be bitwise off==on)"
+
+    store = e_on.store.stats()
+    hits_u, miss_u = store["hits_user"], store["misses_user"]
+    hits_i, miss_i = store["hits_item"], store["misses_item"]
+    out = {
+        "requests": n_req,
+        "pool_pages": POOL_PAGES,
+        "zipf_a": ZIPF_A,
+        "decode_steps": decode_steps,
+        "decoded_identical": identical,
+        "off": {
+            "ttft_mean_s": float(ttft_off.mean()),
+            "ttft_p50_s": float(np.percentile(ttft_off, 50)),
+            "ttft_p90_s": float(np.percentile(ttft_off, 90)),
+        },
+        "on": {
+            "ttft_mean_s": float(ttft_on.mean()),
+            "ttft_p50_s": float(np.percentile(ttft_on, 50)),
+            "ttft_p90_s": float(np.percentile(ttft_on, 90)),
+            "user_hit_rate": hits_u / max(hits_u + miss_u, 1),
+            "item_hit_rate": hits_i / max(hits_i + miss_i, 1),
+            "block_store": store,
+        },
+        "mean_ttft_speedup": float(ttft_off.mean() / max(ttft_on.mean(), 1e-9)),
+    }
+    emit(
+        "reuse/off",
+        out["off"]["ttft_mean_s"] * 1e6,
+        f"ttft_p50={out['off']['ttft_p50_s']:.4f}s",
+    )
+    emit(
+        "reuse/on",
+        out["on"]["ttft_mean_s"] * 1e6,
+        f"user_hit={out['on']['user_hit_rate']:.3f} "
+        f"item_hit={out['on']['item_hit_rate']:.3f} "
+        f"speedup={out['mean_ttft_speedup']:.2f}x",
+    )
+    if not quick:
+        assert out["mean_ttft_speedup"] > 1.0, (
+            "kv-reuse must lower mean TTFT on the repeat-user workload: "
+            f"{out['mean_ttft_speedup']:.3f}x"
+        )
+
+    with open(os.path.join(out_dir, "reuse.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -60,6 +60,15 @@ METRICS = (
     # the committed full-run artifact shows > 1; quick runs on shared
     # runners get timing noise, so the guard's bar is the structural one
     Metric("attn_backend.json", ("batched_speedup_at_4",), "floor", floor=0.85),
+    Metric("reuse.json", ("on", "ttft_mean_s"), "time"),
+    # user-tier hits are workload-deterministic (repeat users always
+    # hit); the item tier's rate depends on LRU churn under the store
+    # budget, too volatile to gate
+    Metric("reuse.json", ("on", "user_hit_rate"), "rate"),
+    # committed full runs show well over 1x (reuse buys admission
+    # capacity, so deferred waves vanish); the quick bar only guards
+    # against reuse structurally regressing into a slowdown
+    Metric("reuse.json", ("mean_ttft_speedup",), "floor", floor=0.9),
 )
 
 

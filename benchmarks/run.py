@@ -12,6 +12,7 @@ default sizes reproduce the paper's structure in full.
   serving     continuous batching: sim-engine vs real jax-engine TTFT
   cluster     K real engines + sharded item caches: dispatch policies
   attn_backend  jnp vs pallas attention; batched vs per-request prefill
+  reuse       cross-request KV reuse (shared block store) off vs on
 
 Each entry also writes a JSON artifact into ``--out`` (see
 docs/benchmarks.md for the full flag and output reference).
@@ -29,8 +30,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma-separated subset of fig6|fig8_9|fig10|fig11|"
-                         "tableIII|kernels|serving|cluster|attn_backend, "
-                         "or all")
+                         "tableIII|kernels|serving|cluster|attn_backend|"
+                         "reuse, or all")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--planted", action="store_true",
                     help="tableIII: train the planted-preference ranker")
@@ -66,6 +67,9 @@ def main(argv=None) -> int:
                 args.out, quick=args.quick),
         "attn_backend": lambda: __import__(
             "benchmarks.bench_attn_backend", fromlist=["run"]).run(
+                args.out, quick=args.quick),
+        "reuse": lambda: __import__(
+            "benchmarks.bench_reuse", fromlist=["run"]).run(
                 args.out, quick=args.quick),
     }
     only = {s.strip() for s in args.only.split(",") if s.strip()}

@@ -96,7 +96,14 @@ def build_plan(tokens: np.ndarray, seg_kind: np.ndarray, seg_id: np.ndarray,
             reusable = np.ones(len(hist), bool)
             if marker_mask is not None:
                 reusable &= ~marker_mask[:len(hist)]
-            pos = hist.astype(np.int64)
+            # match at history-RELATIVE positions: the cache's
+            # (pos_bucket, code) keys were built from review docs at
+            # doc-relative positions, while the history sits behind the
+            # instruction in the prompt — hashing with absolute prompt
+            # positions lands every token in a position bucket the cache
+            # never populated, silently disabling semantic reuse.  RoPE
+            # realignment below still uses absolute positions.
+            pos = (hist - hist[0]).astype(np.int64)
             emb = embed_tokens_for_match(tokens[hist], pos, token_embed)
             pid, sim = semantic.match(tokens[hist], pos, emb)
             ok = reusable & (pid >= 0) & (sim >= min_semantic_sim) \

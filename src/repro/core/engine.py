@@ -564,7 +564,11 @@ def select_recompute(plan: AssemblyPlan, have: np.ndarray,
 
     src = plan.source
     recompute = ~have.copy()                                 # misses
-    recompute |= plan.seg_kind == 0                          # instructions
+    # instructions: always recomputed — unless their exact KV is already
+    # cached (`have`), which only the serving block store's prefix tier
+    # sets (its bytes ARE the recomputed rows, so skipping is lossless;
+    # offline flows never mark seg0 tokens as cached)
+    recompute |= (plan.seg_kind == 0) & ~have
     recompute[max(0, n - sel.window):] = True                # local window
     n_hh = 0
     for kind, budget in ((2, sel.r_item), (1, sel.r_rev)):

@@ -10,7 +10,7 @@ match in a static pool), 207-token shared system prompt, median prefill
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -177,8 +177,18 @@ def sample_candidates(catalog: Catalog, n: int, rng: np.random.Generator,
 def make_trace(catalog: Catalog, pool: ReviewPool, profile: DatasetProfile,
                n_requests: int, qps: float, n_users: int = 2000,
                n_candidates: int = 20, reviews_per_user: int = 3,
-               seed: int = 2, cluster_bias: float = 0.7) -> List[Request]:
+               seed: int = 2, cluster_bias: float = 0.7,
+               user_zipf_a: Optional[float] = None) -> List[Request]:
+    """Synthetic request trace.  `user_zipf_a` switches user sampling
+    from uniform to Zipfian (rank r drawn ∝ r^-a): a few heavy repeat
+    users dominate the stream — the workload shape where cross-request
+    user-history KV reuse pays (serving/workload.zipf_repeat_trace)."""
     rng = np.random.default_rng(seed)
+    p_user = None
+    if user_zipf_a is not None:
+        ranks = np.arange(1, n_users + 1, dtype=np.float64)
+        p_user = ranks ** -float(user_zipf_a)
+        p_user /= p_user.sum()
     # persistent per-user histories (re-appear across that user's requests)
     user_hist = {}
     for u in range(n_users):
@@ -196,7 +206,10 @@ def make_trace(catalog: Catalog, pool: ReviewPool, profile: DatasetProfile,
     reqs = []
     for _ in range(n_requests):
         t += rng.exponential(1.0 / qps)
-        u = int(rng.integers(0, n_users))
+        if p_user is None:
+            u = int(rng.integers(0, n_users))
+        else:
+            u = int(rng.choice(n_users, p=p_user))
         hist, mark = user_hist[u]
         reqs.append(Request(
             user_id=u, history_tokens=hist, history_marker_mask=mark,

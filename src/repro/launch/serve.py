@@ -55,20 +55,25 @@ def run_jax_cluster(args) -> dict:
     if args.mode == "prefix":
         raise SystemExit("--engine jax supports --mode rcllm|full "
                          "(prefix caching is a simulator-only baseline)")
+    if args.kv_reuse == "on" and args.mode != "rcllm":
+        raise SystemExit("--kv-reuse on needs --mode rcllm (the shared "
+                         "block store holds beyond-prefix blocks)")
     qps = args.qps if args.qps is not None else 8.0
     system, pool_rv, prof, _ = make_tiny_system(
         n_items=80, n_requests_hist=40, k_instances=args.k,
         n_layers=2, d_model=32)
     trace = SY.make_trace(system.catalog, pool_rv, prof, args.requests,
                           qps=qps, n_users=max(3, args.requests // 2),
-                          n_candidates=8, reviews_per_user=1, seed=2)
+                          n_candidates=8, reviews_per_user=1, seed=2,
+                          user_zipf_a=args.zipf_users)
 
     def make_cluster():
         return ClusterEngine(system, k=args.k, mode=args.mode,
                              policy=args.policy, page_size=args.page_size,
                              n_pages=args.pages,
                              max_batch_tokens=args.max_batch_tokens,
-                             attn_backend=args.attn_backend)
+                             attn_backend=args.attn_backend,
+                             kv_reuse=args.kv_reuse == "on")
 
     if args.warmup:
         make_cluster().run(trace, decode_steps=args.decode_steps)
@@ -77,7 +82,7 @@ def run_jax_cluster(args) -> dict:
     ttft = rep.ttft()
     return {
         "engine": "jax-cluster", "k": args.k, "mode": args.mode,
-        "attn_backend": args.attn_backend,
+        "attn_backend": args.attn_backend, "kv_reuse": args.kv_reuse,
         "policy": rep.policy, "requests": len(rep.completions),
         "decode_steps": args.decode_steps,
         "includes_jit_compile": not args.warmup,
@@ -96,6 +101,8 @@ def run_jax_cluster(args) -> dict:
             "transfer_seconds": round(w.transfer_seconds, 6),
             "pool_peak_pages": w.pool_peak_pages,
             "busy_seconds": round(w.busy_seconds, 4),
+            "preempted": w.preempted,
+            "kv_reuse": w.kv_reuse,
         } for w in rep.workers],
     }
 
@@ -114,24 +121,46 @@ def run_jax(args) -> dict:
     if args.mode == "prefix":
         raise SystemExit("--engine jax supports --mode rcllm|full "
                          "(prefix caching is a simulator-only baseline)")
+    if args.kv_reuse == "on" and args.mode != "rcllm":
+        raise SystemExit("--kv-reuse on needs --mode rcllm (the shared "
+                         "block store holds beyond-prefix blocks)")
+    if args.zipf_users is not None and args.mode != "rcllm":
+        raise SystemExit("--zipf-users shapes the rcllm trace; it has no "
+                         "effect on --mode full prompts")
     qps = args.qps if args.qps is not None else 8.0
     rng = np.random.default_rng(1)
     mode = args.mode
     plans = {}
+    reuse = None
 
     if mode == "rcllm":
         # full RcLLM stack: tiny model + both cache pools + placement
         from repro.core.rcllm import make_tiny_system
         from repro.data import synth as SY
+        from repro.serving.workload import (rcllm_reuse_info,
+                                            zipf_repeat_trace)
         system, pool_rv, prof, _ = make_tiny_system(
             n_items=80, n_requests_hist=40, k_instances=max(args.k, 1),
             n_layers=2, d_model=32)
         params, cfg = system.params, system.cfg
-        trace = SY.make_trace(system.catalog, pool_rv, prof, args.requests,
-                              qps=qps, n_users=max(3, args.requests // 2),
-                              n_candidates=8, reviews_per_user=1, seed=2)
+        if args.zipf_users is not None:
+            # identical trace shape to the uniform branch — the flag
+            # changes ONLY the user-id distribution, so off/on (or
+            # uniform/zipf) comparisons are not confounded
+            trace = zipf_repeat_trace(
+                system.catalog, pool_rv, prof, args.requests, qps=qps,
+                n_users=max(3, args.requests // 2),
+                zipf_a=args.zipf_users, reviews_per_user=1, seed=2)
+        else:
+            trace = SY.make_trace(system.catalog, pool_rv, prof,
+                                  args.requests, qps=qps,
+                                  n_users=max(3, args.requests // 2),
+                                  n_candidates=8, reviews_per_user=1,
+                                  seed=2)
         reqs, plans = rcllm_workload(system, trace,
                                      decode_steps=args.decode_steps)
+        if args.kv_reuse == "on":
+            reuse = rcllm_reuse_info(system, trace, plans)
     else:
         # Full-Recompute reference on random prompts
         import jax
@@ -161,12 +190,16 @@ def run_jax(args) -> dict:
     cfg = dataclasses.replace(cfg, attn_backend=args.attn_backend)
 
     def make_batcher():
+        from repro.serving.block_store import SharedBlockStore
+        pool = pool_for(cfg, page_size=args.page_size, n_pages=args.pages)
         engine = BatchEngine(
-            params, cfg, pool=pool_for(cfg, page_size=args.page_size,
-                                       n_pages=args.pages),
+            params, cfg, pool=pool,
             sel=ENG.SelectiveConfig(r_item=args.r_item, r_rev=args.r_rev,
-                                    window=16))
-        backend = JaxEngineBackend(engine, mode=mode, plans=plans)
+                                    window=16),
+            store=(SharedBlockStore(pool) if args.kv_reuse == "on"
+                   else None))
+        backend = JaxEngineBackend(engine, mode=mode, plans=plans,
+                                   reuse=reuse)
         return engine, backend, ContinuousBatcher(
             backend=backend, max_batch_tokens=args.max_batch_tokens)
 
@@ -181,9 +214,10 @@ def run_jax(args) -> dict:
     total = max(c.done_s for c in done)
     n_toks = sum(len(backend.generated[c.rid]) for c in done)
     stats = engine.pool.stats()
-    return {
+    out = {
         "engine": "jax", "mode": mode,
         "attn_backend": backend.attn_backend, "requests": len(done),
+        "kv_reuse": args.kv_reuse,
         "decode_steps": args.decode_steps,
         "includes_jit_compile": not args.warmup,
         "per_request_ttft_s": [round(float(x), 4) for x in ttft],
@@ -196,6 +230,9 @@ def run_jax(args) -> dict:
         "pool_peak_utilization": round(
             engine.pool.peak_pages / max(stats.n_pages - 1, 1), 4),
     }
+    if engine.store is not None:
+        out["block_store"] = engine.store.stats()
+    return out
 
 
 def main():
@@ -219,6 +256,15 @@ def main():
                     help="attention inside the jax engine's jitted steps: "
                          "jnp reference, or the Pallas flash/selective "
                          "kernels (interpret mode off-TPU)")
+    ap.add_argument("--kv-reuse", default="off", choices=["off", "on"],
+                    help="cross-request beyond-prefix KV reuse: a shared "
+                         "ref-counted block store (pinned user tier + "
+                         "LRU item tier) over each engine's paged pool; "
+                         "decoded tokens are identical either way")
+    ap.add_argument("--zipf-users", type=float, default=None,
+                    help="rcllm trace: draw user ids Zipf(a) instead of "
+                         "uniformly — heavy repeat users, the workload "
+                         "where --kv-reuse pays (e.g. 1.4)")
     ap.add_argument("--policy", default="affinity")
     ap.add_argument("--r-item", type=float, default=0.3)
     ap.add_argument("--r-rev", type=float, default=0.3)

@@ -45,6 +45,7 @@ from repro.core.assembly import RECOMPUTE, AssemblyPlan, plan_spans
 from repro.kernels import default_interpret
 from repro.kernels.flash_attention.ops import mha_flash
 from repro.models import layers as L
+from repro.serving import block_store as BS
 from repro.serving.kv_pool import PagedKVPool, pool_for
 
 # Decode runs one query per request: a small q tile keeps the padded
@@ -57,7 +58,9 @@ class BatchRequest:
     """One prompt for the batched engine.  `plan` + cached KV arrays are
     required for the selective (rcllm) path and ignored for full prefill.
     `n_reserve` pre-reserves page capacity for that many decode tokens so
-    decode never has to grab pages from the free list mid-flight."""
+    decode never has to grab pages from the free list mid-flight.
+    `reuse` (optional) names the request's shareable blocks for a
+    store-backed engine; without it the request stays fully private."""
 
     rid: int
     tokens: np.ndarray
@@ -66,6 +69,7 @@ class BatchRequest:
     cached_v: Optional[np.ndarray] = None
     have: Optional[np.ndarray] = None
     n_reserve: int = 0
+    reuse: Optional[BS.RequestReuse] = None
 
 
 def _decode_attn(q, k_l, v_l, kv_valid, cfg: LMConfig):
@@ -102,7 +106,7 @@ def _decode_attn(q, k_l, v_l, kv_valid, cfg: LMConfig):
 def _decode_step(
     params,
     toks,
-    page_tables,
+    slot_tables,
     seq_lens,
     new_pages,
     new_slots,
@@ -110,9 +114,10 @@ def _decode_step(
     arena_v,
     cfg: LMConfig,
 ):
-    """One decode token per request, K/V read through page tables.
+    """One decode token per request, K/V read through slot tables.
 
-    toks: (N,) last sampled token ids; page_tables: (N, P) page ids;
+    toks: (N,) last sampled token ids; slot_tables: (N, S) physical slot
+    ids (logical order — entries may point into shared store pages);
     seq_lens: (N,) tokens resident *before* this step (= the new token's
     position); new_pages/new_slots: (N,) physical slot claimed for the
     new token's KV.  -> (logits (N, V), arena_k', arena_v').
@@ -123,16 +128,17 @@ def _decode_step(
     """
     N = toks.shape[0]
     page = arena_k.shape[1]
-    S = page_tables.shape[1] * page
+    S = slot_tables.shape[1]
 
     x = params["embed"][toks].astype(jnp.dtype(cfg.dtype))  # (N, D)
     if cfg.tie_embeddings:
         x = x * (cfg.d_model**0.5)
     pos_new = seq_lens.astype(jnp.int32)  # (N,)
 
-    # one arena gather per step: (N, P, page, L, Hkv, Dh) -> (N, S, L, ...)
-    kg = arena_k[page_tables].reshape(N, S, cfg.n_layers, *arena_k.shape[3:])
-    vg = arena_v[page_tables].reshape(N, S, cfg.n_layers, *arena_v.shape[3:])
+    # one arena gather per step: slot-granular, so a row may interleave
+    # private pages with store-shared pages -> (N, S, L, Hkv, Dh)
+    kg = arena_k[slot_tables // page, slot_tables % page]
+    vg = arena_v[slot_tables // page, slot_tables % page]
     slot_pos = jnp.arange(S)
     kv_pos = jnp.concatenate(
         [jnp.broadcast_to(slot_pos[None], (N, S)), pos_new[:, None]], axis=1
@@ -186,6 +192,12 @@ class BatchEngine:
     batched path (`engine.selective_prefill_batch`, the default) and the
     legacy per-request loop — kept for parity tests and the
     `bench_attn_backend` batched-vs-loop comparison.
+
+    ``store`` (a `block_store.SharedBlockStore` over this engine's pool)
+    turns on cross-request KV reuse for the rcllm path: prefill *compute*
+    is unchanged, but pool insertion maps shareable positions at the
+    store's pages and writes only the private remainder — decoded tokens
+    are bitwise identical with or without it.
     """
 
     def __init__(
@@ -197,6 +209,7 @@ class BatchEngine:
         bucket: int = 64,
         decode_bucket: int = 8,
         batched_selective: bool = True,
+        store: Optional[BS.SharedBlockStore] = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -205,6 +218,8 @@ class BatchEngine:
         self.bucket = bucket
         self.decode_bucket = decode_bucket
         self.batched_selective = batched_selective
+        self.store = store
+        self.store_refs: Dict[int, list] = {}
         self.last_stats: Dict[int, ENG.EngineStats] = {}
 
     # ------------------------------ prefill --------------------------------
@@ -213,10 +228,26 @@ class BatchEngine:
         if mode == "full":
             return self._prefill_full(reqs)
         if mode == "rcllm":
+            if self.store is not None:
+                return self._prefill_selective_shared(reqs)
             if self.batched_selective:
                 return self._prefill_selective_batch(reqs)
             return np.stack([self._prefill_selective(r) for r in reqs])
         raise ValueError(mode)
+
+    def admission_pages(self, r: BatchRequest) -> tuple:
+        """(private-page bound, possible inserts) for one request — the
+        batcher's `can_admit` accounting under cross-request reuse."""
+        return BS.admission_pages(
+            self.pool,
+            self.store,
+            r.plan,
+            r.have,
+            self.sel,
+            r.reuse,
+            r.n_reserve,
+            bucket=self.bucket,
+        )
 
     def _prefill_full(self, reqs: Sequence[BatchRequest]) -> np.ndarray:
         lens = [len(r.tokens) for r in reqs]
@@ -335,6 +366,245 @@ class BatchEngine:
         self._insert_selective(r, stats, k_all, v_all)
         return logits
 
+    # --------------------------- shared insertion ---------------------------
+    def _prefix_full_key(self, r: BatchRequest):
+        """The prefix tier's content key for one request: instruction
+        digest + the (n_pad, r_pad) jit bucket its rows came out of
+        (computed from the *original* plan shape, so hit and miss
+        requests derive the same key)."""
+        reuse = r.reuse
+        if reuse is None or reuse.prefix_key is None or not reuse.prefix_len:
+            return None
+        return reuse.prefix_key + BS.shape_bucket(
+            r.plan, r.have, self.sel, self.bucket
+        )
+
+    def _prefill_selective_shared(self, reqs: Sequence[BatchRequest]) -> np.ndarray:
+        """rcllm prefill against the shared block store.
+
+        A **prefix-tier hit** is injected *before* compute: the stored
+        instruction rows — byte-for-byte what this request's selective
+        pass would recompute — are handed to the engine as cached KV
+        with `have` set, so the instruction drops out of the recompute
+        set entirely (real FLOP savings, not just skipped writes).  For
+        every other tier the compute is identical to the private path;
+        pool insertion then maps store-resident blocks instead of
+        re-writing their bytes.
+        """
+        for r in reqs:
+            self._check_plan(r)
+        store = self.store
+        prefix_hits: Dict[int, tuple] = {}
+        items_in = []
+        for r in reqs:
+            ck, cv, have = r.cached_k, r.cached_v, r.have
+            key = self._prefix_full_key(r)
+            blk = store.get(key) if key is not None else None
+            if blk is not None:
+                # held until release(rid); recorded via prefix_hits
+                blk.refcount += 1
+                prefix_hits[r.rid] = (key, blk)
+                npfx = min(blk.n_tokens, r.plan.n)
+                ck = np.array(ck, np.float32)
+                cv = np.array(cv, np.float32)
+                have = have.copy()
+                ck[:npfx] = blk.host_k[:npfx]
+                cv[:npfx] = blk.host_v[:npfx]
+                have[:npfx] = True
+            items_in.append((r.plan, ck, cv, have))
+        if self.batched_selective:
+            results = ENG.selective_prefill_batch(
+                self.params, self.cfg, items_in, self.sel, bucket=self.bucket
+            )
+        else:
+            results = [
+                ENG.selective_prefill_with_kv(
+                    self.params, self.cfg, *item, self.sel, bucket=self.bucket
+                )
+                for item in items_in
+            ]
+        return self._insert_batch_shared(reqs, results, prefix_hits)
+
+    def _insert_batch_shared(self, reqs, results, prefix_hits=None) -> np.ndarray:
+        """Map store hits, insert missing blocks, write the private rest.
+
+        Phase A acquires a reference on every resident block any request
+        in the batch will map, *before* any insertion can trigger LRU
+        eviction — so a block one batch member counts on can never be
+        evicted to make room for another's insert.  Phase B then, per
+        request: inserts missing blocks (optional — gated so the batch's
+        remaining mandatory private allocations keep their pages), maps
+        the hit positions that survived recompute selection, allocates
+        the private remainder and stages its rows for the fused scatter.
+        """
+        store = self.store
+        prefix_hits = prefix_hits if prefix_hits is not None else {}
+        held: Dict[int, list] = {r.rid: [] for r in reqs}
+        blocks: Dict[int, dict] = {r.rid: {} for r in reqs}
+        # prefix refs were already taken pre-compute (the hit changed the
+        # recompute set); record them so release(rid) drops them too
+        for rid, (key, blk) in prefix_hits.items():
+            held[rid].append(key)
+            blocks[rid][key] = blk
+        # phase A: silently acquire refs on resident blocks, batch-wide,
+        # before any insertion can evict (hit/miss accounting happens at
+        # resolution time in phase B, where same-batch inserts count as
+        # the hits they are)
+        for r in reqs:
+            reuse = r.reuse if r.reuse is not None else BS.RequestReuse()
+            keys = [ref.key for ref in reuse.blocks]
+            if reuse.user_key is not None and len(
+                BS.user_reuse_positions(r.plan, r.have, reuse.prefix_end)
+            ):
+                keys.append(reuse.user_key)
+            for key in keys:
+                blk = store.get(key)
+                if blk is not None:
+                    blk.refcount += 1
+                    held[r.rid].append(key)
+                    blocks[r.rid][key] = blk
+        # private-page demand still owed to unprocessed batch members:
+        # optional inserts must never eat into it
+        bounds = {r.rid: self.admission_pages(r)[0] for r in reqs}
+        remaining = sum(bounds.values())
+        out = []
+        entries, entries_l0 = [], []
+        for r, (logits, stats, k_all, v_all) in zip(reqs, results):
+            self.last_stats[r.rid] = stats
+            n = r.plan.n
+            rec = stats.recompute_mask
+            reuse = r.reuse if r.reuse is not None else BS.RequestReuse()
+            pos_parts, slot_parts = [], []
+            # --- prefix tier: the instruction's recomputed rows, shared
+            # by every request in this (n_pad, r_pad) bucket, pinned ---
+            key = self._prefix_full_key(r)
+            if key is not None:
+                pblk = None
+                if r.rid in prefix_hits:
+                    pblk = prefix_hits[r.rid][1]
+                    store.count_hit(pblk)
+                else:
+                    pblk = store.acquire(key)
+                    if pblk is not None:
+                        held[r.rid].append(key)
+                    else:
+                        # this request recomputed the instruction rows
+                        # itself — they become the shared block
+                        npfx = min(reuse.prefix_len, n)
+                        pblk = store.insert(
+                            key,
+                            BS.PREFIX_TIER,
+                            k_all[:npfx],
+                            v_all[:npfx],
+                            pinned=True,
+                            keep_free=remaining,
+                            defer_write=True,
+                        )
+                        if pblk is not None:
+                            pblk.refcount += 1
+                            held[r.rid].append(key)
+                if pblk is not None:
+                    npfx = min(pblk.n_tokens, n)
+                    pos_parts.append(np.arange(npfx))
+                    slot_parts.append(pblk.slots[:npfx])
+            # --- item tier: offline block bytes, LRU-evictable ---
+            for ref in reuse.blocks:
+                blk = blocks[r.rid].get(ref.key)
+                if blk is not None:
+                    store.count_hit(blk)
+                else:
+                    # an earlier request in this batch may have inserted
+                    # it since phase A — that is a hit too
+                    blk = store.acquire(ref.key)
+                    if blk is not None:
+                        held[r.rid].append(ref.key)
+                    elif ref.k is not None:
+                        blk = store.insert(
+                            ref.key,
+                            BS.ITEM_TIER,
+                            ref.k,
+                            ref.v,
+                            tokens=ref.tokens,
+                            keep_free=remaining,
+                            defer_write=True,
+                        )
+                        if blk is not None:
+                            blk.refcount += 1
+                            held[r.rid].append(ref.key)
+                if blk is None:
+                    continue
+                use = ~rec[ref.positions]
+                pos_parts.append(ref.positions[use])
+                slot_parts.append(blk.slots[ref.offsets[use]])
+            # --- user tier: fresh layer-0 + semantic deep layers, pinned ---
+            u_pos = None
+            if reuse.user_key is not None:
+                u_pos = BS.user_reuse_positions(r.plan, r.have, reuse.prefix_end)
+            if u_pos is not None and len(u_pos):
+                ublk = blocks[r.rid].get(reuse.user_key)
+                if ublk is not None:
+                    store.count_hit(ublk)
+                else:
+                    ublk = store.acquire(reuse.user_key)
+                    if ublk is not None:
+                        held[r.rid].append(reuse.user_key)
+                    else:
+                        ku = np.concatenate(
+                            [k_all[u_pos, :1], r.cached_k[u_pos, 1:]], axis=1
+                        )
+                        vu = np.concatenate(
+                            [v_all[u_pos, :1], r.cached_v[u_pos, 1:]], axis=1
+                        )
+                        ublk = store.insert(
+                            reuse.user_key,
+                            BS.USER_TIER,
+                            ku,
+                            vu,
+                            positions=u_pos,
+                            pinned=True,
+                            keep_free=remaining,
+                            defer_write=True,
+                        )
+                        if ublk is not None:
+                            ublk.refcount += 1
+                            held[r.rid].append(reuse.user_key)
+                if ublk is not None:
+                    common = np.intersect1d(u_pos, ublk.positions)
+                    common = common[~rec[common]]
+                    pos_parts.append(common)
+                    slot_parts.append(
+                        ublk.slots[np.searchsorted(ublk.positions, common)]
+                    )
+            mapped_pos = (
+                np.concatenate(pos_parts)
+                if pos_parts
+                else np.zeros(0, np.int64)
+            )
+            mapped_slots = (
+                np.concatenate(slot_parts)
+                if slot_parts
+                else np.zeros(0, np.int64)
+            )
+            cap = self.pool.pages_for(n + r.n_reserve) * self.pool.page_size
+            need = -(-(cap - len(mapped_pos)) // self.pool.page_size)
+            if self.pool.free_pages < need:
+                store.evict_for(need)
+            self.pool.alloc_mapped(r.rid, n + r.n_reserve, mapped_pos, mapped_slots)
+            remaining -= bounds[r.rid]
+            self.store_refs[r.rid] = held[r.rid]
+            mapped_mask = np.zeros(n, bool)
+            mapped_mask[mapped_pos] = True
+            pos, kw, vw = self._selective_rows(r, stats, k_all, v_all)
+            keep = ~mapped_mask[pos]
+            entries.append((r.rid, pos[keep], kw[keep], vw[keep]))
+            l0_pos = np.where(~mapped_mask)[0]
+            entries_l0.append((r.rid, l0_pos, k_all[l0_pos, 0], v_all[l0_pos, 0]))
+            out.append(logits)
+        store.flush_writes()
+        self.pool.write_at_batch(entries)
+        self.pool.write_at_batch(entries_l0, layer=0)
+        return np.stack(out)
+
     # ------------------------------- decode --------------------------------
     def decode(self, rids: Sequence[int], last_tokens: Sequence[int]) -> np.ndarray:
         """One token for each running request.  -> logits (N, V)."""
@@ -366,5 +636,10 @@ class BatchEngine:
         return np.asarray(logits, np.float32)[:n]
 
     def release(self, rid: int) -> None:
+        """Free a request's private pages and drop its shared-block
+        references.  Idempotent — releasing an unknown or already-freed
+        rid is a no-op (a duplicate `finish()` must not crash the loop)."""
         self.pool.free(rid)
+        if self.store is not None:
+            self.store.release_all(self.store_refs.pop(rid, []))
         self.last_stats.pop(rid, None)

@@ -26,12 +26,15 @@ Eq. 2 affinity router into the dispatch hook.
 """
 from __future__ import annotations
 
+import bisect
 import math
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Protocol, Sequence
 
 import numpy as np
+
+from repro.serving.kv_pool import PoolExhausted
 
 
 @dataclass(order=True)
@@ -71,6 +74,11 @@ class EngineBackend(Protocol):
     def finish(self, req: PendingRequest) -> None:
         """Request left the decode set — release its resources."""
 
+    def preempt(self, req: PendingRequest) -> None:
+        """Request was evicted mid-decode and will re-prefill: release
+        its execution resources but KEEP whatever the backend needs to
+        run it again (plans, staged KV)."""
+
 
 class SimBackend:
     """Virtual clock: analytic prefill/decode time functions."""
@@ -93,6 +101,9 @@ class SimBackend:
     def finish(self, req: PendingRequest) -> None:
         pass
 
+    def preempt(self, req: PendingRequest) -> None:
+        pass
+
 
 class JaxEngineBackend:
     """Real hardware: the batched JAX engine behind the same seam.
@@ -104,10 +115,15 @@ class JaxEngineBackend:
     """
 
     def __init__(self, engine, mode: str = "full", plans: Optional[Dict]
-                 = None):
+                 = None, reuse: Optional[Dict] = None):
         self.engine = engine
         self.mode = mode
         self.plans = plans if plans is not None else {}
+        # rid -> block_store.RequestReuse, for a store-backed engine
+        self.reuse = reuse if reuse is not None else {}
+        # rid -> (store.version, bound, n_ins): admission bounds are
+        # immutable until the store's resident set changes
+        self._admit_cache: Dict[int, tuple] = {}
         self.last_token: Dict[int, int] = {}
         self.generated: Dict[int, List[int]] = {}
 
@@ -130,6 +146,7 @@ class JaxEngineBackend:
             if self.mode == "rcllm":
                 plan, ck, cv, have = self.plans[r.rid]
                 br.plan, br.cached_k, br.cached_v, br.have = plan, ck, cv, have
+                br.reuse = self.reuse.get(r.rid)
             out.append(br)
         return out
 
@@ -147,9 +164,41 @@ class JaxEngineBackend:
         # pages for the prompt + the decode tokens it will append, on top
         # of what the rest of the forming batch will claim
         pool = self.engine.pool
-        need = sum(pool.pages_for(r.n_tokens + max(r.decode_steps - 1, 0))
-                   for r in (*batch, req))
-        return need <= pool.free_pages
+        store = getattr(self.engine, "store", None)
+        if store is None or self.mode != "rcllm":
+            need = sum(
+                pool.pages_for(r.n_tokens + max(r.decode_steps - 1, 0))
+                for r in (*batch, req))
+            return need <= pool.free_pages
+        # cross-request reuse: count only private pages against the
+        # free list plus what LRU eviction could reclaim (excluding the
+        # blocks these very requests count on mapping).  Store inserts
+        # are NOT charged: they are optional and the engine's keep_free
+        # gate already refuses any insert that would eat the batch's
+        # remaining mandatory demand
+        from repro.serving import block_store as BS
+        need = 0
+        hit_keys = set()
+        for r in (*batch, req):
+            reuse = self.reuse.get(r.rid)
+            entry = self._admit_cache.get(r.rid)
+            if entry is not None and entry[0] == store.version:
+                _, bound, n_ins = entry
+            else:
+                plan, _, _, have = self.plans[r.rid]
+                bound, n_ins = BS.admission_pages(
+                    pool, store, plan, have, self.engine.sel, reuse,
+                    max(r.decode_steps - 1, 0), bucket=self.engine.bucket)
+                self._admit_cache[r.rid] = (store.version, bound, n_ins)
+            need += bound
+            if reuse is not None:
+                for ref in reuse.blocks:
+                    if store.has(ref.key):
+                        hit_keys.add(ref.key)
+                if reuse.user_key is not None and store.has(reuse.user_key):
+                    hit_keys.add(reuse.user_key)
+        free = pool.free_pages + store.reclaimable_pages(exclude=hit_keys)
+        return need <= free
 
     def decode(self, batch: Sequence[PendingRequest]) -> float:
         t0 = time.perf_counter()
@@ -164,6 +213,13 @@ class JaxEngineBackend:
     def finish(self, req: PendingRequest) -> None:
         self.engine.release(req.rid)
         self.last_token.pop(req.rid, None)
+        self._admit_cache.pop(req.rid, None)
+
+    def preempt(self, req: PendingRequest) -> None:
+        """Release pages/refs for a mid-decode eviction, keeping the
+        request re-runnable (subclasses that drop plans in `finish`
+        must NOT drop them here — the victim re-prefills)."""
+        JaxEngineBackend.finish(self, req)
 
 
 class WorkerState:
@@ -185,6 +241,8 @@ class WorkerState:
         self.max_decode_batch = max_decode_batch
         self.clock = 0.0
         self.busy_seconds = 0.0          # step time only, no idle gaps
+        self.preempted = 0               # decode-time pool-pressure victims
+        self._preempt_counts: Dict[int, int] = {}
         self.waiting: List[PendingRequest] = []
         # decode set entries: [req, ttft_s, decode_steps_left]
         self.decoding: List[list] = []
@@ -261,8 +319,22 @@ class WorkerState:
                     self.decoding.append([r, self.clock - r.arrival_s,
                                           r.decode_steps - 1])
         else:
-            db = self.decoding[:self.max_decode_batch]
-            dt = self.backend.decode([e[0] for e in db])
+            while True:
+                db = self.decoding[:self.max_decode_batch]
+                try:
+                    dt = self.backend.decode([e[0] for e in db])
+                    break
+                except PoolExhausted:
+                    # decode could not claim a KV slot for every running
+                    # request: preempt the youngest (free its pages,
+                    # requeue it for a fresh prefill) instead of letting
+                    # the error kill the worker and leak every running
+                    # request's pages — then retry so the survivors step
+                    # past the growth boundary *before* the next prefill
+                    # can re-admit the victim into the same conflict
+                    self._preempt_youngest()
+                    if not self.decoding:
+                        return
             self.clock += dt
             self.busy_seconds += dt
             self._decode_s_per_step = self._ewma(self._decode_s_per_step, dt)
@@ -278,6 +350,26 @@ class WorkerState:
                 else:
                     keep.append(e)
             self.decoding = keep
+
+
+    def _preempt_youngest(self) -> None:
+        """Evict the youngest decoding request under decode-time pool
+        pressure: release its resources and put it back in the arrival
+        queue (it will re-prefill — greedy decode regenerates the same
+        tokens, so only its latency suffers)."""
+        e = max(self.decoding, key=lambda e: (e[0].arrival_s, e[0].rid))
+        req = e[0]
+        self._preempt_counts[req.rid] = \
+            self._preempt_counts.get(req.rid, 0) + 1
+        if self._preempt_counts[req.rid] > 8:
+            raise RuntimeError(
+                f"request {req.rid} preempted {self._preempt_counts[req.rid]}"
+                " times: the pool cannot hold its decode tokens even "
+                "alone — backend decode-page reservation is broken")
+        self.decoding.remove(e)
+        self.backend.preempt(req)
+        self.preempted += 1
+        bisect.insort(self.waiting, req)
 
 
 # dispatch hook: (request, arrival time, workers) -> worker index

@@ -1,0 +1,479 @@
+"""Cross-request beyond-prefix KV reuse: a shared block store over the pool.
+
+This is the serving-path realization of the paper's **stratified
+storage** (§III-B): KV blocks are content-addressed (blake2b over the
+bytes that determine them), held in pool pages owned by the store, and
+shared across concurrent requests through refcounts.  Two tiers:
+
+* **user tier** — one pinned block per (instruction + user history)
+  prefix, replicated per worker.  Its bytes are the *deterministic*
+  part of the prefix KV: the always-fresh layer-0 plane (a pure
+  function of the token ids — bitwise reproducible across padding
+  buckets) plus the semantic-prototype deep layers.  Positions the
+  selective pass recomputes vary per request and are never part of the
+  block; each request overlays them privately.
+* **item tier** — one block per item description, fed by the cluster's
+  `StagedBlocks` / transfer ledger, holding the offline-precomputed
+  block bytes for every layer (the offline layer-0 KV is bitwise equal
+  to the online fresh layer-0 for the same tokens).  Unpinned:
+  LRU-evicted when unreferenced and the pool is under pressure.
+
+Because every stored byte equals what the no-reuse path would have
+written for the same position, mapping a request's slot-table entries
+at shared slots changes *where* decode reads, never *what* — decoded
+tokens are bitwise identical with reuse on or off.  The store also
+keeps the host-side block bytes, so a cluster worker whose store holds
+an item block skips the cross-shard transfer entirely (a zero-latency
+hit in the ledger's terms).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.assembly import FROM_SEMANTIC, AssemblyPlan
+from repro.serving.kv_pool import PagedKVPool
+
+USER_TIER = "user"
+ITEM_TIER = "item"
+# The instruction prefix: identical recomputed rows for every request.
+# Keyed by (digest, n_pad, r_pad) — the jit-bucket shape — because the
+# rows come out of the selective stack's trace; within one trace shape
+# they are bitwise request-invariant (and the batched↔loop parity test
+# pins batch-size invariance).  This tier is what subsumes classic
+# prefix caching inside the beyond-prefix store.
+PREFIX_TIER = "prefix"
+
+
+def content_key(kind: str, *arrays) -> Tuple[str, str]:
+    """Content address: blake2b over the arrays that determine the bytes."""
+    h = hashlib.blake2b(digest_size=16)
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return (kind, h.hexdigest())
+
+
+@dataclass
+class BlockRef:
+    """One reusable block inside a request's prompt, as seen by the
+    engine: where it lands (`positions`), which block rows those map to
+    (`offsets`), and the host bytes to insert on a store miss."""
+
+    key: Tuple[str, str]
+    positions: np.ndarray
+    offsets: np.ndarray
+    k: Optional[np.ndarray] = None
+    v: Optional[np.ndarray] = None
+    tokens: Optional[np.ndarray] = None
+
+
+@dataclass
+class RequestReuse:
+    """Per-request reuse metadata attached to a `BatchRequest`."""
+
+    user_key: Optional[Tuple[str, str]] = None
+    prefix_end: int = 0
+    blocks: List[BlockRef] = field(default_factory=list)
+    # instruction-prefix tier: content digest + how many leading tokens
+    # it covers; the engine appends the (n_pad, r_pad) bucket at runtime
+    prefix_key: Optional[Tuple[str, str]] = None
+    prefix_len: int = 0
+
+
+@dataclass
+class StoredBlock:
+    key: Tuple[str, str]
+    kind: str
+    pages: List[int]
+    slots: np.ndarray  # (n_tokens,) physical slot ids, block-row order
+    host_k: np.ndarray  # host copies: staging + re-insert after eviction
+    host_v: np.ndarray
+    tokens: Optional[np.ndarray] = None
+    positions: Optional[np.ndarray] = None  # user tier: covered positions
+    pinned: bool = False
+    refcount: int = 0
+    last_used: int = 0
+    hits: int = 0
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.slots)
+
+
+def user_reuse_positions(
+    plan: AssemblyPlan, have: np.ndarray, prefix_end: int
+) -> np.ndarray:
+    """Prefix positions whose bytes are deterministic per user: semantic
+    reuse hits inside [0, prefix_end).  Everything else in the prefix
+    (markers, separators, instruction) is always recomputed."""
+    pos = np.where((plan.source == FROM_SEMANTIC) & have)[0]
+    return pos[pos < prefix_end]
+
+
+class SharedBlockStore:
+    """Content-addressed, ref-counted KV block sharing over a pool.
+
+    Pages the store allocates (`pool.alloc_pages`) belong to the store
+    until a block is evicted; requests reference them through slot-table
+    entries and per-request refcounts (`acquire`/`release`).  Eviction
+    only ever touches unpinned blocks with refcount 0, in LRU order.
+    """
+
+    def __init__(
+        self,
+        pool: PagedKVPool,
+        max_pages: Optional[int] = None,
+        max_user_pages: Optional[int] = None,
+    ):
+        self.pool = pool
+        # the store must never crowd requests out of their own pool:
+        # total budget is half the pages (LRU keeps the hot set), and
+        # PINNED pages — which eviction can never reclaim, so they can
+        # permanently wedge admission on a small pool — are capped at a
+        # quarter across tiers (a too-small pool simply gets no prefix
+        # tier rather than a deadlocked batcher)
+        self.max_pages = (
+            max_pages if max_pages is not None else max(pool.n_pages // 2, 1)
+        )
+        self.max_pinned_pages = max(pool.n_pages // 4, 1)
+        self.max_user_pages = (
+            max_user_pages
+            if max_user_pages is not None
+            else max(pool.n_pages // 4, 1)
+        )
+        self.blocks: Dict[Tuple[str, str], StoredBlock] = {}
+        self._pending_writes: List[tuple] = []
+        self._tick = 0
+        # bumped on every insert/eviction: lets admission accounting
+        # memoize per-request page bounds until the resident set changes
+        self.version = 0
+        self.counters = {
+            "hits_user": 0,
+            "hits_item": 0,
+            "hits_prefix": 0,
+            "misses_user": 0,
+            "misses_item": 0,
+            "misses_prefix": 0,
+            "inserts": 0,
+            "insert_skips": 0,
+            "evictions": 0,
+        }
+
+    # ------------------------------- lookup --------------------------------
+    def has(self, key) -> bool:
+        return key in self.blocks
+
+    def peek(self, key) -> Optional[StoredBlock]:
+        """Lookup without touching LRU state or counters (admission)."""
+        return self.blocks.get(key)
+
+    def get(self, key) -> Optional[StoredBlock]:
+        blk = self.blocks.get(key)
+        if blk is not None:
+            self._tick += 1
+            blk.last_used = self._tick
+        return blk
+
+    def acquire(self, key) -> Optional[StoredBlock]:
+        """Lookup + take a reference (protects the block from eviction
+        for the holder's lifetime).  Counts a tier hit/miss."""
+        blk = self.get(key)
+        kind = key[0]
+        if blk is None:
+            self.counters[f"misses_{kind}"] += 1
+            return None
+        blk.refcount += 1
+        self.count_hit(blk)
+        return blk
+
+    def count_hit(self, blk: StoredBlock) -> None:
+        """Record a tier hit on an already-referenced block (the engine
+        acquires refs batch-wide *before* resolving, so hit accounting
+        happens separately at resolution time)."""
+        self._tick += 1
+        blk.last_used = self._tick
+        blk.hits += 1
+        self.counters[f"hits_{blk.kind}"] += 1
+
+    def release(self, key) -> None:
+        blk = self.blocks.get(key)
+        if blk is not None and blk.refcount > 0:
+            blk.refcount -= 1
+
+    def release_all(self, keys: Sequence) -> None:
+        for key in keys:
+            self.release(key)
+
+    # ------------------------------ capacity -------------------------------
+    def pages_held(self, kind: Optional[str] = None) -> int:
+        return sum(
+            len(b.pages) for b in self.blocks.values() if kind is None or b.kind == kind
+        )
+
+    def reclaimable_pages(self, exclude: Sequence = ()) -> int:
+        """Pages eviction could free right now: unpinned, unreferenced
+        blocks whose key is not in `exclude` (blocks an admission
+        candidate counts on must not double as reclaimable space)."""
+        ex = set(exclude)
+        return sum(
+            len(b.pages)
+            for b in self.blocks.values()
+            if not b.pinned and b.refcount == 0 and b.key not in ex
+        )
+
+    def _evict_lru(self) -> bool:
+        """Evict the least-recently-used unpinned, unreferenced block."""
+        victims = [b for b in self.blocks.values() if not b.pinned and b.refcount == 0]
+        if not victims:
+            return False
+        victim = min(victims, key=lambda b: b.last_used)
+        del self.blocks[victim.key]
+        self.pool.release_pages(victim.pages)
+        self.counters["evictions"] += 1
+        self.version += 1
+        return True
+
+    def evict_for(self, n_pages: int) -> bool:
+        """LRU-evict until `n_pages` are free in the pool.  -> success."""
+        while self.pool.free_pages < n_pages:
+            if not self._evict_lru():
+                return False
+        return True
+
+    # ------------------------------- insert --------------------------------
+    def insert(
+        self,
+        key,
+        kind: str,
+        k: np.ndarray,
+        v: np.ndarray,
+        tokens: Optional[np.ndarray] = None,
+        positions: Optional[np.ndarray] = None,
+        pinned: bool = False,
+        keep_free: int = 0,
+        defer_write: bool = False,
+    ) -> Optional[StoredBlock]:
+        """Insert a block's bytes into store-owned pages.
+
+        Insertion is *optional*: it returns None (and counts a skip)
+        when the tier budget is exhausted or when taking the pages would
+        leave fewer than `keep_free` free pages even after LRU eviction
+        — the caller falls back to private writes.  k/v: (t, L, Hkv, Dh)
+        pre-RoPE bytes, row order matching `BlockRef.offsets`.
+
+        ``defer_write`` stages the arena scatter in `_pending_writes`
+        instead of paying an eager full-arena copy per block; the engine
+        calls `flush_writes` once per prefill batch (the bytes must land
+        before anything reads the arena — decode does, prefill doesn't).
+        """
+        if key in self.blocks:
+            return self.blocks[key]
+        n = k.shape[0]
+        if n == 0:
+            return None
+        need = self.pool.pages_for(n)
+        if kind == USER_TIER:
+            if self.pages_held(USER_TIER) + need > self.max_user_pages:
+                self.counters["insert_skips"] += 1
+                return None
+        if pinned:
+            held = sum(
+                len(b.pages) for b in self.blocks.values() if b.pinned
+            )
+            if held + need > self.max_pinned_pages:
+                self.counters["insert_skips"] += 1
+                return None
+        while self.pages_held() + need > self.max_pages:
+            if not self._evict_lru():
+                self.counters["insert_skips"] += 1
+                return None
+        if not self.evict_for(need + keep_free):
+            self.counters["insert_skips"] += 1
+            return None
+        pages = self.pool.alloc_pages(need)
+        slots = self.pool.page_slots(pages)[:n]
+        host_k = np.asarray(k, np.float32)
+        host_v = np.asarray(v, np.float32)
+        if defer_write:
+            self._pending_writes.append((slots, host_k, host_v))
+        else:
+            self.pool.write_slots(slots, host_k, host_v)
+        self._tick += 1
+        blk = StoredBlock(
+            key=key,
+            kind=kind,
+            pages=pages,
+            slots=slots,
+            host_k=host_k,
+            host_v=host_v,
+            tokens=tokens,
+            positions=positions,
+            pinned=pinned,
+            last_used=self._tick,
+        )
+        self.blocks[key] = blk
+        self.counters["inserts"] += 1
+        self.version += 1
+        return blk
+
+    def flush_writes(self) -> None:
+        """Land every deferred insert's bytes in ONE fused arena scatter."""
+        self.pool.write_slots_batch(self._pending_writes)
+        self._pending_writes = []
+
+    # -------------------------------- stats --------------------------------
+    def stats(self) -> dict:
+        tiers = (USER_TIER, ITEM_TIER, PREFIX_TIER)
+        hits = sum(self.counters[f"hits_{t}"] for t in tiers)
+        misses = sum(self.counters[f"misses_{t}"] for t in tiers)
+        return {
+            "blocks": len(self.blocks),
+            "pages_user": self.pages_held(USER_TIER),
+            "pages_item": self.pages_held(ITEM_TIER),
+            "pages_prefix": self.pages_held(PREFIX_TIER),
+            "hit_rate": hits / max(hits + misses, 1),
+            **self.counters,
+        }
+
+
+def recompute_base_and_topk(
+    plan: AssemblyPlan, have: np.ndarray, sel
+) -> Tuple[np.ndarray, int]:
+    """The deterministic half of `engine.select_recompute`: the base
+    recompute mask (misses + trailing window; instruction tokens have
+    no cache entry so ~have covers them — and under a prefix-tier hit
+    they really are cached) plus the per-class top-k COUNT the Eq. 3
+    budgets will add.  The chosen top-k *set* is score-dependent, its
+    size is not — this single helper is what admission accounting, the
+    prefix-tier content key and benchmark bucket pre-warming all build
+    on, so they cannot drift from the engine's selection rule.
+    """
+    n = plan.n
+    base = ~np.asarray(have, bool)
+    base[max(0, n - sel.window) :] = True
+    k_top = 0
+    for kind, budget in ((2, sel.r_item), (1, sel.r_rev)):
+        cls = int(((plan.seg_kind == kind) & ~base).sum())
+        if cls:
+            k_top += int(np.ceil(budget * cls))
+    return base, k_top
+
+
+def shape_bucket(
+    plan: AssemblyPlan, have: np.ndarray, sel, bucket: int = 64
+) -> Tuple[int, int]:
+    """The (n_pad, r_pad) jit bucket one request's selective prefill
+    lands in — known without running layer 0 (`recompute_base_and_topk`).
+    """
+    base, k_top = recompute_base_and_topk(plan, have, sel)
+    r_count = int(base.sum()) + k_top
+    n_pad = -(-plan.n // bucket) * bucket
+    return n_pad, max(64, -(-r_count // 64) * 64)
+
+
+def admission_pages(
+    pool: PagedKVPool,
+    store: Optional[SharedBlockStore],
+    plan: AssemblyPlan,
+    have: np.ndarray,
+    sel,
+    reuse: Optional[RequestReuse],
+    n_reserve: int,
+    bucket: int = 64,
+) -> Tuple[int, int]:
+    """Upper bound on the private pages one request consumes at prefill.
+
+    -> (private page bound, number of blocks it may insert).  Without a
+    store this is the plain `pages_for` demand.  With one, positions
+    mappable from resident blocks are credited, minus a worst-case
+    allowance for the selective pass stealing mapped positions back to
+    private (the recompute *count* is deterministic from the plan shape
+    even though the chosen set is score-dependent), so the bound stays
+    a true upper bound and batcher-admitted prefills can never hit
+    `PoolExhausted`.  Inserts need no extra charge: they are optional,
+    and the engine's keep_free gate refuses any insert that would eat
+    mandatory demand.  Prefix-tier positions are credited without a
+    steal allowance — their shared content IS the recomputed content.
+    """
+    base_pages = pool.pages_for(plan.n + n_reserve)
+    if store is None or reuse is None:
+        return base_pages, 0
+    n = plan.n
+    mappable = np.zeros(n, bool)
+    n_missing = 0
+    for ref in reuse.blocks:
+        if store.has(ref.key):
+            mappable[ref.positions] = True
+        elif ref.k is not None:
+            n_missing += 1
+    u_pos = None
+    if reuse.user_key is not None:
+        u_pos = user_reuse_positions(plan, have, reuse.prefix_end)
+        ublk = store.peek(reuse.user_key)
+        if ublk is not None:
+            mappable[u_pos[np.isin(u_pos, ublk.positions)]] = True
+        elif len(u_pos):
+            n_missing += 1
+    base_rec, k_top = recompute_base_and_topk(plan, have, sel)
+    steal = int(mappable[base_rec].sum())
+    steal += min(k_top, int(mappable[~base_rec].sum()))
+    n_shared_min = max(int(mappable.sum()) - steal, 0)
+    # prefix tier: credited without a steal allowance — its shared
+    # content IS the recomputed content, so selection can't unshare it
+    if reuse.prefix_key is not None and reuse.prefix_len:
+        full_key = reuse.prefix_key + shape_bucket(plan, have, sel, bucket)
+        if store.has(full_key):
+            n_shared_min += min(reuse.prefix_len, n)
+        else:
+            n_missing += 1
+    priv_slots = base_pages * pool.page_size - n_shared_min
+    return -(-priv_slots // pool.page_size), n_missing
+
+
+def check_partition(
+    pool: PagedKVPool, store: Optional[SharedBlockStore] = None
+) -> None:
+    """Allocator + store invariant: every page (except scratch page 0)
+    is owned by exactly one of {free list, one request's page table, the
+    shared store}; slot-table entries only reference pages the request
+    owns or the store holds; store blocks are internally consistent.
+    Raises AssertionError on violation (tests call this after each op).
+    """
+    owner: Dict[int, str] = {}
+
+    def claim(page: int, who: str) -> None:
+        assert page != 0, f"{who} owns the scratch page"
+        assert page not in owner, f"page {page}: {owner[page]} and {who}"
+        owner[page] = who
+
+    for page in pool._free:
+        claim(page, "free-list")
+    for rid, pages in pool.page_tables.items():
+        for page in pages:
+            claim(page, f"request {rid}")
+    store_pages = set()
+    if store is not None:
+        for blk in store.blocks.values():
+            assert blk.refcount >= 0, f"{blk.key}: negative refcount"
+            assert len(blk.pages) == pool.pages_for(blk.n_tokens)
+            for page in blk.pages:
+                claim(page, f"store block {blk.key}")
+                store_pages.add(page)
+            assert set(blk.slots // pool.page_size) <= set(blk.pages)
+    assert set(owner) == set(range(1, pool.n_pages)), (
+        "pages leaked or double-freed: "
+        f"{set(range(1, pool.n_pages)) ^ set(owner)}"
+    )
+    for rid, table in pool.slot_tables.items():
+        own = set(pool.page_tables[rid])
+        for page in np.unique(table // pool.page_size):
+            assert int(page) in own or int(page) in store_pages, (
+                f"request {rid} slot table references page {page} it "
+                "neither owns nor shares"
+            )

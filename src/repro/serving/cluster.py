@@ -37,6 +37,8 @@ from repro.core import cost_model as CM
 from repro.core import engine as ENG
 from repro.core import item_cache as IC
 from repro.core import scheduler as SCH
+from repro.data import synth as SY
+from repro.serving import workload as WL
 from repro.serving.batch_engine import BatchEngine
 from repro.serving.batching import (
     ClusterBatcher,
@@ -45,6 +47,7 @@ from repro.serving.batching import (
     PendingRequest,
     WorkerState,
 )
+from repro.serving.block_store import SharedBlockStore
 from repro.serving.kv_pool import pool_for
 
 
@@ -69,6 +72,9 @@ class ClusterWorkerBackend(JaxEngineBackend):
         self.hw = hw
         self.pending_transfer_s: Dict[int, float] = {}  # rid -> seconds owed
         self.transfer_seconds = 0.0
+        # cross-shard pulls skipped because the worker's shared block
+        # store already held the (previously transferred) item bytes
+        self.transfers_avoided = 0
 
     def prefill(self, batch: Sequence[PendingRequest]) -> float:
         dt = super().prefill(batch)
@@ -83,6 +89,7 @@ class ClusterWorkerBackend(JaxEngineBackend):
         # or a long run retains every request's (n, L, Hkv, Dh) arrays
         super().finish(req)
         self.plans.pop(req.rid, None)
+        self.reuse.pop(req.rid, None)
         self.pending_transfer_s.pop(req.rid, None)
 
 
@@ -97,6 +104,10 @@ class WorkerReport:
     transfer_seconds: float
     pool_peak_pages: int
     busy_seconds: float
+    preempted: int = 0
+    # shared-block-store tier stats when kv_reuse is on (None otherwise):
+    # user/item tier hit rates + pages held + transfers avoided
+    kv_reuse: Optional[dict] = None
 
 
 @dataclass
@@ -162,6 +173,7 @@ class ClusterEngine:
         hw: CM.Hardware = CM.V5E_1,
         seed: int = 0,
         attn_backend: Optional[str] = None,
+        kv_reuse: bool = False,
     ):
         if system.placement.k != k:
             raise ValueError(
@@ -186,13 +198,17 @@ class ClusterEngine:
         if attn_backend is not None:
             cfg = dataclasses.replace(cfg, attn_backend=attn_backend)
         self.cfg = cfg
+        self.kv_reuse = kv_reuse
+        self._item_keys: Dict[int, tuple] = {}
         self.backends: List[ClusterWorkerBackend] = []
         for w in range(k):
+            pool = pool_for(cfg, page_size=page_size, n_pages=n_pages)
             engine = BatchEngine(
                 system.params,
                 cfg,
-                pool=pool_for(cfg, page_size=page_size, n_pages=n_pages),
+                pool=pool,
                 sel=sel or ENG.SelectiveConfig(),
+                store=SharedBlockStore(pool) if kv_reuse else None,
             )
             shard = None
             if system.item_store is not None:
@@ -222,10 +238,31 @@ class ClusterEngine:
         self._bind(req, rq, wid)
         return wid
 
+    def _item_key(self, item: int) -> tuple:
+        """Memoized content key of one catalog item's block (same token
+        derivation as the offline `build_item_store`: SEP + item text)."""
+        it = int(item)
+        key = self._item_keys.get(it)
+        if key is None:
+            doc = np.concatenate(
+                [[SY.ITEM_SEP], self.system.catalog.item_tokens[it]]
+            ).astype(np.int64)
+            key = WL.item_block_key(doc)
+            self._item_keys[it] = key
+        return key
+
     def _bind(self, req: PendingRequest, rq, wid: int) -> None:
         """Build the request's plan *for the chosen worker*, stage its
         item blocks against that worker's shard (recording transfers),
-        and hand plan + assembled KV to the worker's backend."""
+        and hand plan + assembled KV to the worker's backend.
+
+        With `kv_reuse` on, staging consults the worker's shared block
+        store first: an item whose bytes the store already holds is
+        staged from the store's host copy — for a non-resident item that
+        means the cross-shard pull (and its modeled network time) is
+        skipped entirely, the ledgered transfer having been paid exactly
+        once when the block first entered the store.
+        """
         system = self.system
         backend = self.backends[wid]
         plan = system.plan_for(rq, wid)
@@ -237,7 +274,25 @@ class ClusterEngine:
         if self.mode != "rcllm":
             return
         items = np.unique(plan.block_item[plan.source == ASM.FROM_ITEM])
-        staged, moved_tokens = backend.shard.stage(items)
+        store = backend.engine.store
+        staged: Dict[int, IC.ItemBlock] = {}
+        to_stage = []
+        for it in items:
+            it = int(it)
+            blk_s = store.peek(self._item_key(it)) if store else None
+            if blk_s is not None:
+                staged[it] = IC.ItemBlock(
+                    item_id=it,
+                    tokens=blk_s.tokens,
+                    k=blk_s.host_k,
+                    v=blk_s.host_v,
+                )
+                if not backend.shard.resident(it):
+                    backend.transfers_avoided += 1
+            else:
+                to_stage.append(it)
+        pulled, moved_tokens = backend.shard.stage(to_stage)
+        staged.update(pulled)
         ck, cv, have = ASM.gather_cached_kv(
             plan,
             IC.StagedBlocks(staged),
@@ -248,6 +303,16 @@ class ClusterEngine:
             system.cfg.resolved_head_dim,
         )
         backend.plans[req.rid] = (plan, ck, cv, have)
+        if store is not None:
+            backend.reuse[req.rid] = WL.build_request_reuse(
+                plan,
+                have,
+                staged,
+                WL.user_prefix_key(system.instruction, rq),
+                len(system.instruction) + len(rq.history_tokens),
+                item_keys=self._item_keys,
+                instr_len=len(system.instruction),
+            )
         if moved_tokens:
             backend.pending_transfer_s[req.rid] = CM.fetch_time_s(
                 system.cfg, self.hw, 0, moved_tokens
@@ -276,6 +341,15 @@ class ClusterEngine:
             hit = None
             if rids:
                 hit = float(np.mean([self.hit_rate[r] for r in rids]))
+            store = backend.engine.store
+            reuse_stats = None
+            if store is not None:
+                reuse_stats = dict(store.stats())
+                reuse_stats["transfers_avoided"] = backend.transfers_avoided
+                for tier in ("user", "item", "prefix"):
+                    h = reuse_stats[f"hits_{tier}"]
+                    m = reuse_stats[f"misses_{tier}"]
+                    reuse_stats[f"{tier}_hit_rate"] = h / max(h + m, 1)
             report = WorkerReport(
                 worker=w,
                 n_requests=len(rids),
@@ -286,6 +360,8 @@ class ClusterEngine:
                 transfer_seconds=backend.transfer_seconds,
                 pool_peak_pages=backend.engine.pool.peak_pages,
                 busy_seconds=self.batcher.workers[w].busy_seconds,
+                preempted=self.batcher.workers[w].preempted,
+                kv_reuse=reuse_stats,
             )
             workers.append(report)
         return ClusterReport(

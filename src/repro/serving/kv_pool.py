@@ -2,11 +2,23 @@
 
 One preallocated device arena holds every request's per-layer KV in
 fixed-size pages; a free-list allocator hands pages to requests and a
-per-request page table maps logical token slots to (page, slot) physical
-locations.  K and V are stored **pre-RoPE** — the same convention as the
-item / semantic cache pools — so a page written from an assembled cache
-block needs no rewrite, and decode realigns keys to their request
-positions with one rotation (RoPE's group property, §III-C3).
+per-request **slot table** maps logical token positions to physical
+slots (page * page_size + in-page slot).  K and V are stored
+**pre-RoPE** — the same convention as the item / semantic cache pools —
+so a page written from an assembled cache block needs no rewrite, and
+decode realigns keys to their request positions with one rotation
+(RoPE's group property, §III-C3).
+
+Slot tables are what make **cross-request sharing** possible: a page can
+be owned by the `serving.block_store.SharedBlockStore` instead of a
+request, and any request may point slot-table entries at the store's
+slots at *any* logical alignment (block content never has to land
+page-aligned).  Private pages are packed densely: a request's private
+slots need not sit at their logical positions.  Allocation stays
+page-granular — every page is owned by exactly one of {free list, one
+request's `page_tables` entry, the block store} — and `pages_for` keeps
+one capacity formula for both the reuse and no-reuse paths so decode
+shapes (and therefore decoded tokens) are identical either way.
 
 Insertion is block-granular: `write_plan` walks the assembly plan's
 contiguous spans (`core.assembly.plan_spans`) and fuses every cached
@@ -37,6 +49,29 @@ class PoolExhausted(RuntimeError):
     """No free pages left — caller should defer admission (backpressure)."""
 
 
+# Arena scatters are eager XLA ops compiled per *shape*: without
+# padding, every distinct row count a batch composition produces
+# triggers a fresh ~100ms scatter compile — composition is wall-clock
+# sensitive, so steady-state serving would keep recompiling.  Padding
+# the fused scatters to row-count buckets caps that at O(log) compiles.
+# Pad rows target the scratch page (0, 0) with zero values: duplicates
+# in one scatter are only ever these identical zero writes, and the
+# scratch page is never read.
+WRITE_ROW_BUCKET = 512
+
+
+def _pad_scatter(pages, slots, k, v):
+    t = len(pages)
+    t_pad = -(-max(t, 1) // WRITE_ROW_BUCKET) * WRITE_ROW_BUCKET
+    if t_pad == t:
+        return pages, slots, k, v
+    extra = t_pad - t
+    pages = np.concatenate([pages, np.zeros(extra, pages.dtype)])
+    slots = np.concatenate([slots, np.zeros(extra, slots.dtype)])
+    zrow = np.zeros((extra,) + k.shape[1:], k.dtype)
+    return pages, slots, np.concatenate([k, zrow]), np.concatenate([v, zrow])
+
+
 @dataclass(frozen=True)
 class PoolStats:
     n_pages: int
@@ -57,7 +92,7 @@ class PoolStats:
 
 
 class PagedKVPool:
-    """Fixed-page KV arena + free-list allocator + per-request page tables.
+    """Fixed-page KV arena + free-list allocator + per-request slot tables.
 
     Arena layout: (n_pages, page_size, n_layers, n_kv_heads, head_dim)
     for K and V separately, dtype float32 (pre-RoPE values).
@@ -73,10 +108,14 @@ class PagedKVPool:
         self.arena_k = jnp.zeros(shape, jnp.dtype(dtype))
         self.arena_v = jnp.zeros(shape, jnp.dtype(dtype))
         # page 0 is reserved as scratch: padded decode-batch rows write
-        # their dummy token there, and padded page-table entries point at
+        # their dummy token there, and padded slot-table entries point at
         # it (reads are masked by seq_lens).  It is never allocated.
         self._free: List[int] = list(range(self.n_pages - 1, 0, -1))
+        # private pages owned by each request (page-granular ownership)
         self.page_tables: Dict[int, List[int]] = {}
+        # logical position -> physical slot, per request.  Entries may
+        # point into private pages *or* store-owned shared pages.
+        self.slot_tables: Dict[int, np.ndarray] = {}
         self.seq_lens: Dict[int, int] = {}
         self.peak_pages = 0
 
@@ -91,8 +130,31 @@ class PagedKVPool:
     def can_admit(self, n_tokens: int) -> bool:
         return len(self._free) >= self.pages_for(n_tokens)
 
+    def page_slots(self, pages: Sequence[int]) -> np.ndarray:
+        """Physical slot ids covered by `pages`, in page order."""
+        pages = np.asarray(pages, np.int64)
+        return (pages[:, None] * self.page_size
+                + np.arange(self.page_size)[None, :]).reshape(-1)
+
+    def _bump_peak(self) -> None:
+        self.peak_pages = max(self.peak_pages,
+                              self.n_pages - 1 - len(self._free))
+
+    def alloc_pages(self, n: int) -> List[int]:
+        """Raw page grab with no request bookkeeping — the block store's
+        allocation path.  The caller owns the pages until it hands them
+        back through `release_pages`."""
+        if n > len(self._free):
+            raise PoolExhausted(f"need {n} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n)]
+        self._bump_peak()
+        return pages
+
+    def release_pages(self, pages: Sequence[int]) -> None:
+        self._free.extend(pages)
+
     def alloc(self, rid: int, n_tokens: int) -> List[int]:
-        """Reserve pages for `n_tokens` slots; seq_len starts at 0."""
+        """Reserve private pages for `n_tokens` slots; seq_len starts at 0."""
         if rid in self.page_tables:
             raise KeyError(f"request {rid} already allocated")
         need = self.pages_for(n_tokens)
@@ -101,15 +163,57 @@ class PagedKVPool:
                 f"need {need} pages, {len(self._free)} free")
         pages = [self._free.pop() for _ in range(need)]
         self.page_tables[rid] = pages
+        self.slot_tables[rid] = self.page_slots(pages).astype(np.int64)
         self.seq_lens[rid] = 0
-        self.peak_pages = max(self.peak_pages,
-                              self.n_pages - 1 - len(self._free))
+        self._bump_peak()
+        return pages
+
+    def alloc_mapped(self, rid: int, n_tokens: int,
+                     mapped_positions: np.ndarray,
+                     mapped_slots: np.ndarray) -> List[int]:
+        """Reserve capacity for `n_tokens` slots with some logical
+        positions pointing at *shared* physical slots (store-owned pages).
+
+        Capacity is `pages_for(n_tokens) * page_size` slots — the same
+        formula as `alloc` — but only the non-mapped slots consume
+        private pages, packed densely (the last private page's unused
+        slots are fragmentation, bounded by page_size - 1 per request).
+        The shared slots are NOT owned by this request: `free` returns
+        only the private pages, and the caller is responsible for the
+        store-side refcounts.
+        """
+        if rid in self.page_tables:
+            raise KeyError(f"request {rid} already allocated")
+        mapped_positions = np.asarray(mapped_positions, np.int64)
+        mapped_slots = np.asarray(mapped_slots, np.int64)
+        total_slots = self.pages_for(n_tokens) * self.page_size
+        n_priv = total_slots - len(mapped_positions)
+        need = -(-n_priv // self.page_size) if n_priv > 0 else 0
+        if need > len(self._free):
+            raise PoolExhausted(
+                f"need {need} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(need)]
+        table = np.full(total_slots, -1, np.int64)
+        table[mapped_positions] = mapped_slots
+        priv = self.page_slots(pages)[:n_priv]
+        table[table < 0] = priv
+        self.page_tables[rid] = pages
+        self.slot_tables[rid] = table
+        self.seq_lens[rid] = (int(mapped_positions.max()) + 1
+                              if len(mapped_positions) else 0)
+        self._bump_peak()
         return pages
 
     def free(self, rid: int) -> None:
-        for p in self.page_tables.pop(rid):
-            self._free.append(p)
-        del self.seq_lens[rid]
+        """Release a request's private pages.  Idempotent: freeing an
+        unknown (or already-freed) rid is a no-op, so a duplicate
+        `finish()` can never crash the batcher loop."""
+        pages = self.page_tables.pop(rid, None)
+        if pages is None:
+            return
+        self._free.extend(pages)
+        self.slot_tables.pop(rid, None)
+        self.seq_lens.pop(rid, None)
 
     def stats(self) -> PoolStats:
         in_use = sum(len(t) for t in self.page_tables.values())
@@ -122,17 +226,21 @@ class PagedKVPool:
     def _phys(self, rid: int, positions: np.ndarray
               ) -> Tuple[np.ndarray, np.ndarray]:
         """Logical token slots -> (page ids, in-page slots), growing the
-        page table if a position lands past current capacity."""
-        table = self.page_tables[rid]
+        slot table by one private page if a position lands past current
+        capacity."""
+        table = self.slot_tables[rid]
         top = int(positions.max())
-        while top >= len(table) * self.page_size:
+        while top >= len(table):
             if not self._free:
                 raise PoolExhausted("decode append: no free pages")
-            table.append(self._free.pop())
-            self.peak_pages = max(self.peak_pages,
-                                  self.n_pages - 1 - len(self._free))
-        pt = np.asarray(table, np.int32)
-        return pt[positions // self.page_size], positions % self.page_size
+            page = self._free.pop()
+            self.page_tables[rid].append(page)
+            table = np.concatenate([table, self.page_slots([page])])
+            self.slot_tables[rid] = table
+            self._bump_peak()
+        slots = table[positions]
+        return ((slots // self.page_size).astype(np.int64),
+                (slots % self.page_size).astype(np.int64))
 
     def write_at(self, rid: int, positions: np.ndarray,
                  k: np.ndarray, v: np.ndarray,
@@ -152,14 +260,18 @@ class PagedKVPool:
 
         entries: sequence of (rid, positions, k, v).  Positions must be
         unique within an entry (duplicate physical slots across a single
-        scatter have undefined write order under XLA).  Arena updates
-        are eager copies on CPU (`.at[].set`), so fusing a batch's
-        insertions into one scatter is what makes the batched prefill's
-        pool insertion O(1) copies instead of O(requests · spans).
+        scatter have undefined write order under XLA).  Entries with no
+        positions are skipped (a fully store-mapped request writes
+        nothing).  Arena updates are eager copies on CPU (`.at[].set`),
+        so fusing a batch's insertions into one scatter is what makes
+        the batched prefill's pool insertion O(1) copies instead of
+        O(requests · spans).
         """
         pages_all, slots_all, ks, vs = [], [], [], []
         for rid, positions, k, v in entries:
             positions = np.asarray(positions, np.int64)
+            if len(positions) == 0:
+                continue
             pages, slots = self._phys(rid, positions)
             pages_all.append(pages)
             slots_all.append(slots)
@@ -167,16 +279,43 @@ class PagedKVPool:
             vs.append(np.asarray(v))
             self.seq_lens[rid] = max(self.seq_lens[rid],
                                      int(positions.max()) + 1)
+        if not pages_all:
+            return
         pages = np.concatenate(pages_all)
         slots = np.concatenate(slots_all)
         k = np.concatenate(ks)
         v = np.concatenate(vs)
+        pages, slots, k, v = _pad_scatter(pages, slots, k, v)
         if layer is None:
             self.arena_k = self.arena_k.at[pages, slots].set(k)
             self.arena_v = self.arena_v.at[pages, slots].set(v)
         else:
             self.arena_k = self.arena_k.at[pages, slots, layer].set(k)
             self.arena_v = self.arena_v.at[pages, slots, layer].set(v)
+
+    def write_slots(self, slot_ids: np.ndarray,
+                    k: np.ndarray, v: np.ndarray) -> None:
+        """Direct physical-slot scatter (no request bookkeeping) — the
+        block store's insertion path.  k/v: (t, L, Hkv, Dh)."""
+        self.write_slots_batch([(slot_ids, k, v)])
+
+    def write_slots_batch(self, entries: Sequence[tuple]) -> None:
+        """Fused multi-block physical-slot scatter: ONE arena update for
+        any number of (slot_ids, k, v) writes.  Arena updates are eager
+        full copies on CPU, so the store flushes a whole prefill batch's
+        block insertions through here instead of paying one copy per
+        block."""
+        if not entries:
+            return
+        slot_ids = np.concatenate(
+            [np.asarray(s, np.int64) for s, _, _ in entries])
+        k = np.concatenate([np.asarray(k) for _, k, _ in entries])
+        v = np.concatenate([np.asarray(v) for _, _, v in entries])
+        pages = slot_ids // self.page_size
+        slots = slot_ids % self.page_size
+        pages, slots, k, v = _pad_scatter(pages, slots, k, v)
+        self.arena_k = self.arena_k.at[pages, slots].set(k)
+        self.arena_v = self.arena_v.at[pages, slots].set(v)
 
     def write_prompt(self, rid: int, k: np.ndarray, v: np.ndarray) -> None:
         """Insert a full prompt cache (n, L, Hkv, Dh) starting at slot 0."""
@@ -206,17 +345,35 @@ class PagedKVPool:
                      ) -> Tuple[np.ndarray, np.ndarray]:
         """Claim the next physical slot for each request's new decode token.
 
-        Grows page tables across page boundaries and bumps seq_lens; the
+        Grows slot tables across page boundaries and bumps seq_lens; the
         actual KV write happens inside the jitted decode step (which owns
         the arena buffers).  -> (pages (N,), slots (N,)) int32.
+
+        Transactional: if any request's growth hits `PoolExhausted`, every
+        mutation this call already made (seq_len bumps, appended pages)
+        is rolled back before the exception propagates, so the batcher
+        can preempt a request and retry without leaked pages or
+        phantom-length sequences.
         """
         pages = np.zeros(len(rids), np.int32)
         slots = np.zeros(len(rids), np.int32)
-        for i, rid in enumerate(rids):
-            pos = np.asarray([self.seq_lens[rid]])
-            pg, sl = self._phys(rid, pos)
-            pages[i], slots[i] = pg[0], sl[0]
-            self.seq_lens[rid] += 1
+        done: List[tuple] = []          # (rid, n_pages_appended)
+        try:
+            for i, rid in enumerate(rids):
+                before = len(self.page_tables[rid])
+                pos = np.asarray([self.seq_lens[rid]])
+                pg, sl = self._phys(rid, pos)
+                pages[i], slots[i] = pg[0], sl[0]
+                self.seq_lens[rid] += 1
+                done.append((rid, len(self.page_tables[rid]) - before))
+        except PoolExhausted:
+            for rid, n_new in done:
+                self.seq_lens[rid] -= 1
+                for _ in range(n_new):
+                    self._free.append(self.page_tables[rid].pop())
+                    self.slot_tables[rid] = \
+                        self.slot_tables[rid][:-self.page_size]
+            raise
         return pages, slots
 
     def update_arenas(self, arena_k, arena_v) -> None:
@@ -231,27 +388,28 @@ class PagedKVPool:
     def gather(self, rid: int) -> Tuple[np.ndarray, np.ndarray]:
         """Host-side readback of one request's (k, v): (S, L, Hkv, Dh)."""
         n = self.seq_lens[rid]
-        pt = np.asarray(self.page_tables[rid], np.int32)
-        k = np.asarray(self.arena_k[pt]).reshape(
-            -1, *self.arena_k.shape[2:])[:n]
-        v = np.asarray(self.arena_v[pt]).reshape(
-            -1, *self.arena_v.shape[2:])[:n]
+        sl = self.slot_tables[rid][:n]
+        pages, slots = sl // self.page_size, sl % self.page_size
+        k = np.asarray(self.arena_k[pages, slots])
+        v = np.asarray(self.arena_v[pages, slots])
         return k, v
 
     def batch_tables(self, rids: Sequence[int], pad_pages_to: int = 4
                      ) -> Tuple[np.ndarray, np.ndarray]:
-        """Padded page-table batch for the jitted decode step.
+        """Padded slot-table batch for the jitted decode step.
 
-        -> (tables (N, P) int32, seq_lens (N,) int32).  P is padded to a
-        multiple of `pad_pages_to` to bound jit retraces; pad entries
-        point at page 0 and are masked by seq_lens.
+        -> (tables (N, S) int32 physical slot ids, seq_lens (N,) int32).
+        S is padded to a multiple of `pad_pages_to * page_size` slots to
+        bound jit retraces; pad entries point at slot 0 (the scratch
+        page) and are masked by seq_lens.
         """
-        max_p = max(len(self.page_tables[r]) for r in rids)
-        max_p = -(-max_p // pad_pages_to) * pad_pages_to
-        tables = np.zeros((len(rids), max_p), np.int32)
+        chunk = pad_pages_to * self.page_size
+        max_s = max(len(self.slot_tables[r]) for r in rids)
+        max_s = -(-max_s // chunk) * chunk
+        tables = np.zeros((len(rids), max_s), np.int32)
         lens = np.zeros(len(rids), np.int32)
         for i, r in enumerate(rids):
-            t = self.page_tables[r]
+            t = self.slot_tables[r]
             tables[i, :len(t)] = t
             lens[i] = self.seq_lens[r]
         return tables, lens

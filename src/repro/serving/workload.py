@@ -3,18 +3,28 @@ tests: a synthetic request trace becomes batcher requests plus the
 per-request assembly artifacts the rcllm prefill path needs.
 
 Keeping this in one place means the (plan, cached_k, cached_v, have)
-tuple shape consumed by `JaxEngineBackend` has a single producer.
+tuple shape consumed by `JaxEngineBackend` has a single producer — and
+the same holds for the cross-request reuse metadata
+(`block_store.RequestReuse`): `build_request_reuse` is the one place
+that derives content keys and block refs from a plan, used by both the
+single-instance path (`rcllm_reuse_info`) and the cluster's dispatch
+binding (`serving.cluster`).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
+from repro.core.assembly import FROM_ITEM, AssemblyPlan
 from repro.serving.batch_engine import BatchRequest
 from repro.serving.batching import PendingRequest
+from repro.serving.block_store import BlockRef, RequestReuse, content_key
 
 
-def rcllm_workload(system, trace: Sequence, decode_steps: int = 4
-                   ) -> Tuple[List[PendingRequest], Dict[int, tuple]]:
+def rcllm_workload(
+    system, trace: Sequence, decode_steps: int = 4
+) -> Tuple[List[PendingRequest], Dict[int, tuple]]:
     """Route each traced request, build its assembly plan and gather its
     cached KV.  -> (pending requests for `ContinuousBatcher`,
     {rid: (plan, cached_k, cached_v, have)} for `JaxEngineBackend`)."""
@@ -25,18 +35,169 @@ def rcllm_workload(system, trace: Sequence, decode_steps: int = 4
         plan = system.plan_for(rq, inst)
         ck, cv, have = system.cached_kv(plan, inst)
         plans[rid] = (plan, ck, cv, have)
-        pend.append(PendingRequest(
-            arrival_s=float(rq.arrival_s), rid=rid, n_tokens=plan.n,
-            decode_steps=decode_steps, tokens=plan.tokens))
+        pend.append(
+            PendingRequest(
+                arrival_s=float(rq.arrival_s),
+                rid=rid,
+                n_tokens=plan.n,
+                decode_steps=decode_steps,
+                tokens=plan.tokens,
+            )
+        )
     return pend, plans
 
 
-def rcllm_batch_requests(system, trace: Sequence, n_reserve: int = 0
-                         ) -> List[BatchRequest]:
+def rcllm_batch_requests(
+    system, trace: Sequence, n_reserve: int = 0
+) -> List[BatchRequest]:
     """Direct `BatchEngine.prefill(mode="rcllm")` inputs for a trace —
     the no-batcher variant used by parity tests and microbenchmarks."""
     _, plans = rcllm_workload(system, trace)
-    return [BatchRequest(rid=rid, tokens=plan.tokens, plan=plan,
-                         cached_k=ck, cached_v=cv, have=have,
-                         n_reserve=n_reserve)
-            for rid, (plan, ck, cv, have) in sorted(plans.items())]
+    return [
+        BatchRequest(
+            rid=rid,
+            tokens=plan.tokens,
+            plan=plan,
+            cached_k=ck,
+            cached_v=cv,
+            have=have,
+            n_reserve=n_reserve,
+        )
+        for rid, (plan, ck, cv, have) in sorted(plans.items())
+    ]
+
+
+# ------------------------- cross-request reuse -------------------------
+def item_block_key(tokens: np.ndarray) -> tuple:
+    """Content address of one item block: determined entirely by its
+    token ids (the offline KV bytes are a pure function of them)."""
+    return content_key("item", np.asarray(tokens, np.int64))
+
+
+def user_prefix_key(instruction: np.ndarray, request) -> tuple:
+    """Content address of one user's prompt prefix (instruction + history
+    + instance-specific markers) — what the pinned user tier is keyed by."""
+    return content_key(
+        "user",
+        np.asarray(instruction, np.int64),
+        np.asarray(request.history_tokens, np.int64),
+        np.asarray(request.history_marker_mask, np.int64),
+    )
+
+
+def build_request_reuse(
+    plan: AssemblyPlan,
+    have: np.ndarray,
+    staged: Dict[int, object],
+    user_key: Optional[tuple],
+    prefix_end: int,
+    item_keys: Optional[Dict[int, tuple]] = None,
+    instr_len: int = 0,
+) -> RequestReuse:
+    """Derive one request's shareable-block metadata from its plan.
+
+    `staged` maps item id -> block (any object with .tokens/.k/.v — an
+    `item_cache.ItemBlock` or a store host block); blocks absent from it
+    produce no ref (nothing to insert, nothing to map).  `item_keys`
+    short-circuits per-item digests the caller already computed.
+    `instr_len` > 0 enables the prefix tier over the leading instruction
+    tokens (identical, always-recomputed rows shared across requests).
+    """
+    refs: List[BlockRef] = []
+    item_mask = (plan.source == FROM_ITEM) & have
+    for it in np.unique(plan.block_item[item_mask]):
+        it = int(it)
+        blk = staged.get(it)
+        if blk is None:
+            continue
+        positions = np.where(item_mask & (plan.block_item == it))[0]
+        key = (
+            item_keys[it]
+            if item_keys is not None and it in item_keys
+            else item_block_key(blk.tokens)
+        )
+        refs.append(
+            BlockRef(
+                key=key,
+                positions=positions,
+                offsets=plan.block_offset[positions].astype(np.int64),
+                k=blk.k,
+                v=blk.v,
+                tokens=blk.tokens,
+            )
+        )
+    prefix_key = None
+    if instr_len > 0:
+        prefix_key = content_key(
+            "prefix", np.asarray(plan.tokens[:instr_len], np.int64)
+        )
+    return RequestReuse(
+        user_key=user_key,
+        prefix_end=prefix_end,
+        blocks=refs,
+        prefix_key=prefix_key,
+        prefix_len=instr_len,
+    )
+
+
+def rcllm_reuse_info(
+    system, trace: Sequence, plans: Dict[int, tuple]
+) -> Dict[int, RequestReuse]:
+    """Reuse metadata for every request of a single-instance workload:
+    item refs point at the system's item store blocks (the same bytes
+    `gather_cached_kv` staged), the user key covers instruction+history."""
+    out: Dict[int, RequestReuse] = {}
+    n_instr = len(system.instruction)
+    key_of: Dict[int, tuple] = {}
+    for rid, rq in enumerate(trace):
+        plan, _, _, have = plans[rid]
+        staged = {}
+        item_mask = (plan.source == FROM_ITEM) & have
+        for it in np.unique(plan.block_item[item_mask]):
+            blk = system.item_store.get_block(int(it), 0)
+            if blk is not None:
+                staged[int(it)] = blk
+                if int(it) not in key_of:
+                    key_of[int(it)] = item_block_key(blk.tokens)
+        out[rid] = build_request_reuse(
+            plan,
+            have,
+            staged,
+            user_prefix_key(system.instruction, rq),
+            n_instr + len(rq.history_tokens),
+            item_keys=key_of,
+            instr_len=n_instr,
+        )
+    return out
+
+
+def zipf_repeat_trace(
+    catalog,
+    pool,
+    profile,
+    n_requests: int,
+    qps: float,
+    n_users: int,
+    zipf_a: float = 1.2,
+    n_candidates: int = 8,
+    reviews_per_user: int = 2,
+    seed: int = 2,
+) -> List:
+    """Repeat-user workload: user ids drawn Zipf(a) so a handful of heavy
+    users dominate the stream (plus the catalog's own Zipf popularity on
+    candidates) — the shape where the stratified store's pinned user tier
+    and LRU item tier both earn their keep."""
+    from repro.data import synth as SY
+
+    return SY.make_trace(
+        catalog,
+        pool,
+        profile,
+        n_requests,
+        qps=qps,
+        n_users=n_users,
+        n_candidates=n_candidates,
+        reviews_per_user=reviews_per_user,
+        seed=seed,
+        user_zipf_a=zipf_a,
+    )

@@ -1,0 +1,351 @@
+"""Cross-request KV reuse: shared block store, pool-lifecycle crash
+fixes, allocator/store ownership invariants, and bitwise decoded-token
+parity with reuse on vs off (jnp and pallas attention backends)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving import workload as WL
+from repro.serving.batch_engine import BatchEngine, BatchRequest
+from repro.serving.batching import (ClusterBatcher, ContinuousBatcher,
+                                    JaxEngineBackend, PendingRequest)
+from repro.serving.block_store import (SharedBlockStore, check_partition,
+                                       content_key)
+from repro.serving.kv_pool import PagedKVPool, PoolExhausted, pool_for
+
+
+@pytest.fixture(scope="module")
+def tiny_system():
+    from repro.core.rcllm import make_tiny_system
+    return make_tiny_system(n_items=60, n_requests_hist=30, k_instances=2,
+                            n_layers=2, d_model=32)
+
+
+@pytest.fixture(scope="module")
+def zipf_workload(tiny_system):
+    """Repeat-user Zipf trace + plans + reuse metadata (8 requests)."""
+    system, pool_rv, prof, _ = tiny_system
+    trace = WL.zipf_repeat_trace(system.catalog, pool_rv, prof, 8, qps=12.0,
+                                 n_users=3, zipf_a=1.4, seed=3)
+    pend, plans = WL.rcllm_workload(system, trace, decode_steps=3)
+    reuse = WL.rcllm_reuse_info(system, trace, plans)
+    return trace, pend, plans, reuse
+
+
+def _tiny_pool(n_pages=16, page_size=4):
+    return PagedKVPool(n_layers=2, n_kv_heads=2, head_dim=4,
+                       page_size=page_size, n_pages=n_pages)
+
+
+# ------------------------------------------------- pool lifecycle fixes
+def test_free_is_idempotent():
+    """Double-free and free-of-unknown-rid are no-ops (a duplicate
+    `finish()` used to raise bare KeyError and kill the batcher loop)."""
+    pool = _tiny_pool()
+    pool.alloc(0, 10)
+    free0 = pool.free_pages
+    pool.free(0)
+    pool.free(0)                                  # double free: no-op
+    pool.free(123)                                # never allocated: no-op
+    assert pool.free_pages == free0 + 3
+    check_partition(pool)
+
+
+def test_engine_release_is_idempotent(tiny_system):
+    system, *_ = tiny_system
+    eng = BatchEngine(system.params, system.cfg,
+                      pool=pool_for(system.cfg, n_pages=64))
+    rng = np.random.default_rng(0)
+    req = BatchRequest(rid=7, tokens=rng.integers(1, 512, 20).astype(np.int32))
+    eng.prefill([req], mode="full")
+    eng.release(7)
+    eng.release(7)                                # duplicate finish: no-op
+    assert eng.pool.stats().pages_in_use == 0
+
+
+def test_append_slots_rolls_back_on_exhaustion():
+    """A mid-batch PoolExhausted in append_slots must leave no phantom
+    seq_len bumps and no leaked pages (the preemption path retries)."""
+    pool = _tiny_pool(n_pages=7, page_size=4)     # 6 usable
+    pool.alloc(0, 12)                             # 3 pages, full
+    pool.alloc(1, 12)                             # 3 pages, full
+    pool.write_at(0, np.arange(12),
+                  np.zeros((12, 2, 2, 4), np.float32),
+                  np.zeros((12, 2, 2, 4), np.float32))
+    pool.write_at(1, np.arange(12),
+                  np.zeros((12, 2, 2, 4), np.float32),
+                  np.zeros((12, 2, 2, 4), np.float32))
+    lens_before = dict(pool.seq_lens)
+    tables_before = {r: len(pool.page_tables[r]) for r in (0, 1)}
+    with pytest.raises(PoolExhausted):
+        pool.append_slots([0, 1])                 # both need growth, 0 free
+    assert pool.seq_lens == lens_before
+    assert {r: len(pool.page_tables[r]) for r in (0, 1)} == tables_before
+    check_partition(pool)
+
+
+def test_cluster_backend_preempt_keeps_plans(tiny_system):
+    """`ClusterWorkerBackend.finish` drops the bound plan (plans bind
+    once at dispatch) — but a decode-time *preemption* must keep it, or
+    the victim's re-prefill dies on a KeyError."""
+    from repro.serving.cluster import ClusterWorkerBackend
+    system, *_ = tiny_system
+    eng = BatchEngine(system.params, system.cfg,
+                      pool=pool_for(system.cfg, n_pages=32))
+    backend = ClusterWorkerBackend(eng, shard=None, mode="rcllm")
+    backend.plans[3] = ("plan", None, None, None)
+    backend.reuse[3] = object()
+    eng.pool.alloc(3, 8)
+    req = PendingRequest(arrival_s=0.0, rid=3, n_tokens=8, decode_steps=2)
+    backend.preempt(req)
+    assert 3 in backend.plans and 3 in backend.reuse   # still re-runnable
+    assert eng.pool.stats().pages_in_use == 0          # pages released
+    backend.finish(req)                                # real finish drops
+    assert 3 not in backend.plans and 3 not in backend.reuse
+
+
+def test_decode_preemption_tiny_pool(tiny_system):
+    """Decode-time PoolExhausted must preempt the youngest request (free
+    + requeue) instead of killing the worker: an under-reserving backend
+    over a pool that cannot hold every request's decode growth."""
+    system, *_ = tiny_system
+
+    class NoReserveBackend(JaxEngineBackend):
+        def _batch_requests(self, batch):
+            out = super()._batch_requests(batch)
+            for br in out:
+                br.n_reserve = 0              # simulate broken accounting
+            return out
+
+    eng = BatchEngine(system.params, system.cfg,
+                      pool=pool_for(system.cfg, page_size=8, n_pages=8))
+    backend = NoReserveBackend(eng, mode="full")
+    rng = np.random.default_rng(1)
+    reqs = [PendingRequest(arrival_s=0.01 * i, rid=i, n_tokens=24,
+                           decode_steps=4,
+                           tokens=rng.integers(1, 512, 24).astype(np.int32))
+            for i in range(2)]
+    batcher = ClusterBatcher([backend])
+    done = batcher.run(reqs)
+    assert len(done) == 2                         # nobody was lost
+    assert batcher.workers[0].preempted >= 1
+    for c in done:
+        assert len(backend.generated[c.rid]) == 4
+    assert eng.pool.stats().pages_in_use == 0     # nothing leaked
+    check_partition(eng.pool)
+
+
+# ------------------------------------------------- store unit behaviour
+def _blk(rng, n, L=2, H=2, D=4):
+    return (rng.normal(size=(n, L, H, D)).astype(np.float32),
+            rng.normal(size=(n, L, H, D)).astype(np.float32))
+
+
+def test_store_refcounts_lru_and_pinning():
+    pool = _tiny_pool(n_pages=10, page_size=4)    # 9 usable
+    store = SharedBlockStore(pool, max_user_pages=2)
+    rng = np.random.default_rng(2)
+    ka, va = _blk(rng, 8)
+    kb, vb = _blk(rng, 8)
+    kc, vc = _blk(rng, 8)
+    a = store.insert(("item", "a"), "item", ka, va)
+    b = store.insert(("item", "b"), "item", kb, vb)
+    assert pool.free_pages == 5
+    assert store.acquire(("item", "a")) is a      # hit + ref
+    store.get(("item", "b"))                      # b is now most recent
+    check_partition(pool, store)
+    # pressure: c needs 2 pages while keeping 4 free, but only 5 are ->
+    # evict; a is referenced so only b is evictable (despite a being LRU)
+    c = store.insert(("item", "c"), "item", kc, vc, keep_free=4)
+    assert c is not None
+    assert store.has(("item", "a")) and not store.has(("item", "b"))
+    check_partition(pool, store)
+    # release a; a pinned user block never evicts even under pressure
+    store.release(("item", "a"))
+    u = store.insert(("user", "u"), "user", ka[:4], va[:4], pinned=True)
+    assert u is not None and u.pinned
+    assert not store.evict_for(pool.n_pages)      # can't evict pinned u
+    assert store.has(("user", "u"))
+    # user-tier budget: a second user block over max_user_pages is skipped
+    assert store.insert(("user", "u2"), "user", kb, vb, pinned=True) is None
+    assert store.counters["insert_skips"] >= 1
+    check_partition(pool, store)
+
+
+def test_store_mapped_request_roundtrip():
+    """alloc_mapped + shared slots: gather returns the store block's
+    bytes at mapped positions and privately written rows elsewhere."""
+    pool = _tiny_pool(n_pages=16, page_size=4)
+    store = SharedBlockStore(pool)
+    rng = np.random.default_rng(3)
+    kb, vb = _blk(rng, 6)
+    blk = store.insert(content_key("item", np.arange(6)), "item", kb, vb)
+    n = 10
+    mapped_pos = np.asarray([2, 3, 4, 7, 8])      # arbitrary alignment
+    mapped_off = np.asarray([0, 1, 2, 4, 5])
+    pool.alloc_mapped(5, n, mapped_pos, blk.slots[mapped_off])
+    priv = np.setdiff1d(np.arange(n), mapped_pos)
+    kw, vw = _blk(rng, len(priv))
+    pool.write_at(5, priv, kw, vw)
+    gk, gv = pool.gather(5)
+    np.testing.assert_array_equal(gk[mapped_pos], kb[mapped_off])
+    np.testing.assert_array_equal(gv[mapped_pos], vb[mapped_off])
+    np.testing.assert_array_equal(gk[priv], kw)
+    check_partition(pool, store)
+    pool.free(5)
+    check_partition(pool, store)
+
+
+def test_partition_invariant_random_walk():
+    """Property-style allocator+store invariant: after every random op,
+    each page is owned by exactly one of {free list, a request, the
+    store}, refcounted blocks survive, zero-ref pages return on free."""
+    rng = np.random.default_rng(4)
+    pool = _tiny_pool(n_pages=24, page_size=4)
+    store = SharedBlockStore(pool, max_user_pages=6)
+    next_rid, next_bid = 0, 0
+    live_rids, keys = [], []
+    held = {}                                     # rid -> keys
+    for step in range(250):
+        op = rng.integers(0, 7)
+        try:
+            if op == 0:                           # plain alloc
+                pool.alloc(next_rid, int(rng.integers(1, 20)))
+                live_rids.append(next_rid)
+                held[next_rid] = []
+                next_rid += 1
+            elif op == 1 and keys:                # mapped alloc over a block
+                key = keys[rng.integers(len(keys))]
+                blk = store.acquire(key)
+                if blk is not None:
+                    n = blk.n_tokens
+                    pos = np.sort(rng.choice(
+                        np.arange(n + 4), size=min(n, 3), replace=False))
+                    off = np.sort(rng.choice(
+                        np.arange(n), size=len(pos), replace=False))
+                    pool.alloc_mapped(next_rid, n + 4, pos, blk.slots[off])
+                    live_rids.append(next_rid)
+                    held[next_rid] = [key]
+                    next_rid += 1
+                elif blk is None:
+                    pass
+            elif op == 2 and live_rids:           # free (sometimes double)
+                rid = live_rids[rng.integers(len(live_rids))]
+                pool.free(rid)
+                store.release_all(held.pop(rid, []))
+                live_rids.remove(rid)
+                if rng.random() < 0.3:
+                    pool.free(rid)                # double free: no-op
+            elif op == 3:                         # store insert
+                nb = int(rng.integers(2, 10))
+                k, v = _blk(rng, nb)
+                kind = "user" if rng.random() < 0.3 else "item"
+                store.insert((kind, f"b{next_bid}"), kind, k, v,
+                             pinned=kind == "user")
+                if store.has((kind, f"b{next_bid}")):
+                    keys.append((kind, f"b{next_bid}"))
+                next_bid += 1
+            elif op == 4 and keys:                # ref churn, no mapping
+                key = keys[rng.integers(len(keys))]
+                if store.acquire(key) is not None:
+                    store.release(key)
+            elif op == 5:                         # eviction pressure
+                store.evict_for(int(rng.integers(1, 8)))
+                keys = [k for k in keys if store.has(k)]
+            elif op == 6 and live_rids:           # decode append growth
+                rid = live_rids[rng.integers(len(live_rids))]
+                pool.seq_lens[rid] = len(pool.slot_tables[rid])
+                pool.append_slots([rid])
+        except PoolExhausted:
+            pass
+        check_partition(pool, store)
+    # drain everything: every page must come home to the free list
+    for rid in list(live_rids):
+        pool.free(rid)
+        store.release_all(held.pop(rid, []))
+    for key in list(store.blocks):
+        store.blocks[key].refcount = 0
+        store.blocks[key].pinned = False
+    store.evict_for(pool.n_pages - 1)
+    assert pool.free_pages == pool.n_pages - 1
+    check_partition(pool, store)
+
+
+# --------------------------------------------- reuse on/off parity
+def _run_batcher(system, pend, plans, reuse, kv_reuse, cfg=None,
+                 n_pages=256):
+    cfg = cfg or system.cfg
+    pool = pool_for(cfg, n_pages=n_pages)
+    store = SharedBlockStore(pool) if kv_reuse else None
+    engine = BatchEngine(system.params, cfg, pool=pool, store=store)
+    backend = JaxEngineBackend(engine, mode="rcllm", plans=plans,
+                               reuse=reuse if kv_reuse else None)
+    ContinuousBatcher(backend=backend, max_batch_tokens=4096).run(list(pend))
+    return backend, engine
+
+
+def test_kv_reuse_decoded_parity_jnp(tiny_system, zipf_workload):
+    """Decoded tokens must be bitwise identical with the shared block
+    store on vs off — reuse changes where decode reads, never what."""
+    system, *_ = tiny_system
+    _, pend, plans, reuse = zipf_workload
+    b_off, e_off = _run_batcher(system, pend, plans, reuse, False)
+    b_on, e_on = _run_batcher(system, pend, plans, reuse, True)
+    for rid in b_off.generated:
+        assert b_off.generated[rid] == b_on.generated[rid]
+    stats = e_on.store.stats()
+    # the workload really shared: all three tiers saw hits (prefix hits
+    # additionally shrink the recompute set — and tokens still match)
+    assert stats["hits_user"] > 0 and stats["hits_item"] > 0
+    assert stats["hits_prefix"] > 0
+    # admission accounting credits resident blocks: with the store warm,
+    # a repeat request's private-page bound sits strictly below its full
+    # (reuse-off) page demand — that credit is what buys admission
+    from repro.serving.block_store import admission_pages
+    bounds = []
+    for rid, (plan, _, _, have) in plans.items():
+        bound, _ = admission_pages(e_on.pool, e_on.store, plan, have,
+                                   e_on.sel, reuse[rid], 2)
+        bounds.append((bound, e_on.pool.pages_for(plan.n + 2)))
+    assert any(b < full for b, full in bounds)
+    assert all(b <= full for b, full in bounds)
+    assert e_on.pool.stats().pages_in_use == 0
+    check_partition(e_on.pool, e_on.store)
+
+
+@pytest.mark.slow
+def test_kv_reuse_decoded_parity_pallas(tiny_system, zipf_workload):
+    """The same bitwise on/off parity with attention through the Pallas
+    kernels (interpret mode on CPU)."""
+    system, *_ = tiny_system
+    _, pend, plans, reuse = zipf_workload
+    cfg = dataclasses.replace(system.cfg, attn_backend="pallas")
+    short = [p for p in pend if p.rid < 4]
+    b_off, _ = _run_batcher(system, short, plans, reuse, False, cfg=cfg)
+    b_on, e_on = _run_batcher(system, short, plans, reuse, True, cfg=cfg)
+    for rid in b_off.generated:
+        assert b_off.generated[rid] == b_on.generated[rid]
+    assert e_on.store.stats()["hits_item"] > 0
+
+
+@pytest.mark.slow
+def test_cluster_kv_reuse_parity_and_transfers(tiny_system):
+    """K=2 cluster: kv_reuse changes costs (fewer cross-shard transfers,
+    tier hit rates reported per worker), never decoded tokens."""
+    from repro.serving.cluster import ClusterEngine
+    system, pool_rv, prof, _ = tiny_system
+    trace = WL.zipf_repeat_trace(system.catalog, pool_rv, prof, 8, qps=12.0,
+                                 n_users=3, zipf_a=1.4, seed=6)
+    rep_off = ClusterEngine(system, k=2, n_pages=256).run(
+        trace, decode_steps=2)
+    rep_on = ClusterEngine(system, k=2, n_pages=256, kv_reuse=True).run(
+        trace, decode_steps=2)
+    assert rep_off.generated == rep_on.generated
+    xfer_off = sum(w.transfer_blocks for w in rep_off.workers)
+    xfer_on = sum(w.transfer_blocks for w in rep_on.workers)
+    assert xfer_on <= xfer_off
+    stats = [w.kv_reuse for w in rep_on.workers if w.kv_reuse]
+    assert stats and any(s["hits_item"] > 0 for s in stats)
+    assert all("user_hit_rate" in s and "item_hit_rate" in s for s in stats)
+    assert all(w.kv_reuse is None for w in rep_off.workers)
