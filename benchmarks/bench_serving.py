@@ -4,7 +4,9 @@ The same request set runs through the `ContinuousBatcher` twice — once
 over the analytic cost model (virtual clock, the simulator's engine) and
 once over the real batched JAX engine with the paged KV pool (wall
 clock) — in both full-recompute and rcllm (beyond-prefix selective)
-modes.  Emits the standard ``name,us_per_call,derived`` CSV rows plus a
+modes.  Latency is reported as p50/p99 TTFT plus time-between-tokens
+percentiles, not just central tendency — scheduler work lives in the
+tail.  Emits the standard ``name,us_per_call,derived`` CSV rows plus a
 JSON artifact in `out_dir`.
 
 Flags (via benchmarks/run.py): ``--quick`` shrinks the request count.
@@ -21,19 +23,31 @@ from repro.core import cost_model as CM
 from repro.core.rcllm import make_tiny_system
 from repro.data import synth as SY
 from repro.serving.batch_engine import BatchEngine
-from repro.serving.batching import (ContinuousBatcher, JaxEngineBackend,
-                                    PendingRequest)
+from repro.serving.batching import (
+    ContinuousBatcher,
+    JaxEngineBackend,
+    PendingRequest,
+)
 from repro.serving.kv_pool import pool_for
 from repro.serving.workload import rcllm_workload
 
 
-def _summarize(done, generated=None):
+def _summarize(done, workers=None, generated=None):
     ttft = np.asarray([c.first_token_s - c.arrival_s for c in done])
     total = max(c.done_s for c in done) - min(c.arrival_s for c in done)
-    n_tok = (sum(len(generated[c.rid]) for c in done) if generated
-             else len(done))
-    return (float(np.percentile(ttft, 50)), float(np.percentile(ttft, 90)),
-            n_tok / max(total, 1e-9))
+    n_tok = sum(len(generated[c.rid]) for c in done) if generated else len(done)
+    out = {
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p90_s": float(np.percentile(ttft, 90)),
+        "ttft_p99_s": float(np.percentile(ttft, 99)),
+        "ttft_mean_s": float(ttft.mean()),
+        "throughput_per_s": n_tok / max(total, 1e-9),
+    }
+    tbt = [dt for w in (workers or []) for dt in w.tbt]
+    if tbt:
+        out["tbt_p50_s"] = float(np.percentile(tbt, 50))
+        out["tbt_p99_s"] = float(np.percentile(tbt, 99))
+    return out
 
 
 def run(out_dir: str = "results/bench", quick: bool = False) -> None:
@@ -42,31 +56,48 @@ def run(out_dir: str = "results/bench", quick: bool = False) -> None:
     decode_steps = 3 if quick else 4
 
     system, pool_rv, prof, _ = make_tiny_system(
-        n_items=60, n_requests_hist=30, k_instances=2,
-        n_layers=2, d_model=32)
+        n_items=60, n_requests_hist=30, k_instances=2, n_layers=2, d_model=32
+    )
     cfg = system.cfg
-    trace = SY.make_trace(system.catalog, pool_rv, prof, n_req, qps=4.0,
-                          n_users=max(3, n_req // 2), n_candidates=8,
-                          reviews_per_user=1, seed=9)
+    trace = SY.make_trace(
+        system.catalog,
+        pool_rv,
+        prof,
+        n_req,
+        qps=4.0,
+        n_users=max(3, n_req // 2),
+        n_candidates=8,
+        reviews_per_user=1,
+        seed=9,
+    )
     pend, plans = rcllm_workload(system, trace, decode_steps=decode_steps)
 
     out = {}
     # --- sim engine: analytic cost model on the virtual clock ---
     for mode in ("full", "rcllm"):
+
         def prefill_t(tok, _m=mode):
             if _m == "full":
                 return CM.full_prefill_ttft_s(cfg, CM.V5E_1, tok)
             return CM.prefill_time_s(cfg, CM.V5E_1, tok, int(0.4 * tok))
 
-        done = ContinuousBatcher(
+        batcher = ContinuousBatcher(
             prefill_t, lambda n: CM.decode_step_time_s(cfg, CM.V5E_1, n)
-        ).run([PendingRequest(r.arrival_s, r.rid, r.n_tokens,
-                              r.decode_steps) for r in pend])
-        p50, p90, tput = _summarize(done)
-        out[f"sim/{mode}"] = {"ttft_p50_s": p50, "ttft_p90_s": p90,
-                              "throughput_req_s": tput}
-        emit(f"serving/sim/{mode}", p50 * 1e6,
-             f"ttft_p90={p90:.4f}s")
+        )
+        done = batcher.run(
+            [
+                PendingRequest(r.arrival_s, r.rid, r.n_tokens, r.decode_steps)
+                for r in pend
+            ]
+        )
+        s = _summarize(done, batcher.workers)
+        s["throughput_req_s"] = s.pop("throughput_per_s")
+        out[f"sim/{mode}"] = s
+        emit(
+            f"serving/sim/{mode}",
+            s["ttft_p50_s"] * 1e6,
+            f"ttft_p90={s['ttft_p90_s']:.4f}s",
+        )
 
     # --- jax engine: real batched prefill + paged decode, wall clock ---
     for mode in ("full", "rcllm"):
@@ -76,20 +107,22 @@ def run(out_dir: str = "results/bench", quick: bool = False) -> None:
         # compile-heavy first pass), the third is measured — without
         # this, trace/compile time dominates sub-ms steps on tiny models
         for _pass in range(3):
-            engine = BatchEngine(system.params, cfg,
-                                 pool=pool_for(cfg, n_pages=512))
-            backend = JaxEngineBackend(engine, mode=mode,
-                                       plans=plans if mode == "rcllm"
-                                       else {})
-            done = ContinuousBatcher(
-                backend=backend, max_batch_tokens=4096).run(list(pend))
-        p50, p90, tput = _summarize(done, backend.generated)
-        out[f"jax/{mode}"] = {
-            "ttft_p50_s": p50, "ttft_p90_s": p90,
-            "throughput_tok_s": tput,
-            "pool_peak_pages": engine.pool.peak_pages}
-        emit(f"serving/jax/{mode}", p50 * 1e6,
-             f"ttft_p90={p90:.4f}s tok_per_s={tput:.2f}")
+            engine = BatchEngine(system.params, cfg, pool=pool_for(cfg, n_pages=512))
+            backend = JaxEngineBackend(
+                engine, mode=mode, plans=plans if mode == "rcllm" else {}
+            )
+            batcher = ContinuousBatcher(backend=backend, max_batch_tokens=4096)
+            done = batcher.run(list(pend))
+        s = _summarize(done, batcher.workers, backend.generated)
+        s["throughput_tok_s"] = s.pop("throughput_per_s")
+        s["pool_peak_pages"] = engine.pool.peak_pages
+        out[f"jax/{mode}"] = s
+        emit(
+            f"serving/jax/{mode}",
+            s["ttft_p50_s"] * 1e6,
+            f"ttft_p90={s['ttft_p90_s']:.4f}s "
+            f"tok_per_s={s['throughput_tok_s']:.2f}",
+        )
 
     with open(os.path.join(out_dir, "serving.json"), "w") as f:
         json.dump(out, f, indent=1)

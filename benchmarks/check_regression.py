@@ -69,6 +69,19 @@ METRICS = (
     # capacity, so deferred waves vanish); the quick bar only guards
     # against reuse structurally regressing into a slowdown
     Metric("reuse.json", ("mean_ttft_speedup",), "floor", floor=0.9),
+    # unified-step scheduler: tail latency, not just means.  The pooled
+    # p99 win comes from the closed chunk-shape set (wave keeps hitting
+    # fresh batch-composition compiles); quick bars guard the structure
+    Metric("serving.json", ("jax/rcllm", "ttft_p99_s"), "time"),
+    Metric("chunked.json", ("chunked", "ttft_p99_s"), "time"),
+    # the committed full run shows ~4x (and bench_chunked asserts > 1.0
+    # on every full run); quick runs on shared runners swing hard, so
+    # the bars only guard against chunked structurally regressing into
+    # a slowdown
+    Metric("chunked.json", ("p99_ttft_speedup",), "floor", floor=0.9),
+    # decode never waits out a prefill wave — committed full run ~2.3x
+    # (runs swing up to ~17x: wave's TBT tail is its wave duration)
+    Metric("chunked.json", ("tbt_p99_speedup",), "floor", floor=1.2),
 )
 
 

@@ -13,6 +13,7 @@ default sizes reproduce the paper's structure in full.
   cluster     K real engines + sharded item caches: dispatch policies
   attn_backend  jnp vs pallas attention; batched vs per-request prefill
   reuse       cross-request KV reuse (shared block store) off vs on
+  chunked     unified token-budget scheduler: wave vs chunked prefill
 
 Each entry also writes a JSON artifact into ``--out`` (see
 docs/benchmarks.md for the full flag and output reference).
@@ -31,7 +32,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default="all",
                     help="comma-separated subset of fig6|fig8_9|fig10|fig11|"
                          "tableIII|kernels|serving|cluster|attn_backend|"
-                         "reuse, or all")
+                         "reuse|chunked, or all")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--planted", action="store_true",
                     help="tableIII: train the planted-preference ranker")
@@ -70,6 +71,9 @@ def main(argv=None) -> int:
                 args.out, quick=args.quick),
         "reuse": lambda: __import__(
             "benchmarks.bench_reuse", fromlist=["run"]).run(
+                args.out, quick=args.quick),
+        "chunked": lambda: __import__(
+            "benchmarks.bench_chunked", fromlist=["run"]).run(
                 args.out, quick=args.quick),
     }
     only = {s.strip() for s in args.only.split(",") if s.strip()}

@@ -631,6 +631,71 @@ def _pow2(n: int) -> int:
     return 1 << (n - 1).bit_length()
 
 
+def selective_layers_batch(params, cfg: LMConfig, items,
+                           r_bucket: int = 64, return_kv: bool = True):
+    """Bucketed batched selective-layer pass (phase 2 of the selective
+    prefill): requests are grouped by (padded length, padded recompute
+    budget), stacked with the batch axis padded to the next power of
+    two, and ONE jitted selective step runs per bucket.
+
+    items: sequence of (plan, x (n_pad, D), recompute (n,), ckp, cvp)
+    with ckp/cvp padded to n_pad.  -> list of (logits (V,), k_rest,
+    v_rest) per item in input order (k_rest/v_rest are the merged
+    pre-RoPE layers 1..L-1, (n_pad, L-1, Hkv, Dh); None unless
+    ``return_kv``).
+
+    This is THE selective dispatch for every serving path — the wave
+    batched prefill and the chunked unified-step finalize both land
+    here, so their logits (and decoded tokens) cannot drift apart.
+    """
+    results = [None] * len(items)
+    by_shape: Dict[tuple, list] = {}
+    for i, (plan, x, recompute, ckp, cvp) in enumerate(items):
+        n_pad = ckp.shape[0]
+        r_count = int(recompute.sum())
+        r_pad = max(r_bucket, ((r_count + r_bucket - 1) // r_bucket)
+                    * r_bucket)
+        by_shape.setdefault((n_pad, r_pad), []).append(i)
+    for (n_pad, r_pad), idxs in sorted(by_shape.items()):
+        B = _pow2(len(idxs))
+        r_idx_p = np.zeros((B, r_pad), np.int32)
+        r_valid = np.zeros((B, r_pad), bool)
+        valid = np.zeros((B, n_pad), bool)
+        final_slot = np.zeros(B, np.int32)
+        for bi, i in enumerate(idxs):
+            plan = items[i][0]
+            r_idx = np.where(items[i][2])[0]
+            r_idx_p[bi] = _pad_to(r_idx.astype(np.int32), r_pad,
+                                  fill=plan.n - 1)
+            r_valid[bi, :len(r_idx)] = True
+            valid[bi, :plan.n] = True
+            final_slot[bi] = len(r_idx) - 1
+        live = _liveness_for(cfg, r_idx_p, valid)
+        zrow_x = jnp.zeros_like(items[idxs[0]][1])
+        zrow_ck = np.zeros_like(items[idxs[0]][3])
+        xs = [items[i][1] for i in idxs] + [zrow_x] * (B - len(idxs))
+        cks = [items[i][3] for i in idxs] + [zrow_ck] * (B - len(idxs))
+        cvs = [items[i][4] for i in idxs] + [zrow_ck] * (B - len(idxs))
+        args = (params, jnp.stack(xs),
+                jnp.asarray(r_idx_p), jnp.asarray(r_valid),
+                jnp.asarray(np.stack(cks)), jnp.asarray(np.stack(cvs)),
+                jnp.asarray(valid), jnp.arange(n_pad),
+                jnp.asarray(final_slot), cfg, jnp.asarray(live))
+        if return_kv:
+            logits, k_rest, v_rest = _jit_selective_layers_kv(*args)
+            k_rest = np.asarray(k_rest, np.float32)
+            v_rest = np.asarray(v_rest, np.float32)
+        else:
+            logits = _jit_selective_layers(*args)
+            k_rest = v_rest = None
+        logits = np.asarray(logits, np.float32)
+        for bi, i in enumerate(idxs):
+            kr = k_rest[bi] if return_kv else None
+            vr = v_rest[bi] if return_kv else None
+            results[i] = (logits[bi], kr, vr)
+    return results
+
+
 def selective_prefill_batch(
     params, cfg: LMConfig, items: Sequence, sel: SelectiveConfig,
     bucket: int = 128, r_bucket: int = 64, return_kv: bool = True,
@@ -656,13 +721,11 @@ def selective_prefill_batch(
     if not items:
         return []
     # ---- phase 1: per-request layer 0 + host-side Eq. 3 selection ----
-    npad_of = []
     x_of, rec_of, stats_of, k0_of, v0_of, ckp_of, cvp_of = (
         {}, {}, {}, {}, {}, {}, {})
     layer0 = _jit_layer0_kv if return_kv else _jit_layer0
     for i, (plan, ck, cv, have) in enumerate(items):
         n_pad = ((plan.n + bucket - 1) // bucket) * bucket
-        npad_of.append(n_pad)
         toks = _pad_to(plan.tokens.astype(np.int32), n_pad)
         valid = np.zeros(n_pad, bool)
         valid[:plan.n] = True
@@ -683,53 +746,221 @@ def selective_prefill_batch(
         ckp_of[i], cvp_of[i] = ckp, cvp
 
     # ---- phase 2: selective layers per (n_pad, r_pad) bucket ----
-    results = [None] * len(items)
-    by_shape: Dict[tuple, list] = {}
-    for i in range(len(items)):
-        r_count = int(rec_of[i].sum())
-        r_pad = max(r_bucket, ((r_count + r_bucket - 1) // r_bucket)
-                    * r_bucket)
-        by_shape.setdefault((npad_of[i], r_pad), []).append(i)
-    for (n_pad, r_pad), idxs in sorted(by_shape.items()):
-        B = _pow2(len(idxs))
-        r_idx_p = np.zeros((B, r_pad), np.int32)
-        r_valid = np.zeros((B, r_pad), bool)
-        valid = np.zeros((B, n_pad), bool)
-        final_slot = np.zeros(B, np.int32)
-        for bi, i in enumerate(idxs):
-            plan = items[i][0]
-            r_idx = np.where(rec_of[i])[0]
-            r_idx_p[bi] = _pad_to(r_idx.astype(np.int32), r_pad,
-                                  fill=plan.n - 1)
-            r_valid[bi, :len(r_idx)] = True
-            valid[bi, :plan.n] = True
-            final_slot[bi] = len(r_idx) - 1
-        live = _liveness_for(cfg, r_idx_p, valid)
-        zrow_x = jnp.zeros_like(x_of[idxs[0]])
-        zrow_ck = np.zeros_like(ckp_of[idxs[0]])
-        xs = [x_of[i] for i in idxs] + [zrow_x] * (B - len(idxs))
-        cks = [ckp_of[i] for i in idxs] + [zrow_ck] * (B - len(idxs))
-        cvs = [cvp_of[i] for i in idxs] + [zrow_ck] * (B - len(idxs))
-        args = (params, jnp.stack(xs),
-                jnp.asarray(r_idx_p), jnp.asarray(r_valid),
-                jnp.asarray(np.stack(cks)), jnp.asarray(np.stack(cvs)),
-                jnp.asarray(valid), jnp.arange(n_pad),
-                jnp.asarray(final_slot), cfg, jnp.asarray(live))
+    sel_items = [(items[i][0], x_of[i], rec_of[i], ckp_of[i], cvp_of[i])
+                 for i in range(len(items))]
+    sel_out = selective_layers_batch(params, cfg, sel_items,
+                                     r_bucket=r_bucket, return_kv=return_kv)
+    results = []
+    for i, (logits, k_rest, v_rest) in enumerate(sel_out):
+        n = items[i][0].n
+        k_all = v_all = None
         if return_kv:
-            logits, k_rest, v_rest = _jit_selective_layers_kv(*args)
-            k_rest = np.asarray(k_rest, np.float32)
-            v_rest = np.asarray(v_rest, np.float32)
-        else:
-            logits = _jit_selective_layers(*args)
-            k_rest = v_rest = None
-        logits = np.asarray(logits, np.float32)
-        for bi, i in enumerate(idxs):
-            n = items[i][0].n
-            k_all = v_all = None
-            if return_kv:
-                k_all = np.concatenate(
-                    [k0_of[i][:, None], k_rest[bi]], axis=1)[:n]
-                v_all = np.concatenate(
-                    [v0_of[i][:, None], v_rest[bi]], axis=1)[:n]
-            results[i] = (logits[bi], stats_of[i], k_all, v_all)
+            k_all = np.concatenate(
+                [k0_of[i][:, None], k_rest], axis=1)[:n]
+            v_all = np.concatenate(
+                [v0_of[i][:, None], v_rest], axis=1)[:n]
+        results.append((logits, stats_of[i], k_all, v_all))
     return results
+
+
+# ---------------------------------------------------------------------------
+# Chunk-resumable layer 0 (the unified-step serving path).
+#
+# The monolithic selective prefill runs layer 0 over the whole prompt in
+# one dispatch; under load that makes a long prompt stall every running
+# request for its full n^2 scan.  The chunked pass processes the prompt
+# in fixed-size query chunks against a full-length key buffer: chunk c
+# computes q/k/v for its tokens, appends its rotated keys into the
+# buffer, and attends causally over everything scanned so far.  Because
+# every per-token quantity (projections, divergence, post-layer-0
+# residual, pre-RoPE k0/v0) is row-independent and the attention softmax
+# reduces over the same zero-extended key axis, each chunk's rows are
+# bitwise identical to the monolithic pass's rows — verified by
+# tests/test_chunked.py.  The one cross-token reduction, Eq. 3's
+# attention mass (a sum over queries), is accumulated as per-query rows
+# and summed once at finalize through `_jit_mass_sum`, reproducing the
+# monolithic XLA reduction bitwise (a host-side numpy sum does NOT).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(8,))
+def _jit_layer0_chunk(params, toks_c, offset, valid, ck0_c, cv0_c,
+                      kbuf, vbuf, cfg: LMConfig):
+    """One layer-0 chunk: queries [offset, offset+C) vs all scanned keys.
+
+    toks_c: (C,) chunk token ids (0-padded past the prompt); offset:
+    scalar int32 (traced, so one compile serves every chunk index);
+    valid: (nbuf,) key validity (True at real prompt positions);
+    ck0_c/cv0_c: (C, Hkv, Dh) cached layer-0 rows for Eq. 3 divergence;
+    kbuf/vbuf: (nbuf, Hkv, Dh) accumulated rotated-key / value buffers.
+    -> (x_c, m_c, div_c, k0_c, v0_c, kbuf', vbuf') where m_c (C, nbuf)
+    holds per-query head-mean attention probabilities (the Eq. 3 mass
+    rows) and k0_c/v0_c are the chunk's fresh pre-RoPE layer-0 KV.
+
+    Unscanned keys (positions >= offset+C) are zeros in the buffers but
+    causally invisible to every chunk query, so the standard causal +
+    validity mask is exactly the monolithic mask.
+    """
+    C = toks_c.shape[0]
+    pos_c = offset + jnp.arange(C)
+    x = params["embed"][toks_c].astype(jnp.dtype(cfg.dtype))
+    if cfg.tie_embeddings:
+        x = x * (cfg.d_model ** 0.5)
+    lp = layer_params(params, 0)
+    h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, k_raw, v = qkv_proj(h, lp, cfg, pos_c)
+    kbuf = jax.lax.dynamic_update_slice(kbuf, k, (offset, 0, 0))
+    vbuf = jax.lax.dynamic_update_slice(vbuf, v, (offset, 0, 0))
+    k_pos = jnp.arange(kbuf.shape[0])
+    # layer-0 scoring needs materialized probabilities, so this always
+    # takes the jnp path — same as the monolithic layer 0 (`_layer0_impl`)
+    o, probs = full_attn(q, kbuf, vbuf, cfg, pos_c, k_pos,
+                         return_probs=True, k_valid=valid)
+    qvalid = jax.lax.dynamic_slice(valid, (offset,), (C,))
+    m_c = (probs * qvalid[None, None, :, None]).mean(axis=(0, 1))
+    dk = jnp.abs(k_raw - ck0_c).sum(axis=(1, 2))
+    dv = jnp.abs(v - cv0_c).sum(axis=(1, 2))
+    x = x + jnp.einsum("she,hed->sd", o, lp["wo"])
+    x = x + mlp_block(L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps), lp, cfg)
+    return x, m_c, dk + dv, k_raw, v, kbuf, vbuf
+
+
+@jax.jit
+def _jit_mass_sum(m):
+    """Eq. 3 attention-mass finalize: sum the accumulated per-query rows
+    over the query axis.  Must run through XLA — the monolithic layer 0
+    reduces this sum inside its jit, and only the same XLA reduction
+    reproduces it bitwise."""
+    return m.sum(axis=0)
+
+
+class ChunkedPrefill:
+    """Resumable selective prefill state for ONE request.
+
+    Drives the prompt scan in `chunk_tokens`-sized steps (`run_chunk`),
+    finalizes Eq. 3 recompute selection once the prompt is fully
+    scanned, and hands the selective-layer pass to the SAME bucketed
+    dispatch as the wave path (`selective_layers_batch`) — so chunked
+    and monolithic prefill decode bitwise-identical tokens.
+
+    The serving engine (`serving.batch_engine.PrefillState`) wraps this
+    with pool/store bookkeeping; this class is pure compute + state.
+    """
+
+    def __init__(self, params, cfg: LMConfig, plan: AssemblyPlan,
+                 cached_k: np.ndarray, cached_v: np.ndarray,
+                 have: np.ndarray, sel: SelectiveConfig,
+                 chunk_tokens: int, bucket: int = 128):
+        self.params = params
+        self.cfg = cfg
+        self.plan = plan
+        self.have = have
+        self.sel = sel
+        self.chunk = int(chunk_tokens)
+        n = plan.n
+        self.n = n
+        self.n_pad = ((n + bucket - 1) // bucket) * bucket
+        # the key buffers are sized to n_pad — the monolithic layer-0
+        # shape — so every chunk's attention reduces over the exact
+        # reduction axis the monolithic pass uses (zero-extending the
+        # key axis past n_pad is NOT bitwise-safe).  The scan grid
+        # covers n_pad in `chunk`-wide steps with a ragged final chunk
+        # (n_pad and chunk are both multiples of the 64-token engine
+        # bucket, so tail widths stay on the same O(1) shape grid).
+        self.toks = _pad_to(plan.tokens.astype(np.int32), self.n_pad)
+        self.valid = np.zeros(self.n_pad, bool)
+        self.valid[:n] = True
+        self.ckp = _pad_to(cached_k.astype(np.float32), self.n_pad)
+        self.cvp = _pad_to(cached_v.astype(np.float32), self.n_pad)
+        Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        self.kbuf = jnp.zeros((self.n_pad, Hkv, Dh), jnp.float32)
+        self.vbuf = jnp.zeros((self.n_pad, Hkv, Dh), jnp.float32)
+        self.offset = 0
+        self._xs: list = []
+        self._ms: list = []
+        self._divs: list = []
+        self._k0s: list = []
+        self._v0s: list = []
+        self.recompute: Optional[np.ndarray] = None
+        self.stats: Optional[EngineStats] = None
+
+    @property
+    def scan_done(self) -> bool:
+        return self.offset >= self.n_pad
+
+    def pending_tokens(self) -> int:
+        """Chunk-grid tokens still to scan (padded — what a budget is
+        charged for, since the dispatch width is the work)."""
+        return self.n_pad - self.offset
+
+    def next_chunk_tokens(self) -> int:
+        """Dispatch width of the next chunk (ragged at the tail)."""
+        return min(self.chunk, self.n_pad - self.offset)
+
+    def finalize_charge(self) -> int:
+        """Token charge of the selective finalize dispatch (the padded
+        recompute budget) — known as soon as the scan completes."""
+        if self.recompute is None:
+            raise RuntimeError("finalize_charge before scan completed")
+        r_count = int(self.recompute.sum())
+        return max(64, -(-r_count // 64) * 64)
+
+    def run_chunk(self):
+        """Scan the next chunk.  -> (positions, k0_rows, v0_rows): the
+        real prompt positions covered and their fresh pre-RoPE layer-0
+        KV, ready for incremental pool insertion (empty on an all-pad
+        tail chunk).  Completing the scan finalizes Eq. 3 selection."""
+        if self.scan_done:
+            raise RuntimeError("prompt fully scanned")
+        off = self.offset
+        C = self.next_chunk_tokens()
+        x_c, m_c, div_c, k0_c, v0_c, self.kbuf, self.vbuf = \
+            _jit_layer0_chunk(
+                self.params, jnp.asarray(self.toks[off:off + C]),
+                jnp.asarray(off, jnp.int32), jnp.asarray(self.valid),
+                jnp.asarray(self.ckp[off:off + C, 0]),
+                jnp.asarray(self.cvp[off:off + C, 0]),
+                self.kbuf, self.vbuf, self.cfg)
+        self._xs.append(x_c)
+        self._ms.append(np.asarray(m_c))
+        self._divs.append(np.asarray(div_c))
+        k0 = np.asarray(k0_c, np.float32)
+        v0 = np.asarray(v0_c, np.float32)
+        self._k0s.append(k0)
+        self._v0s.append(v0)
+        self.offset = off + C
+        lo, hi = off, min(off + C, self.n)
+        if self.scan_done:
+            self._select()
+        if hi <= lo:
+            return np.zeros(0, np.int64), k0[:0], v0[:0]
+        return np.arange(lo, hi), k0[:hi - lo], v0[:hi - lo]
+
+    def _select(self) -> None:
+        attn_mass = _jit_mass_sum(jnp.asarray(np.concatenate(self._ms)))
+        div = np.concatenate(self._divs)[:self.n_pad]
+        self.recompute, self.stats = select_recompute(
+            self.plan, self.have, np.asarray(attn_mass), div, self.sel)
+        # the mass rows are O(n_pad^2) host floats per request and many
+        # requests sit mid-scan concurrently — free them the moment the
+        # scan-wide reduction has consumed them
+        self._ms = []
+        self._divs = []
+
+    def x_full(self):
+        """Post-layer-0 residual stream (n_pad, D), assembled from the
+        chunk outputs — the selective pass's input."""
+        return jnp.concatenate(self._xs)[:self.n_pad]
+
+    def k0_full(self) -> np.ndarray:
+        """Fresh pre-RoPE layer-0 K (n, Hkv, Dh) over the real prompt."""
+        return np.concatenate(self._k0s)[:self.n]
+
+    def v0_full(self) -> np.ndarray:
+        return np.concatenate(self._v0s)[:self.n]
+
+    def sel_item(self) -> tuple:
+        """This request's `selective_layers_batch` entry."""
+        if self.recompute is None:
+            raise RuntimeError("selective pass before scan completed")
+        return (self.plan, self.x_full(), self.recompute, self.ckp,
+                self.cvp)

@@ -178,11 +178,22 @@ def make_trace(catalog: Catalog, pool: ReviewPool, profile: DatasetProfile,
                n_requests: int, qps: float, n_users: int = 2000,
                n_candidates: int = 20, reviews_per_user: int = 3,
                seed: int = 2, cluster_bias: float = 0.7,
-               user_zipf_a: Optional[float] = None) -> List[Request]:
+               user_zipf_a: Optional[float] = None,
+               long_prompt_frac: float = 0.0,
+               long_prompt_reviews: int = 8) -> List[Request]:
     """Synthetic request trace.  `user_zipf_a` switches user sampling
     from uniform to Zipfian (rank r drawn ∝ r^-a): a few heavy repeat
     users dominate the stream — the workload shape where cross-request
-    user-history KV reuse pays (serving/workload.zipf_repeat_trace)."""
+    user-history KV reuse pays (serving/workload.zipf_repeat_trace).
+
+    `long_prompt_frac` adds a heavy prompt-length tail: that fraction of
+    users carries a lognormal-distributed pile of extra reviews (mean
+    `long_prompt_reviews`), so their requests arrive with prompts a few
+    times longer than the base population — the long-sequence
+    head-of-line interference shape the chunked unified-step scheduler
+    targets (serving/workload.heavy_tail_trace).  The default 0.0 draws
+    nothing extra from the rng, keeping every pre-existing trace
+    byte-identical."""
     rng = np.random.default_rng(seed)
     p_user = None
     if user_zipf_a is not None:
@@ -192,9 +203,13 @@ def make_trace(catalog: Catalog, pool: ReviewPool, profile: DatasetProfile,
     # persistent per-user histories (re-appear across that user's requests)
     user_hist = {}
     for u in range(n_users):
+        n_rev = reviews_per_user
+        if long_prompt_frac and rng.random() < long_prompt_frac:
+            n_rev += max(1, int(rng.lognormal(
+                np.log(max(long_prompt_reviews, 1)), 0.5)))
         revs = []
         marks = []
-        for _ in range(reviews_per_user):
+        for _ in range(n_rev):
             r = make_review(pool, profile.mean_review_tokens, rng)
             m = np.zeros(len(r) + 1, bool)
             m[0] = True                       # REVIEW_SEP is instance-specific

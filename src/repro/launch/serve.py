@@ -12,15 +12,27 @@
     PYTHONPATH=src python -m repro.launch.serve --engine jax --k 4 \\
         --requests 12 --mode rcllm
 
+    # unified token-budget scheduler: chunk-resumable selective prefill
+    # mixed with decode in every tick (no whole-prefill waves)
+    PYTHONPATH=src python -m repro.launch.serve --engine jax --requests 12 \\
+        --sched chunked --chunk-tokens 128 --long-prompt-frac 0.2
+
 All paths drive the *same* batching loop; `--engine` picks the backend
 behind its seam (`serving.batching.EngineBackend`) and `--k` with
 ``--engine jax`` picks single-instance vs the `serving.cluster` path.
-With ``--mode rcllm`` each prompt goes through decomposition → assembly
+``--sched`` picks the scheduling discipline: ``wave`` (whole-prefill
+batches, prefill-prioritized — the default) or ``chunked`` (every tick
+packs decode tokens plus fixed-size prefill chunks under a global token
+budget; decoded tokens are bitwise identical either way).  With
+``--mode rcllm`` each prompt goes through decomposition → assembly
 plan → beyond-prefix cache insertion → selective recompute → paged
 decode; ``--mode full`` is the Full-Recompute reference.  See
 examples/serve_cluster.py for the narrated simulator; this entry point
-emits machine-readable JSON.
+emits machine-readable JSON, including a per-request latency split
+(queue-wait vs prefill-compute vs decode) and time-between-tokens
+percentiles so scheduler changes are attributable from bench artifacts.
 """
+
 from __future__ import annotations
 
 import argparse
@@ -36,14 +48,102 @@ from repro.core import simulator as SIM
 def run_sim(args) -> dict:
     qps = args.qps if args.qps is not None else 3.0 * args.k
     cfg = REG.ARCHS[args.model]
-    reqs, placement, _ = SIM.make_sim_setup(k=args.k,
-                                            n_requests=args.requests,
-                                            qps=qps, n_items=8000, seed=1)
-    res = SIM.simulate(cfg, CM.V5E_1, reqs, placement,
-                       SIM.SimConfig(mode=args.mode, policy=args.policy,
-                                     r_item=args.r_item, r_rev=args.r_rev))
-    return {"engine": "sim", "k": args.k, "qps": qps, "mode": args.mode,
-            "policy": args.policy, **res.summary()}
+    reqs, placement, _ = SIM.make_sim_setup(
+        k=args.k, n_requests=args.requests, qps=qps, n_items=8000, seed=1
+    )
+    res = SIM.simulate(
+        cfg,
+        CM.V5E_1,
+        reqs,
+        placement,
+        SIM.SimConfig(
+            mode=args.mode,
+            policy=args.policy,
+            r_item=args.r_item,
+            r_rev=args.r_rev,
+        ),
+    )
+    return {
+        "engine": "sim",
+        "k": args.k,
+        "qps": qps,
+        "mode": args.mode,
+        "policy": args.policy,
+        **res.summary(),
+    }
+
+
+def _percentiles(xs, qs=(50, 90, 99)) -> dict:
+    xs = np.asarray(list(xs), np.float64)
+    if len(xs) == 0:
+        return {f"p{q}_s": None for q in qs}
+    return {f"p{q}_s": float(np.percentile(xs, q)) for q in qs}
+
+
+def _latency_split(completions) -> dict:
+    """Per-request latency attribution + aggregates from completions."""
+    done = sorted(completions, key=lambda c: c.rid)
+    ttft = np.asarray([c.first_token_s - c.arrival_s for c in done])
+    return {
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p90_s": float(np.percentile(ttft, 90)),
+        "ttft_p99_s": float(np.percentile(ttft, 99)),
+        "ttft_mean_s": float(ttft.mean()),
+        "queue_wait_mean_s": float(np.mean([c.queue_wait_s for c in done])),
+        "prefill_mean_s": float(np.mean([c.prefill_s for c in done])),
+        "decode_mean_s": float(np.mean([c.decode_s for c in done])),
+        "per_request": [
+            {
+                "rid": c.rid,
+                "ttft_s": round(float(c.first_token_s - c.arrival_s), 4),
+                "queue_wait_s": round(float(c.queue_wait_s), 4),
+                "prefill_s": round(float(c.prefill_s), 4),
+                "decode_s": round(float(c.decode_s), 4),
+            }
+            for c in done
+        ],
+    }
+
+
+def _tbt_stats(workers) -> dict:
+    samples = [dt for w in workers for dt in w.tbt]
+    out = {f"tbt_{k}": v for k, v in _percentiles(samples).items()}
+    out["tbt_samples"] = len(samples)
+    return out
+
+
+def _tick_stats(workers) -> dict:
+    ticks = [t for w in workers for t in w.ticks]
+    if not ticks:
+        return {}
+    return {
+        "ticks": len(ticks),
+        "oversized_ticks": sum(1 for t in ticks if t.oversized),
+        "mean_tick_tokens": float(
+            np.mean(
+                [t.decode_tokens + t.chunk_tokens + t.finalize_tokens
+                 for t in ticks]
+            )
+        ),
+    }
+
+
+def _check_jax_flags(args) -> None:
+    if args.mode == "prefix":
+        raise SystemExit(
+            "--engine jax supports --mode rcllm|full "
+            "(prefix caching is a simulator-only baseline)"
+        )
+    if args.kv_reuse == "on" and args.mode != "rcllm":
+        raise SystemExit(
+            "--kv-reuse on needs --mode rcllm (the shared "
+            "block store holds beyond-prefix blocks)"
+        )
+    if args.sched == "chunked" and args.mode != "rcllm":
+        raise SystemExit(
+            "--sched chunked drives the beyond-prefix selective "
+            "prefill; --mode full has no chunk-resumable path"
+        )
 
 
 def run_jax_cluster(args) -> dict:
@@ -52,58 +152,84 @@ def run_jax_cluster(args) -> dict:
     from repro.data import synth as SY
     from repro.serving.cluster import ClusterEngine
 
-    if args.mode == "prefix":
-        raise SystemExit("--engine jax supports --mode rcllm|full "
-                         "(prefix caching is a simulator-only baseline)")
-    if args.kv_reuse == "on" and args.mode != "rcllm":
-        raise SystemExit("--kv-reuse on needs --mode rcllm (the shared "
-                         "block store holds beyond-prefix blocks)")
+    _check_jax_flags(args)
     qps = args.qps if args.qps is not None else 8.0
     system, pool_rv, prof, _ = make_tiny_system(
         n_items=80, n_requests_hist=40, k_instances=args.k,
-        n_layers=2, d_model=32)
-    trace = SY.make_trace(system.catalog, pool_rv, prof, args.requests,
-                          qps=qps, n_users=max(3, args.requests // 2),
-                          n_candidates=8, reviews_per_user=1, seed=2,
-                          user_zipf_a=args.zipf_users)
+        n_layers=2, d_model=32,
+    )
+    trace = SY.make_trace(
+        system.catalog,
+        pool_rv,
+        prof,
+        args.requests,
+        qps=qps,
+        n_users=max(3, args.requests // 2),
+        n_candidates=8,
+        reviews_per_user=1,
+        seed=2,
+        user_zipf_a=args.zipf_users,
+        long_prompt_frac=args.long_prompt_frac,
+    )
 
     def make_cluster():
-        return ClusterEngine(system, k=args.k, mode=args.mode,
-                             policy=args.policy, page_size=args.page_size,
-                             n_pages=args.pages,
-                             max_batch_tokens=args.max_batch_tokens,
-                             attn_backend=args.attn_backend,
-                             kv_reuse=args.kv_reuse == "on")
+        return ClusterEngine(
+            system,
+            k=args.k,
+            mode=args.mode,
+            policy=args.policy,
+            page_size=args.page_size,
+            n_pages=args.pages,
+            max_batch_tokens=args.max_batch_tokens,
+            attn_backend=args.attn_backend,
+            kv_reuse=args.kv_reuse == "on",
+            sched=args.sched,
+            chunk_tokens=args.chunk_tokens,
+            step_tokens=args.step_tokens,
+        )
 
     if args.warmup:
         make_cluster().run(trace, decode_steps=args.decode_steps)
-    rep = make_cluster().run(trace, decode_steps=args.decode_steps)
+    cluster = make_cluster()
+    rep = cluster.run(trace, decode_steps=args.decode_steps)
 
     ttft = rep.ttft()
     return {
-        "engine": "jax-cluster", "k": args.k, "mode": args.mode,
-        "attn_backend": args.attn_backend, "kv_reuse": args.kv_reuse,
-        "policy": rep.policy, "requests": len(rep.completions),
+        "engine": "jax-cluster",
+        "k": args.k,
+        "mode": args.mode,
+        "sched": args.sched,
+        "attn_backend": args.attn_backend,
+        "kv_reuse": args.kv_reuse,
+        "policy": rep.policy,
+        "requests": len(rep.completions),
         "decode_steps": args.decode_steps,
         "includes_jit_compile": not args.warmup,
         "per_request_ttft_s": [round(float(x), 4) for x in ttft],
-        "ttft_p50_s": float(np.percentile(ttft, 50)),
-        "ttft_p90_s": float(np.percentile(ttft, 90)),
-        "ttft_mean_s": float(ttft.mean()),
+        **_latency_split(rep.completions),
+        **_tbt_stats(cluster.batcher.workers),
+        **_tick_stats(cluster.batcher.workers),
         "mean_hit_rate": rep.mean_hit_rate(),
-        "per_worker": [{
-            "worker": w.worker, "requests": w.n_requests,
-            "mean_hit_rate": (round(w.mean_hit_rate, 4)
-                              if w.mean_hit_rate is not None else None),
-            "transfer_blocks": w.transfer_blocks,
-            "transfer_tokens": w.transfer_tokens,
-            "transfer_mbytes": round(w.transfer_bytes / 1e6, 3),
-            "transfer_seconds": round(w.transfer_seconds, 6),
-            "pool_peak_pages": w.pool_peak_pages,
-            "busy_seconds": round(w.busy_seconds, 4),
-            "preempted": w.preempted,
-            "kv_reuse": w.kv_reuse,
-        } for w in rep.workers],
+        "per_worker": [
+            {
+                "worker": w.worker,
+                "requests": w.n_requests,
+                "mean_hit_rate": (
+                    round(w.mean_hit_rate, 4)
+                    if w.mean_hit_rate is not None
+                    else None
+                ),
+                "transfer_blocks": w.transfer_blocks,
+                "transfer_tokens": w.transfer_tokens,
+                "transfer_mbytes": round(w.transfer_bytes / 1e6, 3),
+                "transfer_seconds": round(w.transfer_seconds, 6),
+                "pool_peak_pages": w.pool_peak_pages,
+                "busy_seconds": round(w.busy_seconds, 4),
+                "preempted": w.preempted,
+                "kv_reuse": w.kv_reuse,
+            }
+            for w in rep.workers
+        ],
     }
 
 
@@ -113,20 +239,20 @@ def run_jax(args) -> dict:
 
     from repro.core import engine as ENG
     from repro.serving.batch_engine import BatchEngine
-    from repro.serving.batching import (ContinuousBatcher, JaxEngineBackend,
-                                        PendingRequest)
+    from repro.serving.batching import (
+        ContinuousBatcher,
+        JaxEngineBackend,
+        PendingRequest,
+    )
     from repro.serving.kv_pool import pool_for
     from repro.serving.workload import rcllm_workload
 
-    if args.mode == "prefix":
-        raise SystemExit("--engine jax supports --mode rcllm|full "
-                         "(prefix caching is a simulator-only baseline)")
-    if args.kv_reuse == "on" and args.mode != "rcllm":
-        raise SystemExit("--kv-reuse on needs --mode rcllm (the shared "
-                         "block store holds beyond-prefix blocks)")
+    _check_jax_flags(args)
     if args.zipf_users is not None and args.mode != "rcllm":
-        raise SystemExit("--zipf-users shapes the rcllm trace; it has no "
-                         "effect on --mode full prompts")
+        raise SystemExit(
+            "--zipf-users shapes the rcllm trace; it has no "
+            "effect on --mode full prompts"
+        )
     qps = args.qps if args.qps is not None else 8.0
     rng = np.random.default_rng(1)
     mode = args.mode
@@ -137,39 +263,55 @@ def run_jax(args) -> dict:
         # full RcLLM stack: tiny model + both cache pools + placement
         from repro.core.rcllm import make_tiny_system
         from repro.data import synth as SY
-        from repro.serving.workload import (rcllm_reuse_info,
-                                            zipf_repeat_trace)
+        from repro.serving.workload import rcllm_reuse_info
+
         system, pool_rv, prof, _ = make_tiny_system(
             n_items=80, n_requests_hist=40, k_instances=max(args.k, 1),
-            n_layers=2, d_model=32)
+            n_layers=2, d_model=32,
+        )
         params, cfg = system.params, system.cfg
-        if args.zipf_users is not None:
-            # identical trace shape to the uniform branch — the flag
-            # changes ONLY the user-id distribution, so off/on (or
-            # uniform/zipf) comparisons are not confounded
-            trace = zipf_repeat_trace(
-                system.catalog, pool_rv, prof, args.requests, qps=qps,
-                n_users=max(3, args.requests // 2),
-                zipf_a=args.zipf_users, reviews_per_user=1, seed=2)
-        else:
-            trace = SY.make_trace(system.catalog, pool_rv, prof,
-                                  args.requests, qps=qps,
-                                  n_users=max(3, args.requests // 2),
-                                  n_candidates=8, reviews_per_user=1,
-                                  seed=2)
-        reqs, plans = rcllm_workload(system, trace,
-                                     decode_steps=args.decode_steps)
+        # one trace producer for every flag combination: --zipf-users
+        # changes ONLY the user-id distribution and --long-prompt-frac
+        # ONLY the history-length tail, so scheduler / reuse comparisons
+        # are not confounded by trace shape
+        trace = SY.make_trace(
+            system.catalog,
+            pool_rv,
+            prof,
+            args.requests,
+            qps=qps,
+            n_users=max(3, args.requests // 2),
+            n_candidates=8,
+            reviews_per_user=1,
+            seed=2,
+            user_zipf_a=args.zipf_users,
+            long_prompt_frac=args.long_prompt_frac,
+        )
+        reqs, plans = rcllm_workload(system, trace, decode_steps=args.decode_steps)
         if args.kv_reuse == "on":
             reuse = rcllm_reuse_info(system, trace, plans)
     else:
         # Full-Recompute reference on random prompts
         import jax
+
         from repro.configs.base import LMConfig
         from repro.models import transformer as T
-        cfg = LMConfig(name="serve-tiny", n_layers=2, d_model=64, n_heads=4,
-                       n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512,
-                       mlp_type="swiglu", dtype="float32", attn_q_chunk=64,
-                       attn_kv_chunk=64, remat=False)
+
+        cfg = LMConfig(
+            name="serve-tiny",
+            n_layers=2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=2,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=512,
+            mlp_type="swiglu",
+            dtype="float32",
+            attn_q_chunk=64,
+            attn_kv_chunk=64,
+            remat=False,
+        )
         params = T.init_params(jax.random.PRNGKey(0), cfg)
         if args.prompt_tokens < 16:
             raise SystemExit("--prompt-tokens must be >= 16")
@@ -178,10 +320,15 @@ def run_jax(args) -> dict:
         reqs = []
         for rid in range(args.requests):
             n = int(rng.integers(lo, args.prompt_tokens + 1))
-            reqs.append(PendingRequest(
-                arrival_s=float(arrivals[rid]), rid=rid, n_tokens=n,
-                decode_steps=args.decode_steps,
-                tokens=rng.integers(1, cfg.vocab_size, n).astype(np.int32)))
+            reqs.append(
+                PendingRequest(
+                    arrival_s=float(arrivals[rid]),
+                    rid=rid,
+                    n_tokens=n,
+                    decode_steps=args.decode_steps,
+                    tokens=rng.integers(1, cfg.vocab_size, n).astype(np.int32),
+                )
+            )
 
     # the attention-backend seam: jnp reference vs Pallas kernels inside
     # the engine's jitted prefill/decode steps (offline caches above were
@@ -191,17 +338,24 @@ def run_jax(args) -> dict:
 
     def make_batcher():
         from repro.serving.block_store import SharedBlockStore
+
         pool = pool_for(cfg, page_size=args.page_size, n_pages=args.pages)
         engine = BatchEngine(
-            params, cfg, pool=pool,
-            sel=ENG.SelectiveConfig(r_item=args.r_item, r_rev=args.r_rev,
-                                    window=16),
-            store=(SharedBlockStore(pool) if args.kv_reuse == "on"
-                   else None))
-        backend = JaxEngineBackend(engine, mode=mode, plans=plans,
-                                   reuse=reuse)
+            params,
+            cfg,
+            pool=pool,
+            sel=ENG.SelectiveConfig(r_item=args.r_item, r_rev=args.r_rev, window=16),
+            store=(SharedBlockStore(pool) if args.kv_reuse == "on" else None),
+            chunk_tokens=args.chunk_tokens,
+        )
+        backend = JaxEngineBackend(engine, mode=mode, plans=plans, reuse=reuse)
         return engine, backend, ContinuousBatcher(
-            backend=backend, max_batch_tokens=args.max_batch_tokens)
+            backend=backend,
+            max_batch_tokens=args.max_batch_tokens,
+            sched=args.sched,
+            chunk_tokens=args.chunk_tokens,
+            step_tokens=args.step_tokens,
+        )
 
     if args.warmup:
         # throwaway pass to fill the jit caches, so the reported times
@@ -210,25 +364,27 @@ def run_jax(args) -> dict:
     engine, backend, batcher = make_batcher()
     done = sorted(batcher.run(reqs), key=lambda c: c.rid)
 
-    ttft = np.asarray([c.first_token_s - c.arrival_s for c in done])
     total = max(c.done_s for c in done)
     n_toks = sum(len(backend.generated[c.rid]) for c in done)
     stats = engine.pool.stats()
     out = {
-        "engine": "jax", "mode": mode,
-        "attn_backend": backend.attn_backend, "requests": len(done),
+        "engine": "jax",
+        "mode": mode,
+        "sched": args.sched,
+        "attn_backend": backend.attn_backend,
+        "requests": len(done),
         "kv_reuse": args.kv_reuse,
         "decode_steps": args.decode_steps,
         "includes_jit_compile": not args.warmup,
-        "per_request_ttft_s": [round(float(x), 4) for x in ttft],
-        "ttft_p50_s": float(np.percentile(ttft, 50)),
-        "ttft_p90_s": float(np.percentile(ttft, 90)),
-        "ttft_mean_s": float(ttft.mean()),
+        **_latency_split(done),
+        **_tbt_stats(batcher.workers),
+        **_tick_stats(batcher.workers),
         "decode_tokens": int(n_toks),
         "throughput_tok_s": float(n_toks / max(total, 1e-9)),
         "pool_peak_pages": engine.pool.peak_pages,
         "pool_peak_utilization": round(
-            engine.pool.peak_pages / max(stats.n_pages - 1, 1), 4),
+            engine.pool.peak_pages / max(stats.n_pages - 1, 1), 4
+        ),
     }
     if engine.store is not None:
         out["block_store"] = engine.store.stats()
@@ -237,34 +393,86 @@ def run_jax(args) -> dict:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", default="sim", choices=["sim", "jax"],
-                    help="sim: analytic cluster simulator; jax: real "
-                         "batched engine + paged KV pool on this host "
-                         "(--k > 1 runs the serving.cluster path: K "
-                         "engines over sharded item caches)")
-    ap.add_argument("--k", type=int, default=None,
-                    help="instance count; default 40 for --engine sim, "
-                         "1 for --engine jax (pass --k N for the real "
-                         "multi-instance cluster)")
+    ap.add_argument(
+        "--engine",
+        default="sim",
+        choices=["sim", "jax"],
+        help="sim: analytic cluster simulator; jax: real "
+        "batched engine + paged KV pool on this host "
+        "(--k > 1 runs the serving.cluster path: K "
+        "engines over sharded item caches)",
+    )
+    ap.add_argument(
+        "--k",
+        type=int,
+        default=None,
+        help="instance count; default 40 for --engine sim, "
+        "1 for --engine jax (pass --k N for the real "
+        "multi-instance cluster)",
+    )
     ap.add_argument("--qps", type=float, default=None)
     ap.add_argument("--requests", type=int, default=1500)
     ap.add_argument("--model", default="rcllm-qwen3-8b")
-    ap.add_argument("--mode", default="rcllm",
-                    choices=["rcllm", "prefix", "full"])
-    ap.add_argument("--attn-backend", default="jnp",
-                    choices=["jnp", "pallas"],
-                    help="attention inside the jax engine's jitted steps: "
-                         "jnp reference, or the Pallas flash/selective "
-                         "kernels (interpret mode off-TPU)")
-    ap.add_argument("--kv-reuse", default="off", choices=["off", "on"],
-                    help="cross-request beyond-prefix KV reuse: a shared "
-                         "ref-counted block store (pinned user tier + "
-                         "LRU item tier) over each engine's paged pool; "
-                         "decoded tokens are identical either way")
-    ap.add_argument("--zipf-users", type=float, default=None,
-                    help="rcllm trace: draw user ids Zipf(a) instead of "
-                         "uniformly — heavy repeat users, the workload "
-                         "where --kv-reuse pays (e.g. 1.4)")
+    ap.add_argument("--mode", default="rcllm", choices=["rcllm", "prefix", "full"])
+    ap.add_argument(
+        "--attn-backend",
+        default="jnp",
+        choices=["jnp", "pallas"],
+        help="attention inside the jax engine's jitted steps: "
+        "jnp reference, or the Pallas flash/selective "
+        "kernels (interpret mode off-TPU)",
+    )
+    ap.add_argument(
+        "--kv-reuse",
+        default="off",
+        choices=["off", "on"],
+        help="cross-request beyond-prefix KV reuse: a shared "
+        "ref-counted block store (pinned user tier + "
+        "LRU item tier) over each engine's paged pool; "
+        "decoded tokens are identical either way",
+    )
+    ap.add_argument(
+        "--sched",
+        default="wave",
+        choices=["wave", "chunked"],
+        help="scheduling discipline for the jax engine: wave = "
+        "whole-prefill batches (prefill-prioritized); chunked = "
+        "unified token-budget ticks mixing decode with "
+        "chunk-resumable selective prefill.  Decoded tokens are "
+        "bitwise identical either way",
+    )
+    ap.add_argument(
+        "--chunk-tokens",
+        type=int,
+        default=128,
+        help="prefill chunk size for --sched chunked (layer-0 "
+        "scan dispatch width; multiples of 64 keep the jit "
+        "shape grid small)",
+    )
+    ap.add_argument(
+        "--step-tokens",
+        type=int,
+        default=None,
+        help="per-tick token budget for --sched chunked "
+        "(default: max(4 * chunk_tokens, 512))",
+    )
+    ap.add_argument(
+        "--zipf-users",
+        type=float,
+        default=None,
+        help="rcllm trace: draw user ids Zipf(a) instead of "
+        "uniformly — heavy repeat users, the workload "
+        "where --kv-reuse pays (e.g. 1.4)",
+    )
+    ap.add_argument(
+        "--long-prompt-frac",
+        type=float,
+        default=0.0,
+        help="rcllm trace: fraction of users carrying a lognormal "
+        "heavy tail of extra reviews — long-prompt head-of-line "
+        "interference, the workload where --sched chunked pays "
+        "(e.g. 0.2)",
+    )
     ap.add_argument("--policy", default="affinity")
     ap.add_argument("--r-item", type=float, default=0.3)
     ap.add_argument("--r-rev", type=float, default=0.3)
@@ -274,9 +482,12 @@ def main():
     ap.add_argument("--max-batch-tokens", type=int, default=4096)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--pages", type=int, default=512)
-    ap.add_argument("--warmup", action="store_true",
-                    help="run a throwaway pass first so reported times "
-                         "exclude jit compilation")
+    ap.add_argument(
+        "--warmup",
+        action="store_true",
+        help="run a throwaway pass first so reported times "
+        "exclude jit compilation",
+    )
     args = ap.parse_args()
 
     if args.k is None:

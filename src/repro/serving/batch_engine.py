@@ -32,8 +32,8 @@ decode) so steady-state serving retraces O(1) times.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +46,7 @@ from repro.kernels import default_interpret
 from repro.kernels.flash_attention.ops import mha_flash
 from repro.models import layers as L
 from repro.serving import block_store as BS
-from repro.serving.kv_pool import PagedKVPool, pool_for
+from repro.serving.kv_pool import PagedKVPool, PoolExhausted, pool_for
 
 # Decode runs one query per request: a small q tile keeps the padded
 # query block cheap while kv tiles stay MXU-sized.
@@ -70,6 +70,48 @@ class BatchRequest:
     have: Optional[np.ndarray] = None
     n_reserve: int = 0
     reuse: Optional[BS.RequestReuse] = None
+
+
+@dataclass
+class PrefillState:
+    """One request's chunk-resumable prefill, engine-side.
+
+    Wraps the pure-compute `engine.ChunkedPrefill` with the pool and
+    block-store bookkeeping the serving path needs: which logical
+    positions were mapped at store slots when the request was admitted
+    (`mapped_mask` — un-shared again at finalize for positions Eq. 3
+    selects to recompute), and which store inserts are still owed once
+    the request's fresh bytes exist (prefix/user tiers need computed
+    KV, so their misses insert at finalize, unlike item blocks whose
+    offline bytes insert at admission)."""
+
+    req: BatchRequest
+    cp: ENG.ChunkedPrefill
+    mapped_mask: np.ndarray
+    pending_prefix: Optional[tuple] = None
+    pending_user: Optional[tuple] = None  # (key, u_pos)
+    started: bool = False
+    # buffered layer-0 rows awaiting the finalize scatter (lazy mode):
+    # (positions, k0, v0) per completed chunk
+    l0_buf: List[tuple] = field(default_factory=list)
+
+
+@dataclass
+class StepReport:
+    """What one unified `BatchEngine.step` tick executed and charged."""
+
+    decode_logits: Optional[np.ndarray] = None
+    finalized: Dict[int, np.ndarray] = field(default_factory=dict)
+    started: List[int] = field(default_factory=list)
+    chunked: List[int] = field(default_factory=list)
+    charge_decode: int = 0
+    charge_chunks: int = 0
+    charge_finalize: int = 0
+    oversized: bool = False
+
+    @property
+    def charged(self) -> int:
+        return self.charge_decode + self.charge_chunks + self.charge_finalize
 
 
 def _decode_attn(q, k_l, v_l, kv_valid, cfg: LMConfig):
@@ -210,6 +252,8 @@ class BatchEngine:
         decode_bucket: int = 8,
         batched_selective: bool = True,
         store: Optional[BS.SharedBlockStore] = None,
+        chunk_tokens: int = 128,
+        eager_kv_writes: Optional[bool] = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -219,8 +263,20 @@ class BatchEngine:
         self.decode_bucket = decode_bucket
         self.batched_selective = batched_selective
         self.store = store
+        self.chunk_tokens = chunk_tokens
+        # chunked prefill writes each chunk's fresh layer-0 KV into the
+        # pool as it completes.  With arena donation (TPU/GPU) the write
+        # is in-place and eager per-tick writes are the natural
+        # incremental mode; on CPU every eager scatter is a full-arena
+        # copy, so the rows are buffered host-side and fused into the
+        # finalize scatter instead — nothing reads a request's rows
+        # before its decode starts, so the two modes are byte-identical.
+        if eager_kv_writes is None:
+            eager_kv_writes = jax.default_backend() in ("tpu", "gpu")
+        self.eager_kv_writes = eager_kv_writes
         self.store_refs: Dict[int, list] = {}
         self.last_stats: Dict[int, ENG.EngineStats] = {}
+        self.prefill_states: Dict[int, PrefillState] = {}
 
     # ------------------------------ prefill --------------------------------
     def prefill(self, reqs: Sequence[BatchRequest], mode: str = "full") -> np.ndarray:
@@ -604,6 +660,298 @@ class BatchEngine:
         self.pool.write_at_batch(entries)
         self.pool.write_at_batch(entries_l0, layer=0)
         return np.stack(out)
+
+    # ------------------------ chunk-resumable prefill ------------------------
+    def begin_prefill(self, r: BatchRequest) -> None:
+        """Admit one request into chunk-resumable prefill.
+
+        Resolves the shared block store *now* (a prefix-tier hit is
+        injected before any compute, exactly like the wave path, so
+        Eq. 3 selection later drops the instruction from the recompute
+        set; item/user hits map their positions at store slots) and
+        claims the request's full admission-bound private pages up
+        front, so neither the incremental chunk writes nor the finalize
+        remap can hit `PoolExhausted` mid-prefill.
+        """
+        self._check_plan(r)
+        if r.rid in self.prefill_states:
+            raise KeyError(f"request {r.rid} already prefilling")
+        plan, n = r.plan, r.plan.n
+        ck, cv, have = r.cached_k, r.cached_v, r.have
+        store = self.store
+        held: List = []
+        pos_parts, slot_parts = [], []
+        pending_prefix = pending_user = None
+        if store is not None:
+            reuse = r.reuse if r.reuse is not None else BS.RequestReuse()
+            # --- prefix tier: inject a hit before compute ---
+            key = self._prefix_full_key(r)
+            if key is not None:
+                pblk = store.acquire(key)
+                if pblk is not None:
+                    held.append(key)
+                    npfx = min(pblk.n_tokens, n)
+                    ck = np.array(ck, np.float32)
+                    cv = np.array(cv, np.float32)
+                    have = have.copy()
+                    ck[:npfx] = pblk.host_k[:npfx]
+                    cv[:npfx] = pblk.host_v[:npfx]
+                    have[:npfx] = True
+                    pos_parts.append(np.arange(npfx))
+                    slot_parts.append(pblk.slots[:npfx])
+                else:
+                    pending_prefix = key
+            # --- item tier: offline bytes exist now, so misses insert
+            # at admission (later arrivals hit them; this request keeps
+            # its own private rows — the bytes are identical either way)
+            for ref in reuse.blocks:
+                blk = store.acquire(ref.key)
+                if blk is None and ref.k is not None:
+                    blk = store.insert(
+                        ref.key,
+                        BS.ITEM_TIER,
+                        ref.k,
+                        ref.v,
+                        tokens=ref.tokens,
+                        defer_write=True,
+                    )
+                    if blk is not None:
+                        blk.refcount += 1
+                if blk is not None:
+                    held.append(ref.key)
+                    pos_parts.append(ref.positions)
+                    slot_parts.append(blk.slots[ref.offsets])
+            # --- user tier (fresh bytes needed: miss inserts at finalize)
+            if reuse.user_key is not None:
+                u_pos = BS.user_reuse_positions(plan, r.have, reuse.prefix_end)
+                if len(u_pos):
+                    ublk = store.acquire(reuse.user_key)
+                    if ublk is not None:
+                        held.append(reuse.user_key)
+                        common = np.intersect1d(u_pos, ublk.positions)
+                        pos_parts.append(common)
+                        slot_parts.append(
+                            ublk.slots[np.searchsorted(ublk.positions, common)]
+                        )
+                    else:
+                        pending_user = (reuse.user_key, u_pos)
+        mapped_pos = np.concatenate(pos_parts) if pos_parts else np.zeros(0, np.int64)
+        mapped_slots = (
+            np.concatenate(slot_parts) if slot_parts else np.zeros(0, np.int64)
+        )
+        # claim the full admission bound: the pages actually needed now,
+        # plus spare headroom covering the worst-case finalize remap
+        bound, _ = self.admission_pages(r)
+        total_slots = self.pool.pages_for(n + r.n_reserve) * self.pool.page_size
+        n_priv = max(total_slots - len(mapped_pos), 0)
+        begin_need = -(-n_priv // self.pool.page_size)
+        extra = max(bound - begin_need, 0)
+        if store is not None and self.pool.free_pages < begin_need + extra:
+            store.evict_for(begin_need + extra)
+        try:
+            self.pool.alloc_mapped(
+                r.rid, n + r.n_reserve, mapped_pos, mapped_slots,
+                extra_pages=extra,
+            )
+        except PoolExhausted:
+            if store is not None:
+                store.release_all(held)
+            raise
+        if store is not None:
+            self.store_refs[r.rid] = held
+        mapped_mask = np.zeros(n, bool)
+        mapped_mask[mapped_pos[mapped_pos < n].astype(np.int64)] = True
+        cp = ENG.ChunkedPrefill(
+            self.params, self.cfg, plan, ck, cv, have, self.sel,
+            chunk_tokens=self.chunk_tokens, bucket=self.bucket,
+        )
+        self.prefill_states[r.rid] = PrefillState(
+            req=r,
+            cp=cp,
+            mapped_mask=mapped_mask,
+            pending_prefix=pending_prefix,
+            pending_user=pending_user,
+        )
+
+    def abort_prefill(self, rid: int) -> None:
+        """Roll back a mid-prefill preemption: drop the chunk state and
+        release pages + store refs.  The caller keeps the plan, so the
+        victim can re-prefill from scratch (greedy decode regenerates
+        the same tokens)."""
+        self.prefill_states.pop(rid, None)
+        self.release(rid)
+
+    def _finalize_store(self, st: PrefillState, k_all, v_all, rec) -> np.ndarray:
+        """Store bookkeeping for one finalizing request: insert the
+        fresh-byte tiers whose keys missed at admission, then un-share
+        every mapped position Eq. 3 selected for recomputation (its
+        fresh KV must land privately — writing through the shared slot
+        would corrupt the store's block).  -> remapped positions."""
+        store, r = self.store, st.req
+        n = st.cp.n
+        reuse = r.reuse if r.reuse is not None else BS.RequestReuse()
+        held = self.store_refs.setdefault(r.rid, [])
+        if st.pending_prefix is not None:
+            npfx = min(reuse.prefix_len, n)
+            pblk = store.insert(
+                st.pending_prefix,
+                BS.PREFIX_TIER,
+                k_all[:npfx],
+                v_all[:npfx],
+                pinned=True,
+                defer_write=True,
+            )
+            if pblk is not None:
+                pblk.refcount += 1
+                held.append(st.pending_prefix)
+        if st.pending_user is not None:
+            ukey, u_pos = st.pending_user
+            ku = np.concatenate([k_all[u_pos, :1], r.cached_k[u_pos, 1:]], axis=1)
+            vu = np.concatenate([v_all[u_pos, :1], r.cached_v[u_pos, 1:]], axis=1)
+            ublk = store.insert(
+                ukey,
+                BS.USER_TIER,
+                ku,
+                vu,
+                positions=u_pos,
+                pinned=True,
+                defer_write=True,
+            )
+            if ublk is not None:
+                ublk.refcount += 1
+                held.append(ukey)
+        remap = np.where(st.mapped_mask & rec)[0]
+        self.pool.remap_private(r.rid, remap)
+        st.mapped_mask[remap] = False
+        return remap
+
+    def finalize_prefill(self, rids: Sequence[int]) -> Dict[int, np.ndarray]:
+        """Selective layers + pool insertion for fully-scanned requests.
+
+        One bucketed batched dispatch (`engine.selective_layers_batch`
+        — the same kernel the wave path uses, so chunked and monolithic
+        prefill decode bitwise-identical tokens), then one fused
+        deep-layer pool scatter for the whole batch; the layer-0 plane
+        already landed incrementally as chunks completed.
+        """
+        states = [self.prefill_states[rid] for rid in rids]
+        sel_out = ENG.selective_layers_batch(
+            self.params, self.cfg, [st.cp.sel_item() for st in states]
+        )
+        out: Dict[int, np.ndarray] = {}
+        entries_deep, entries_l0 = [], []
+        for st, (logits, k_rest, v_rest) in zip(states, sel_out):
+            r, cp = st.req, st.cp
+            n = cp.n
+            stats = cp.stats
+            self.last_stats[r.rid] = stats
+            k_all = np.concatenate([cp.k0_full()[:, None], k_rest[:n]], axis=1)
+            v_all = np.concatenate([cp.v0_full()[:, None], v_rest[:n]], axis=1)
+            rec = stats.recompute_mask
+            for positions, k0, v0 in st.l0_buf:  # lazy-mode chunk rows
+                entries_l0.append((r.rid, positions, k0, v0))
+            if self.store is not None:
+                remap = self._finalize_store(st, k_all, v_all, rec)
+                if len(remap):
+                    # un-shared positions never got the incremental
+                    # layer-0 write (they were mapped then) — their
+                    # fresh plane lands with the finalize scatter
+                    entries_l0.append((r.rid, remap, k_all[remap, 0], v_all[remap, 0]))
+            pos, kw, vw = self._selective_rows(r, stats, k_all, v_all)
+            keep = ~st.mapped_mask[pos]
+            entries_deep.append((r.rid, pos[keep], kw[keep][:, 1:], vw[keep][:, 1:]))
+            out[r.rid] = logits
+            del self.prefill_states[r.rid]
+        if self.store is not None:
+            self.store.flush_writes()
+        self.pool.write_at_batch(entries_deep, deep=True)
+        self.pool.write_at_batch(entries_l0, layer=0)
+        return out
+
+    def step(
+        self,
+        budget: int,
+        decode_rids: Sequence[int],
+        decode_tokens: Sequence[int],
+        prefill_rids: Sequence[int],
+    ) -> StepReport:
+        """One unified serving tick under a global token budget.
+
+        Decode always runs first (one token per running request — and
+        first so a `PoolExhausted` preemption can retry before any
+        prefill work executes); the remaining budget packs prefill work
+        over `prefill_rids` in admission order: requests whose scan is
+        complete finalize (charged their padded recompute budget),
+        everyone else gets layer-0 chunks round-robin — one chunk per
+        request per cycle, so a short prompt admitted behind a long one
+        finishes scanning in proportion to its own length instead of
+        waiting out the long scan (the head-of-line fix).  When nothing
+        fits the remaining budget, the single head work item runs
+        anyway (`oversized` tick) — an indivisible selective finalize
+        can exceed any fixed budget and must not starve.
+        """
+        rep = StepReport()
+        if self.store is not None:
+            self.store.flush_writes()
+        if decode_rids:
+            rep.decode_logits = self.decode(decode_rids, decode_tokens)
+            rep.charge_decode = len(decode_rids)
+        left = budget - rep.charge_decode
+        active = [rid for rid in prefill_rids if rid in self.prefill_states]
+        packed = False
+        finalize: List[int] = []
+        l0_entries: List[tuple] = []
+
+        def try_finalize(rid) -> None:
+            nonlocal left, packed
+            fc = self.prefill_states[rid].cp.finalize_charge()
+            if fc <= left or (not packed and not decode_rids):
+                if fc > left:
+                    rep.oversized = True
+                finalize.append(rid)
+                rep.charge_finalize += fc
+                left -= fc
+                packed = True
+
+        # pass 1 (admission order): fully-scanned requests finalize first
+        for rid in active:
+            if self.prefill_states[rid].cp.scan_done:
+                try_finalize(rid)
+        # pass 2: round-robin chunks; a request finishing its scan gets
+        # to finalize in the same tick if the budget still allows
+        progress = True
+        while progress:
+            progress = False
+            for rid in active:
+                st = self.prefill_states[rid]
+                if st.cp.scan_done:
+                    continue
+                c = st.cp.next_chunk_tokens()
+                if c > left and (packed or decode_rids):
+                    continue
+                if c > left:
+                    rep.oversized = True
+                positions, k0, v0 = st.cp.run_chunk()
+                keep = ~st.mapped_mask[positions]
+                if self.eager_kv_writes:
+                    l0_entries.append((rid, positions[keep], k0[keep], v0[keep]))
+                else:
+                    st.l0_buf.append((positions[keep], k0[keep], v0[keep]))
+                rep.charge_chunks += c
+                left -= c
+                packed = True
+                progress = True
+                if not st.started:
+                    st.started = True
+                    rep.started.append(rid)
+                if rid not in rep.chunked:
+                    rep.chunked.append(rid)
+                if st.cp.scan_done and rid not in finalize:
+                    try_finalize(rid)
+        self.pool.write_at_batch(l0_entries, layer=0)
+        if finalize:
+            rep.finalized = self.finalize_prefill(finalize)
+        return rep
 
     # ------------------------------- decode --------------------------------
     def decode(self, rids: Sequence[int], last_tokens: Sequence[int]) -> np.ndarray:

@@ -1,12 +1,29 @@
 """Continuous batching for the serving path — single instance or cluster.
 
-Requests arrive asynchronously; the batcher forms prefill batches under a
-token budget and interleaves decode iterations (prefill-prioritized, like
-vLLM's default).  The *same loop* drives both execution targets through
-the `EngineBackend` seam:
+Requests arrive asynchronously; the batcher schedules them under one of
+two disciplines:
+
+* ``sched="wave"`` — the classic prefill-prioritized loop (vLLM's
+  default shape): each step runs either one whole-prefill batch under a
+  token budget or one decode iteration.  A long prompt therefore stalls
+  every running request's decode and every arrival's TTFT for its full
+  prefill — the long-sequence head-of-line problem.
+
+* ``sched="chunked"`` — the unified budgeted step: every tick packs one
+  decode token for each running request PLUS fixed-size prefill chunks
+  (and selective finalizes) for admitted requests, under a global
+  ``step_tokens`` budget.  Prefill becomes chunk-resumable
+  (`serving.batch_engine.PrefillState`), admission charges chunks
+  rather than whole prompts, and backpressure / preemption are
+  reasoned per tick.  Decode never waits out a prefill wave, and a
+  short prompt admitted behind a long one finishes in proportion to
+  its own length.
+
+The *same loop* drives both execution targets through the
+`EngineBackend` seam:
 
 * `SimBackend` — the analytic cost model as a virtual clock (tests,
-  scheduling/benchmark sweeps; the seed behaviour);
+  scheduling/benchmark sweeps; the seed behaviour; wave-only);
 * `JaxEngineBackend` — the real batched JAX engine + paged KV pool
   (`serving.batch_engine`), timed on the wall clock.  The engine's
   `cfg.attn_backend` (threaded from `launch/serve.py --attn-backend`)
@@ -18,12 +35,16 @@ A backend returns the seconds each step took; the loop only ever adds
 those to a clock, so scheduling policy is identical in both worlds.
 
 The loop state lives in `WorkerState` — one serving instance's clock,
-FIFO admission queue and decode set — so the same step logic scales from
-one backend (`ContinuousBatcher`) to K concurrent backends behind a
-dispatch policy (`ClusterBatcher`): per-worker clocks, per-worker KV-pool
-backpressure, one shared arrival stream.  `serving.cluster` plugs the
-Eq. 2 affinity router into the dispatch hook.
+FIFO admission queue, prefilling set and decode set — so the same step
+logic scales from one backend (`ContinuousBatcher`) to K concurrent
+backends behind a dispatch policy (`ClusterBatcher`): per-worker
+clocks, per-worker KV-pool backpressure, one shared arrival stream.
+`serving.cluster` plugs the Eq. 2 affinity router into the dispatch
+hook.  Every worker keeps a per-tick `TickRecord` log (token charges by
+kind, wall seconds), which is what the budget property test and the
+launcher's latency attribution read.
 """
+
 from __future__ import annotations
 
 import bisect
@@ -51,13 +72,46 @@ class PendingRequest:
 class Completion:
     rid: int
     arrival_s: float
-    first_token_s: float      # TTFT
+    first_token_s: float  # TTFT
     done_s: float
-    worker: int = 0           # serving instance that ran the request
+    worker: int = 0  # serving instance that ran the request
+    # when prefill work for this request first started (wave: its
+    # prefill batch launched; chunked: it was admitted into the
+    # prefilling set) — splits latency into queue-wait vs compute
+    admitted_s: float = 0.0
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.admitted_s - self.arrival_s
+
+    @property
+    def prefill_s(self) -> float:
+        return self.first_token_s - self.admitted_s
+
+    @property
+    def decode_s(self) -> float:
+        return self.done_s - self.first_token_s
+
+
+@dataclass(frozen=True)
+class TickRecord:
+    """One scheduling tick's token accounting (chunked sched)."""
+
+    t: float  # clock when the tick completed
+    seconds: float  # backend-reported wall/virtual step time
+    decode_tokens: int
+    chunk_tokens: int
+    finalize_tokens: int
+    oversized: bool  # a single indivisible item exceeded the budget
 
 
 class EngineBackend(Protocol):
-    """What the batching loop needs from an execution target."""
+    """What the batching loop needs from an execution target.
+
+    The chunked discipline additionally needs `begin_prefill` /
+    `step` / `preempt_prefill` (see `JaxEngineBackend`); a backend
+    without them is wave-only and `WorkerState` rejects it up front.
+    """
 
     def prefill(self, batch: Sequence[PendingRequest]) -> float:
         """Run one prefill batch; -> seconds it took."""
@@ -65,8 +119,9 @@ class EngineBackend(Protocol):
     def decode(self, batch: Sequence[PendingRequest]) -> float:
         """Run one decode iteration for `batch`; -> seconds it took."""
 
-    def can_admit(self, req: PendingRequest,
-                  batch: Sequence[PendingRequest] = ()) -> bool:
+    def can_admit(
+        self, req: PendingRequest, batch: Sequence[PendingRequest] = ()
+    ) -> bool:
         """Room for this request *on top of* the forming `batch`?  False
         defers admission (backpressure) until running requests finish
         and free capacity."""
@@ -83,8 +138,11 @@ class EngineBackend(Protocol):
 class SimBackend:
     """Virtual clock: analytic prefill/decode time functions."""
 
-    def __init__(self, prefill_time_fn: Callable[[int], float],
-                 decode_time_fn: Callable[[int], float]):
+    def __init__(
+        self,
+        prefill_time_fn: Callable[[int], float],
+        decode_time_fn: Callable[[int], float],
+    ):
         self.prefill_time_fn = prefill_time_fn
         self.decode_time_fn = decode_time_fn
 
@@ -94,8 +152,9 @@ class SimBackend:
     def decode(self, batch: Sequence[PendingRequest]) -> float:
         return self.decode_time_fn(len(batch))
 
-    def can_admit(self, req: PendingRequest,
-                  batch: Sequence[PendingRequest] = ()) -> bool:
+    def can_admit(
+        self, req: PendingRequest, batch: Sequence[PendingRequest] = ()
+    ) -> bool:
         return True
 
     def finish(self, req: PendingRequest) -> None:
@@ -114,8 +173,13 @@ class JaxEngineBackend:
     per request for inspection.
     """
 
-    def __init__(self, engine, mode: str = "full", plans: Optional[Dict]
-                 = None, reuse: Optional[Dict] = None):
+    def __init__(
+        self,
+        engine,
+        mode: str = "full",
+        plans: Optional[Dict] = None,
+        reuse: Optional[Dict] = None,
+    ):
         self.engine = engine
         self.mode = mode
         self.plans = plans if plans is not None else {}
@@ -134,6 +198,7 @@ class JaxEngineBackend:
 
     def _batch_requests(self, batch: Sequence[PendingRequest]):
         from repro.serving.batch_engine import BatchRequest
+
         out = []
         for r in batch:
             if r.tokens is None:
@@ -141,8 +206,11 @@ class JaxEngineBackend:
             # decode appends decode_steps-1 KV slots: the first output
             # token comes from prefill and the last sampled token is
             # never written back
-            br = BatchRequest(rid=r.rid, tokens=r.tokens,
-                              n_reserve=max(r.decode_steps - 1, 0))
+            br = BatchRequest(
+                rid=r.rid,
+                tokens=r.tokens,
+                n_reserve=max(r.decode_steps - 1, 0),
+            )
             if self.mode == "rcllm":
                 plan, ck, cv, have = self.plans[r.rid]
                 br.plan, br.cached_k, br.cached_v, br.have = plan, ck, cv, have
@@ -159,8 +227,9 @@ class JaxEngineBackend:
             self.generated[r.rid] = [tok]
         return time.perf_counter() - t0
 
-    def can_admit(self, req: PendingRequest,
-                  batch: Sequence[PendingRequest] = ()) -> bool:
+    def can_admit(
+        self, req: PendingRequest, batch: Sequence[PendingRequest] = ()
+    ) -> bool:
         # pages for the prompt + the decode tokens it will append, on top
         # of what the rest of the forming batch will claim
         pool = self.engine.pool
@@ -168,7 +237,8 @@ class JaxEngineBackend:
         if store is None or self.mode != "rcllm":
             need = sum(
                 pool.pages_for(r.n_tokens + max(r.decode_steps - 1, 0))
-                for r in (*batch, req))
+                for r in (*batch, req)
+            )
             return need <= pool.free_pages
         # cross-request reuse: count only private pages against the
         # free list plus what LRU eviction could reclaim (excluding the
@@ -177,6 +247,7 @@ class JaxEngineBackend:
         # gate already refuses any insert that would eat the batch's
         # remaining mandatory demand
         from repro.serving import block_store as BS
+
         need = 0
         hit_keys = set()
         for r in (*batch, req):
@@ -187,8 +258,15 @@ class JaxEngineBackend:
             else:
                 plan, _, _, have = self.plans[r.rid]
                 bound, n_ins = BS.admission_pages(
-                    pool, store, plan, have, self.engine.sel, reuse,
-                    max(r.decode_steps - 1, 0), bucket=self.engine.bucket)
+                    pool,
+                    store,
+                    plan,
+                    have,
+                    self.engine.sel,
+                    reuse,
+                    max(r.decode_steps - 1, 0),
+                    bucket=self.engine.bucket,
+                )
                 self._admit_cache[r.rid] = (store.version, bound, n_ins)
             need += bound
             if reuse is not None:
@@ -221,32 +299,111 @@ class JaxEngineBackend:
         must NOT drop them here — the victim re-prefills)."""
         JaxEngineBackend.finish(self, req)
 
+    # ------------------------- chunked discipline -------------------------
+    def begin_prefill(self, req: PendingRequest) -> None:
+        """Admit one request into chunk-resumable prefill (claims its
+        pool pages and resolves the block store — see
+        `BatchEngine.begin_prefill`)."""
+        if self.mode != "rcllm":
+            raise ValueError(
+                "sched='chunked' drives the beyond-prefix selective "
+                "prefill; mode='full' has no chunk-resumable path"
+            )
+        self.engine.begin_prefill(self._batch_requests([req])[0])
+
+    def step(
+        self,
+        budget: int,
+        decode_batch: Sequence[PendingRequest],
+        prefill_queue: Sequence[PendingRequest],
+    ):
+        """One unified engine tick; -> (StepReport, seconds).  Samples
+        greedy tokens for whatever the tick produced (decode logits for
+        the running set, first tokens for finalized prefills)."""
+        t0 = time.perf_counter()
+        rids = [r.rid for r in decode_batch]
+        rep = self.engine.step(
+            budget,
+            rids,
+            [self.last_token[r] for r in rids],
+            [r.rid for r in prefill_queue],
+        )
+        if rep.decode_logits is not None:
+            for rid, lg in zip(rids, rep.decode_logits):
+                tok = int(np.argmax(lg))
+                self.last_token[rid] = tok
+                self.generated[rid].append(tok)
+        for rid, lg in rep.finalized.items():
+            tok = int(np.argmax(lg))
+            self.last_token[rid] = tok
+            self.generated[rid] = [tok]
+        return rep, time.perf_counter() - t0
+
+    def preempt_prefill(self, req: PendingRequest) -> None:
+        """Roll back a mid-prefill preemption: the engine drops the
+        chunk state and frees pages + store refs; plans are KEPT so the
+        victim can re-prefill after readmission."""
+        self.engine.abort_prefill(req.rid)
+        self.last_token.pop(req.rid, None)
+        self._admit_cache.pop(req.rid, None)
+
 
 class WorkerState:
     """One serving instance inside a (possibly multi-worker) batching loop.
 
-    Owns its backend, FIFO admission queue, decode set and clock.  The
-    loop only ever adds backend-reported step seconds to `clock`, so K
-    workers model K instances running in parallel regardless of how their
-    steps actually execute (virtual clock, or serialized on one host's
-    wall clock).  Backpressure is per worker: a full KV pool stalls this
-    worker's admission queue and nobody else's.
+    Owns its backend, FIFO admission queue, prefilling set (chunked
+    sched), decode set and clock.  The loop only ever adds
+    backend-reported step seconds to `clock`, so K workers model K
+    instances running in parallel regardless of how their steps actually
+    execute (virtual clock, or serialized on one host's wall clock).
+    Backpressure is per worker and — under the chunked discipline — per
+    tick: a full KV pool stalls this worker's admission queue at the
+    tick boundary and nobody else's.
     """
 
-    def __init__(self, backend: EngineBackend, wid: int = 0,
-                 max_batch_tokens: int = 8192, max_decode_batch: int = 64):
+    def __init__(
+        self,
+        backend: EngineBackend,
+        wid: int = 0,
+        max_batch_tokens: int = 8192,
+        max_decode_batch: int = 64,
+        sched: str = "wave",
+        chunk_tokens: int = 128,
+        step_tokens: Optional[int] = None,
+    ):
+        if sched not in ("wave", "chunked"):
+            raise ValueError(f"unknown sched {sched!r}")
+        if sched == "chunked" and not hasattr(backend, "begin_prefill"):
+            raise ValueError(
+                "sched='chunked' needs a chunk-capable backend "
+                "(JaxEngineBackend); the simulator is wave-only"
+            )
         self.backend = backend
         self.wid = wid
         self.max_batch_tokens = max_batch_tokens
         self.max_decode_batch = max_decode_batch
+        self.sched = sched
+        self.chunk_tokens = chunk_tokens
+        # the per-tick token budget: room for one chunk per default
+        # decode batch plus slack, so decode alone can't starve prefill
+        self.step_tokens = (
+            step_tokens
+            if step_tokens is not None
+            else max(4 * chunk_tokens, 512)
+        )
         self.clock = 0.0
-        self.busy_seconds = 0.0          # step time only, no idle gaps
-        self.preempted = 0               # decode-time pool-pressure victims
+        self.busy_seconds = 0.0  # step time only, no idle gaps
+        self.preempted = 0  # decode-time pool-pressure victims
         self._preempt_counts: Dict[int, int] = {}
         self.waiting: List[PendingRequest] = []
+        self.prefilling: List[PendingRequest] = []  # chunked sched only
         # decode set entries: [req, ttft_s, decode_steps_left]
         self.decoding: List[list] = []
         self.done: List[Completion] = []
+        self.ticks: List[TickRecord] = []
+        self.tbt: List[float] = []  # time-between-tokens samples
+        self._admit_t: Dict[int, float] = {}
+        self._last_tok_t: Dict[int, float] = {}
         # measured service rates (EWMA over observed steps) — these feed
         # the router's live queue-depth estimate, so load balancing uses
         # what this worker actually costs, not an a-priori model
@@ -254,11 +411,11 @@ class WorkerState:
         self._decode_s_per_step = 0.0
 
     def has_work(self) -> bool:
-        return bool(self.waiting or self.decoding)
+        return bool(self.waiting or self.prefilling or self.decoding)
 
     def ready_time(self) -> float:
         """Earliest instant this worker can take its next step."""
-        if self.decoding:
+        if self.decoding or self.prefilling:
             return self.clock
         return max(self.clock, self.waiting[0].arrival_s)
 
@@ -268,6 +425,7 @@ class WorkerState:
         measured service rates (0 until the first step is observed)."""
         est = max(self.clock - t, 0.0)
         est += sum(r.n_tokens for r in self.waiting) * self._prefill_s_per_tok
+        est += sum(r.n_tokens for r in self.prefilling) * self._prefill_s_per_tok
         if self.decoding:
             est += max(e[2] for e in self.decoding) * self._decode_s_per_step
         return est
@@ -277,6 +435,13 @@ class WorkerState:
         return new if old == 0.0 else 0.5 * old + 0.5 * new
 
     def step(self) -> None:
+        if self.sched == "chunked":
+            self._step_chunked()
+        else:
+            self._step_wave()
+
+    # ------------------------------ wave sched ------------------------------
+    def _step_wave(self) -> None:
         """One scheduling step: a prefill batch if one can form under the
         token budget and pool capacity, else one decode iteration
         (prefill-prioritized, identical to the seed single-instance loop).
@@ -300,27 +465,43 @@ class WorkerState:
             raise RuntimeError(
                 f"request {self.waiting[0].rid} ({self.waiting[0].n_tokens} "
                 "tokens) can never be admitted: KV pool too small "
-                "even with no other request running")
+                "even with no other request running"
+            )
         if batch:
-            for r in batch:
-                self.waiting.remove(r)
+            admitted = self.clock
+            # remove by identity: PendingRequest equality compares only
+            # arrival_s (the sort key), so equal-arrival requests would
+            # alias under list.remove
+            picked = set(map(id, batch))
+            self.waiting = [r for r in self.waiting if id(r) not in picked]
             dt = self.backend.prefill(batch)
             self.clock += dt
             self.busy_seconds += dt
-            self._prefill_s_per_tok = self._ewma(self._prefill_s_per_tok,
-                                                 dt / max(tok, 1))
+            self._prefill_s_per_tok = self._ewma(
+                self._prefill_s_per_tok, dt / max(tok, 1)
+            )
             for r in batch:
-                if r.decode_steps <= 1:      # TTFT token was the output
-                    self.done.append(Completion(r.rid, r.arrival_s,
-                                                self.clock, self.clock,
-                                                self.wid))
+                if r.decode_steps <= 1:  # TTFT token was the output
+                    self.done.append(
+                        Completion(
+                            r.rid,
+                            r.arrival_s,
+                            self.clock,
+                            self.clock,
+                            self.wid,
+                            admitted_s=admitted,
+                        )
+                    )
                     self.backend.finish(r)
                 else:
-                    self.decoding.append([r, self.clock - r.arrival_s,
-                                          r.decode_steps - 1])
+                    self._admit_t[r.rid] = admitted
+                    self._last_tok_t[r.rid] = self.clock
+                    self.decoding.append(
+                        [r, self.clock - r.arrival_s, r.decode_steps - 1]
+                    )
         else:
             while True:
-                db = self.decoding[:self.max_decode_batch]
+                db = self.decoding[: self.max_decode_batch]
                 try:
                     dt = self.backend.decode([e[0] for e in db])
                     break
@@ -340,34 +521,165 @@ class WorkerState:
             self._decode_s_per_step = self._ewma(self._decode_s_per_step, dt)
             for e in db:
                 e[2] -= 1
-            keep = []
-            for e in self.decoding:
-                if e[2] <= 0:
-                    self.done.append(Completion(e[0].rid, e[0].arrival_s,
-                                                e[0].arrival_s + e[1],
-                                                self.clock, self.wid))
-                    self.backend.finish(e[0])
-                else:
-                    keep.append(e)
-            self.decoding = keep
+                self._sample_tbt(e[0].rid)
+            self._retire_decoded(db)
 
+    # ---------------------------- chunked sched ----------------------------
+    def _step_chunked(self) -> None:
+        """One unified tick: admit what fits, then run one budgeted
+        engine step packing decode tokens for every running request
+        plus prefill chunks/finalizes for the admitted set."""
+        self.clock = self.ready_time()
+        self._admit_chunked()
+        while True:
+            db = self.decoding[: self.max_decode_batch]
+            try:
+                rep, dt = self.backend.step(
+                    self.step_tokens,
+                    [e[0] for e in db],
+                    self.prefilling,
+                )
+                break
+            except PoolExhausted:
+                # same retry contract as the wave loop, per tick: evict
+                # the youngest request (mid-prefill victims roll their
+                # chunk state back; mid-decode victims free their pages)
+                # and retry before any prefill work runs
+                self._preempt_youngest()
+                if not self.decoding and not self.prefilling:
+                    return
+        self.clock += dt
+        self.busy_seconds += dt
+        # apportion the tick's seconds across work kinds by token charge
+        # so the router's backlog estimate prices queued/mid-scan prompt
+        # tokens and decode steps separately (a single EWMA over whole
+        # ticks would report zero prefill cost and blind Eq. 2 dispatch
+        # to prompt backlog)
+        charge = max(rep.charged, 1)
+        pf_tokens = rep.charge_chunks + rep.charge_finalize
+        if pf_tokens:
+            self._prefill_s_per_tok = self._ewma(
+                self._prefill_s_per_tok, dt / charge
+            )
+        if rep.charge_decode:
+            self._decode_s_per_step = self._ewma(
+                self._decode_s_per_step, dt * rep.charge_decode / charge
+            )
+        self.ticks.append(
+            TickRecord(
+                t=self.clock,
+                seconds=dt,
+                decode_tokens=rep.charge_decode,
+                chunk_tokens=rep.charge_chunks,
+                finalize_tokens=rep.charge_finalize,
+                oversized=rep.oversized,
+            )
+        )
+        if rep.decode_logits is not None:
+            for e in db:
+                e[2] -= 1
+                self._sample_tbt(e[0].rid)
+            self._retire_decoded(db)
+        finalized = [r for r in self.prefilling if r.rid in rep.finalized]
+        self.prefilling = [r for r in self.prefilling if r.rid not in rep.finalized]
+        for req in finalized:
+            admitted = self._admit_t.get(req.rid, req.arrival_s)
+            if req.decode_steps <= 1:
+                self._admit_t.pop(req.rid, None)
+                self.done.append(
+                    Completion(
+                        req.rid,
+                        req.arrival_s,
+                        self.clock,
+                        self.clock,
+                        self.wid,
+                        admitted_s=admitted,
+                    )
+                )
+                self.backend.finish(req)
+            else:
+                self._last_tok_t[req.rid] = self.clock
+                self.decoding.append(
+                    [req, self.clock - req.arrival_s, req.decode_steps - 1]
+                )
+
+    def _admit_chunked(self) -> None:
+        """Move due arrivals into the prefilling set, FIFO, while pool
+        capacity allows — admission charges chunks, so an admitted
+        request competes for the step budget from this tick on."""
+        while self.waiting:
+            r = self.waiting[0]
+            if r.arrival_s > self.clock:
+                break
+            if not self.backend.can_admit(r):
+                break
+            try:
+                self.backend.begin_prefill(r)
+            except PoolExhausted:
+                break
+            self.waiting.pop(0)
+            self.prefilling.append(r)
+            self._admit_t[r.rid] = self.clock
+        if not self.decoding and not self.prefilling and self.waiting:
+            raise RuntimeError(
+                f"request {self.waiting[0].rid} ({self.waiting[0].n_tokens} "
+                "tokens) can never be admitted: KV pool too small "
+                "even with no other request running"
+            )
+
+    # ------------------------------- shared -------------------------------
+    def _sample_tbt(self, rid: int) -> None:
+        last = self._last_tok_t.get(rid)
+        if last is not None:
+            self.tbt.append(self.clock - last)
+        self._last_tok_t[rid] = self.clock
+
+    def _retire_decoded(self, db: Sequence[list]) -> None:
+        keep = []
+        for e in self.decoding:
+            if e[2] <= 0:
+                req = e[0]
+                self.done.append(
+                    Completion(
+                        req.rid,
+                        req.arrival_s,
+                        req.arrival_s + e[1],
+                        self.clock,
+                        self.wid,
+                        admitted_s=self._admit_t.pop(req.rid, req.arrival_s),
+                    )
+                )
+                self._last_tok_t.pop(req.rid, None)
+                self.backend.finish(req)
+            else:
+                keep.append(e)
+        self.decoding = keep
 
     def _preempt_youngest(self) -> None:
-        """Evict the youngest decoding request under decode-time pool
-        pressure: release its resources and put it back in the arrival
-        queue (it will re-prefill — greedy decode regenerates the same
-        tokens, so only its latency suffers)."""
-        e = max(self.decoding, key=lambda e: (e[0].arrival_s, e[0].rid))
-        req = e[0]
-        self._preempt_counts[req.rid] = \
-            self._preempt_counts.get(req.rid, 0) + 1
+        """Evict the youngest running request under pool pressure:
+        release its resources and put it back in the arrival queue (it
+        will re-prefill — greedy decode regenerates the same tokens, so
+        only its latency suffers).  Under the chunked discipline the
+        victim set includes mid-prefill requests; their chunk state
+        rolls back cleanly (`preempt_prefill`) and the plan is kept."""
+        cands = [e[0] for e in self.decoding] + list(self.prefilling)
+        req = max(cands, key=lambda r: (r.arrival_s, r.rid))
+        self._preempt_counts[req.rid] = self._preempt_counts.get(req.rid, 0) + 1
         if self._preempt_counts[req.rid] > 8:
             raise RuntimeError(
                 f"request {req.rid} preempted {self._preempt_counts[req.rid]}"
                 " times: the pool cannot hold its decode tokens even "
-                "alone — backend decode-page reservation is broken")
-        self.decoding.remove(e)
-        self.backend.preempt(req)
+                "alone — backend decode-page reservation is broken"
+            )
+        if any(r is req for r in self.prefilling):
+            self.prefilling = [r for r in self.prefilling if r is not req]
+            self._admit_t.pop(req.rid, None)
+            self.backend.preempt_prefill(req)
+        else:
+            self.decoding = [e for e in self.decoding if e[0] is not req]
+            self._last_tok_t.pop(req.rid, None)
+            self._admit_t.pop(req.rid, None)
+            self.backend.preempt(req)
         self.preempted += 1
         bisect.insort(self.waiting, req)
 
@@ -376,11 +688,11 @@ class WorkerState:
 DispatchFn = Callable[[PendingRequest, float, List[WorkerState]], int]
 
 
-def least_backlog_dispatch(req: PendingRequest, t: float,
-                           workers: List[WorkerState]) -> int:
+def least_backlog_dispatch(
+    req: PendingRequest, t: float, workers: List[WorkerState]
+) -> int:
     """Default dispatch: the worker with the least estimated backlog."""
-    return min(range(len(workers)),
-               key=lambda i: (workers[i].backlog_seconds(t), i))
+    return min(range(len(workers)), key=lambda i: (workers[i].backlog_seconds(t), i))
 
 
 class ClusterBatcher:
@@ -396,13 +708,28 @@ class ClusterBatcher:
     scheduler would see.
     """
 
-    def __init__(self, backends: Sequence[EngineBackend],
-                 dispatch: Optional[DispatchFn] = None,
-                 max_batch_tokens: int = 8192, max_decode_batch: int = 64):
-        self.workers = [WorkerState(b, wid=i,
-                                    max_batch_tokens=max_batch_tokens,
-                                    max_decode_batch=max_decode_batch)
-                        for i, b in enumerate(backends)]
+    def __init__(
+        self,
+        backends: Sequence[EngineBackend],
+        dispatch: Optional[DispatchFn] = None,
+        max_batch_tokens: int = 8192,
+        max_decode_batch: int = 64,
+        sched: str = "wave",
+        chunk_tokens: int = 128,
+        step_tokens: Optional[int] = None,
+    ):
+        self.workers = [
+            WorkerState(
+                b,
+                wid=i,
+                max_batch_tokens=max_batch_tokens,
+                max_decode_batch=max_decode_batch,
+                sched=sched,
+                chunk_tokens=chunk_tokens,
+                step_tokens=step_tokens,
+            )
+            for i, b in enumerate(backends)
+        ]
         self.dispatch = dispatch or least_backlog_dispatch
 
     def run(self, requests: Sequence[PendingRequest]) -> List[Completion]:
@@ -420,7 +747,7 @@ class ClusterBatcher:
             else:
                 min(busy, key=lambda w: (w.ready_time(), w.wid)).step()
         done = [c for w in self.workers for c in w.done]
-        done.sort(key=lambda c: c.done_s)       # stable: in-step order kept
+        done.sort(key=lambda c: c.done_s)  # stable: in-step order kept
         return done
 
 
@@ -432,12 +759,17 @@ class ContinuousBatcher:
     Internally this is a one-worker `ClusterBatcher`.
     """
 
-    def __init__(self, prefill_time_fn: Optional[Callable[[int], float]]
-                 = None,
-                 decode_time_fn: Optional[Callable[[int], float]] = None,
-                 max_batch_tokens: int = 8192,
-                 max_decode_batch: int = 64,
-                 backend: Optional[EngineBackend] = None):
+    def __init__(
+        self,
+        prefill_time_fn: Optional[Callable[[int], float]] = None,
+        decode_time_fn: Optional[Callable[[int], float]] = None,
+        max_batch_tokens: int = 8192,
+        max_decode_batch: int = 64,
+        backend: Optional[EngineBackend] = None,
+        sched: str = "wave",
+        chunk_tokens: int = 128,
+        step_tokens: Optional[int] = None,
+    ):
         if backend is None:
             if prefill_time_fn is None or decode_time_fn is None:
                 raise ValueError("need a backend or both time functions")
@@ -445,9 +777,20 @@ class ContinuousBatcher:
         self.backend = backend
         self.max_batch_tokens = max_batch_tokens
         self.max_decode_batch = max_decode_batch
+        self.sched = sched
+        self.chunk_tokens = chunk_tokens
+        self.step_tokens = step_tokens
+        self.workers: List[WorkerState] = []
 
     def run(self, requests: List[PendingRequest]) -> List[Completion]:
-        return ClusterBatcher(
-            [self.backend], dispatch=lambda req, t, ws: 0,
+        cb = ClusterBatcher(
+            [self.backend],
+            dispatch=lambda req, t, ws: 0,
             max_batch_tokens=self.max_batch_tokens,
-            max_decode_batch=self.max_decode_batch).run(requests)
+            max_decode_batch=self.max_decode_batch,
+            sched=self.sched,
+            chunk_tokens=self.chunk_tokens,
+            step_tokens=self.step_tokens,
+        )
+        self.workers = cb.workers
+        return cb.run(requests)

@@ -82,6 +82,16 @@ class ClusterWorkerBackend(JaxEngineBackend):
         self.transfer_seconds += moved
         return dt + moved
 
+    def step(self, budget, decode_batch, prefill_queue):
+        """Per-tick accounting for the chunked discipline: a request's
+        owed transfer time is billed in the tick its first prefill
+        chunk runs (the staged bytes must be resident before layer 0
+        reads the cached KV), not as a whole-wave surcharge."""
+        rep, dt = super().step(budget, decode_batch, prefill_queue)
+        moved = sum(self.pending_transfer_s.pop(rid, 0.0) for rid in rep.started)
+        self.transfer_seconds += moved
+        return rep, dt + moved
+
     def finish(self, req: PendingRequest) -> None:
         # unlike the single-engine backend (caller owns and may reuse the
         # plans dict across passes), the cluster binds each plan exactly
@@ -174,6 +184,9 @@ class ClusterEngine:
         seed: int = 0,
         attn_backend: Optional[str] = None,
         kv_reuse: bool = False,
+        sched: str = "wave",
+        chunk_tokens: int = 128,
+        step_tokens: Optional[int] = None,
     ):
         if system.placement.k != k:
             raise ValueError(
@@ -209,6 +222,7 @@ class ClusterEngine:
                 pool=pool,
                 sel=sel or ENG.SelectiveConfig(),
                 store=SharedBlockStore(pool) if kv_reuse else None,
+                chunk_tokens=chunk_tokens,
             )
             shard = None
             if system.item_store is not None:
@@ -223,6 +237,9 @@ class ClusterEngine:
             dispatch=self._dispatch,
             max_batch_tokens=max_batch_tokens,
             max_decode_batch=max_decode_batch,
+            sched=sched,
+            chunk_tokens=chunk_tokens,
+            step_tokens=step_tokens,
         )
         self._trace_by_rid: Dict[int, object] = {}
         self.assigned: Dict[int, int] = {}

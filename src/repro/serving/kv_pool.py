@@ -117,6 +117,10 @@ class PagedKVPool:
         # point into private pages *or* store-owned shared pages.
         self.slot_tables: Dict[int, np.ndarray] = {}
         self.seq_lens: Dict[int, int] = {}
+        # claimed-but-unassigned private slots, per request: the slack a
+        # mapped allocation reserves so mid-prefill remaps (`remap_private`)
+        # never have to race other requests for free pages
+        self._spare: Dict[int, List[int]] = {}
         self.peak_pages = 0
 
     # ------------------------------ allocator ------------------------------
@@ -170,7 +174,8 @@ class PagedKVPool:
 
     def alloc_mapped(self, rid: int, n_tokens: int,
                      mapped_positions: np.ndarray,
-                     mapped_slots: np.ndarray) -> List[int]:
+                     mapped_slots: np.ndarray,
+                     extra_pages: int = 0) -> List[int]:
         """Reserve capacity for `n_tokens` slots with some logical
         positions pointing at *shared* physical slots (store-owned pages).
 
@@ -181,6 +186,12 @@ class PagedKVPool:
         The shared slots are NOT owned by this request: `free` returns
         only the private pages, and the caller is responsible for the
         store-side refcounts.
+
+        ``extra_pages`` claims additional private pages whose slots go
+        to the request's spare list — headroom a chunk-resumable prefill
+        reserves up front so `remap_private` (un-sharing positions the
+        selective pass later decides to recompute) can never hit
+        `PoolExhausted` mid-flight.
         """
         if rid in self.page_tables:
             raise KeyError(f"request {rid} already allocated")
@@ -189,20 +200,51 @@ class PagedKVPool:
         total_slots = self.pages_for(n_tokens) * self.page_size
         n_priv = total_slots - len(mapped_positions)
         need = -(-n_priv // self.page_size) if n_priv > 0 else 0
+        need += max(int(extra_pages), 0)
         if need > len(self._free):
             raise PoolExhausted(
                 f"need {need} pages, {len(self._free)} free")
         pages = [self._free.pop() for _ in range(need)]
         table = np.full(total_slots, -1, np.int64)
         table[mapped_positions] = mapped_slots
-        priv = self.page_slots(pages)[:n_priv]
+        all_slots = self.page_slots(pages)
+        priv = all_slots[:max(n_priv, 0)]
         table[table < 0] = priv
         self.page_tables[rid] = pages
         self.slot_tables[rid] = table
+        self._spare[rid] = list(all_slots[max(n_priv, 0):])
         self.seq_lens[rid] = (int(mapped_positions.max()) + 1
                               if len(mapped_positions) else 0)
         self._bump_peak()
         return pages
+
+    def remap_private(self, rid: int, positions: np.ndarray) -> None:
+        """Point store-mapped logical `positions` at this request's own
+        private slots instead — the mid-prefill incremental append: a
+        chunk-resumable prefill maps every store-resident position at
+        admission, and un-shares the ones Eq. 3 selection later marks
+        for recomputation (their fresh KV must land privately; writing
+        through the shared slot would corrupt the store's block).
+
+        Draws from the spare slots reserved at `alloc_mapped` first and
+        only then claims new pages, so a request that reserved its
+        admission bound as ``extra_pages`` can never fail here."""
+        positions = np.asarray(positions, np.int64)
+        if len(positions) == 0:
+            return
+        spare = self._spare.setdefault(rid, [])
+        short = len(positions) - len(spare)
+        if short > 0:
+            n_new = -(-short // self.page_size)
+            if n_new > len(self._free):
+                raise PoolExhausted(
+                    f"remap needs {n_new} pages, {len(self._free)} free")
+            pages = [self._free.pop() for _ in range(n_new)]
+            self.page_tables[rid].extend(pages)
+            spare.extend(self.page_slots(pages))
+            self._bump_peak()
+        table = self.slot_tables[rid]
+        table[positions] = [spare.pop(0) for _ in range(len(positions))]
 
     def free(self, rid: int) -> None:
         """Release a request's private pages.  Idempotent: freeing an
@@ -214,6 +256,7 @@ class PagedKVPool:
         self._free.extend(pages)
         self.slot_tables.pop(rid, None)
         self.seq_lens.pop(rid, None)
+        self._spare.pop(rid, None)
 
     def stats(self) -> PoolStats:
         in_use = sum(len(t) for t in self.page_tables.values())
@@ -254,7 +297,8 @@ class PagedKVPool:
         self.write_at_batch([(rid, positions, k, v)], layer=layer)
 
     def write_at_batch(self, entries: Sequence[tuple],
-                       layer: Optional[int] = None) -> None:
+                       layer: Optional[int] = None,
+                       deep: bool = False) -> None:
         """Fused multi-request scatter: ONE arena update for any number
         of requests' writes.
 
@@ -266,6 +310,10 @@ class PagedKVPool:
         so fusing a batch's insertions into one scatter is what makes
         the batched prefill's pool insertion O(1) copies instead of
         O(requests · spans).
+
+        ``deep`` writes only layer planes 1..L-1 from (t, L-1, ...) rows
+        — the chunk-resumable prefill's finalize path, whose layer-0
+        plane already landed incrementally as chunks completed.
         """
         pages_all, slots_all, ks, vs = [], [], [], []
         for rid, positions, k, v in entries:
@@ -286,7 +334,10 @@ class PagedKVPool:
         k = np.concatenate(ks)
         v = np.concatenate(vs)
         pages, slots, k, v = _pad_scatter(pages, slots, k, v)
-        if layer is None:
+        if deep:
+            self.arena_k = self.arena_k.at[pages, slots, 1:].set(k)
+            self.arena_v = self.arena_v.at[pages, slots, 1:].set(v)
+        elif layer is None:
             self.arena_k = self.arena_k.at[pages, slots].set(k)
             self.arena_v = self.arena_v.at[pages, slots].set(v)
         else:

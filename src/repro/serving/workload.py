@@ -171,6 +171,43 @@ def rcllm_reuse_info(
     return out
 
 
+def heavy_tail_trace(
+    catalog,
+    pool,
+    profile,
+    n_requests: int,
+    qps: float,
+    n_users: int,
+    long_prompt_frac: float = 0.15,
+    long_prompt_reviews: int = 8,
+    n_candidates: int = 8,
+    reviews_per_user: int = 1,
+    seed: int = 2,
+) -> List:
+    """Heavy-tail prompt-length workload: a `long_prompt_frac` fraction
+    of users carries a lognormal pile of extra reviews, so their
+    requests arrive with prompts several times the base length — the
+    long-sequence head-of-line interference shape where the chunked
+    unified-step scheduler (`serve.py --sched chunked`) pays off.
+    Single producer for benches and the launcher, so both measure the
+    same mix."""
+    from repro.data import synth as SY
+
+    return SY.make_trace(
+        catalog,
+        pool,
+        profile,
+        n_requests,
+        qps=qps,
+        n_users=n_users,
+        n_candidates=n_candidates,
+        reviews_per_user=reviews_per_user,
+        seed=seed,
+        long_prompt_frac=long_prompt_frac,
+        long_prompt_reviews=long_prompt_reviews,
+    )
+
+
 def zipf_repeat_trace(
     catalog,
     pool,
