@@ -82,6 +82,13 @@ METRICS = (
     # decode never waits out a prefill wave — committed full run ~2.3x
     # (runs swing up to ~17x: wave's TBT tail is its wave duration)
     Metric("chunked.json", ("tbt_p99_speedup",), "floor", floor=1.2),
+    # paged-decode kernel: step time gated per kernel against its own
+    # committed baseline (the CPU paged path runs the Pallas interpreter,
+    # so gather-vs-paged ratios mean nothing off-TPU), plus a hard floor
+    # on greedy-token agreement with the gather oracle
+    Metric("paged_decode.json", ("gather", "decode_step_s"), "time"),
+    Metric("paged_decode.json", ("paged", "decode_step_s"), "time"),
+    Metric("paged_decode.json", ("token_parity",), "floor", floor=0.5),
 )
 
 

@@ -48,6 +48,12 @@ class LMConfig:
     # Mosaic lowering on TPU).  Layer-0 Eq. 3 scoring always runs jnp
     # (it needs materialized attention probabilities).
     attn_backend: str = "jnp"
+    # Serving decode K/V read strategy: "auto" follows attn_backend
+    # (pallas -> fused paged-attention kernel, jnp -> arena gather),
+    # "gather"/"paged" force one path regardless of backend — "paged"
+    # under jnp runs the kernel in interpret mode against the jnp
+    # prefill, the isolation mode the parity tests lean on.
+    decode_kernel: str = "auto"
     causal_block_pairing: bool = False  # §Perf: skip fully-masked causal blocks
     optimizer: str = "adamw"        # adamw | adafactor
     # RcLLM serving integration

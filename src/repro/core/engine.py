@@ -38,6 +38,24 @@ from repro.models import layers as L
 PALLAS_Q_BLOCK = 64
 PALLAS_KV_BLOCK = 64
 
+
+def decode_uses_paged(cfg: LMConfig) -> bool:
+    """Resolve `cfg.decode_kernel` for the serving decode step: does it
+    read K/V through the fused paged-attention kernel (True) or the jnp
+    arena gather (False)?  "auto" ties the choice to the attention
+    backend — pallas decodes paged, jnp keeps the gather path as the
+    bitwise oracle; "paged"/"gather" pin either path explicitly (the
+    parity tests run the kernel under the jnp backend this way, so a
+    decode-only diff can't hide behind prefill differences)."""
+    if cfg.decode_kernel == "paged":
+        return True
+    if cfg.decode_kernel == "gather":
+        return False
+    if cfg.decode_kernel != "auto":
+        raise ValueError(
+            f"decode_kernel={cfg.decode_kernel!r}: want auto|gather|paged")
+    return cfg.attn_backend == "pallas"
+
 # Placeholder liveness map for the jnp backend: the jitted selective
 # entry points take `live` positionally so the pallas/jnp traces share
 # one signature; the jnp trace never reads it.

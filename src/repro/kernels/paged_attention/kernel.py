@@ -1,0 +1,167 @@
+"""Pallas TPU fused paged-decode attention kernel.
+
+Decode's steady state is one query token per request attending over that
+request's whole paged KV — ROADMAP open item 1.  The jnp gather path
+materializes every request's K/V as an (N, S, L, Hkv, Dh) tensor first;
+this kernel never does: the per-request **page view** (`kv_pool.
+page_views`) is scalar-prefetched, so the BlockSpec index map reads each
+referenced physical page of the arena directly — the indirection happens
+in the DMA descriptor, not as a gather in HBM.
+
+Tiling: grid (N, Hkv, Pmax) with the trailing page axis sequential on
+TPU, so the (m, l, acc) running-softmax state lives in VMEM scratch
+across a row's pages — the flash recurrence, one KV tile per physical
+page.  GQA folds the `n_heads // n_kv_heads` group axis into the query
+block: queries arrive as (N, Hkv, G_pad, Dh), so each KV head's pages
+stream through VMEM exactly once per request while all of its grouped
+query heads ride in the same q tile.
+
+Per-slot `slot_pos` carries each arena slot's *logical* position
+(-1 = slot holds no live token of this row): it is simultaneously the
+key-liveness mask (ragged lengths, pad slots, interleaved store/private
+slots at arbitrary alignment) and the RoPE realignment angle — keys are
+stored pre-RoPE, so the kernel fuses the one rotation decode needs
+(group property) right before the dot product.  Causality never needs
+checking: the newest token is, by construction, the largest live
+position in its row, so key-liveness IS the causal mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.paged_attention.ref import NEG_INF
+
+
+def _paged_decode_kernel(
+    pids_ref,
+    spos_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    sm_scale: float,
+    rope_theta: float,
+    head_dim: int,
+):
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = spos_ref[0, 0]  # (page,) logical or -1
+    live = pos >= 0
+
+    # pad pages (and store pages none of whose slots serve this row)
+    # carry no live slot: skip their rotate+matmul entirely.  Skipped
+    # blocks leave (m, l, acc) untouched, which the flash recurrence is
+    # already exact under — a masked-out block contributes corr=1, p=0.
+    @pl.when(jnp.any(live))
+    def _attend():
+        q = q_ref[0, 0]  # (g_pad, d)
+        k = k_ref[0, :, 0, 0].astype(jnp.float32)  # (page, d) pre-RoPE
+        v = v_ref[0, :, 0, 0]
+        half = head_dim // 2
+        freqs = 1.0 / (rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+        ang = pos[:, None].astype(jnp.float32) * freqs[None, :]
+        cos, sin = jnp.cos(ang), jnp.sin(ang)
+        k1, k2 = k[:, :half], k[:, half:]
+        k = jnp.concatenate([k1 * cos - k2 * sin, k1 * sin + k2 * cos], axis=-1)
+        s = jax.lax.dot_general(
+            q,
+            k.astype(q.dtype),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        s = jnp.where(live[None, :], s * sm_scale, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype),
+            v,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,
+    arena_k: jax.Array,
+    arena_v: jax.Array,
+    page_ids: jax.Array,
+    slot_pos: jax.Array,
+    *,
+    layer: int,
+    rope_theta: float = 10_000.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (N, Hkv, G_pad, Dh) post-RoPE queries, group axis pre-padded by
+    the ops wrapper; arena_k/arena_v: (P, page, L, Hkv, Dh) paged pool
+    (keys pre-RoPE); page_ids: (N, Pmax) int32 physical page per view
+    column; slot_pos: (N, Pmax, page) int32 logical position per slot or
+    -1.  `layer` is static — one pallas_call per layer reads only that
+    layer's plane of each referenced page.  -> (N, Hkv, G_pad, Dh).
+    """
+    n, hkv, g_pad, d = q.shape
+    page = arena_k.shape[1]
+    pmax = page_ids.shape[1]
+
+    kernel = functools.partial(
+        _paged_decode_kernel,
+        sm_scale=1.0 / d**0.5,
+        rope_theta=rope_theta,
+        head_dim=d,
+    )
+    arena_spec = pl.BlockSpec(
+        (1, page, 1, 1, d), lambda i, h, j, pids: (pids[i, j], 0, layer, h, 0)
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, hkv, pmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, page), lambda i, h, j, pids: (i, j, 0)),
+            pl.BlockSpec((1, 1, g_pad, d), lambda i, h, j, pids: (i, h, 0, 0)),
+            arena_spec,
+            arena_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, g_pad, d), lambda i, h, j, pids: (i, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad,), jnp.float32),
+            pltpu.VMEM((g_pad,), jnp.float32),
+            pltpu.VMEM((g_pad, d), jnp.float32),
+        ],
+    )
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, hkv, g_pad, d), q.dtype),
+        interpret=interpret,
+    )
+    return fn(
+        page_ids.astype(jnp.int32), slot_pos.astype(jnp.int32), q, arena_k, arena_v
+    )

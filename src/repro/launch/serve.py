@@ -182,6 +182,7 @@ def run_jax_cluster(args) -> dict:
             n_pages=args.pages,
             max_batch_tokens=args.max_batch_tokens,
             attn_backend=args.attn_backend,
+            decode_kernel=args.decode_kernel,
             kv_reuse=args.kv_reuse == "on",
             sched=args.sched,
             chunk_tokens=args.chunk_tokens,
@@ -200,6 +201,7 @@ def run_jax_cluster(args) -> dict:
         "mode": args.mode,
         "sched": args.sched,
         "attn_backend": args.attn_backend,
+        "decode_kernel": args.decode_kernel,
         "kv_reuse": args.kv_reuse,
         "policy": rep.policy,
         "requests": len(rep.completions),
@@ -334,7 +336,9 @@ def run_jax(args) -> dict:
     # the engine's jitted prefill/decode steps (offline caches above were
     # built with the default backend; their pre-RoPE bytes are
     # backend-invariant)
-    cfg = dataclasses.replace(cfg, attn_backend=args.attn_backend)
+    cfg = dataclasses.replace(
+        cfg, attn_backend=args.attn_backend, decode_kernel=args.decode_kernel
+    )
 
     def make_batcher():
         from repro.serving.block_store import SharedBlockStore
@@ -372,6 +376,7 @@ def run_jax(args) -> dict:
         "mode": mode,
         "sched": args.sched,
         "attn_backend": backend.attn_backend,
+        "decode_kernel": args.decode_kernel,
         "requests": len(done),
         "kv_reuse": args.kv_reuse,
         "decode_steps": args.decode_steps,
@@ -421,6 +426,15 @@ def main():
         help="attention inside the jax engine's jitted steps: "
         "jnp reference, or the Pallas flash/selective "
         "kernels (interpret mode off-TPU)",
+    )
+    ap.add_argument(
+        "--decode-kernel",
+        default="auto",
+        choices=["auto", "gather", "paged"],
+        help="decode K/V read strategy: auto follows --attn-backend "
+        "(pallas -> fused paged-attention kernel, jnp -> arena "
+        "gather); gather/paged pin one path — decoded tokens are "
+        "identical either way",
     )
     ap.add_argument(
         "--kv-reuse",

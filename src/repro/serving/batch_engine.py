@@ -21,11 +21,18 @@ Two jitted steps drive every request:
   arena inside the jit.
 
 `cfg.attn_backend` selects the attention implementation inside both
-steps: ``jnp`` (masked-einsum reference) or ``pallas`` — the flash /
-selective kernels from `repro.kernels`, interpret mode off-TPU and real
-Mosaic lowering on TPU.  Decode's ragged batch rides into the flash
-kernel as a `kv_valid` bitmap (causality is implied: the new token is
-the newest position in its row).
+steps: ``jnp`` (masked-einsum reference) or ``pallas`` — the selective
+kernels for prefill and the **fused paged-decode attention kernel**
+(`repro.kernels.paged_attention`) for decode, interpret mode off-TPU
+and real Mosaic lowering on TPU.  Under the paged kernel no gather is
+materialized at all: the per-request page view (`kv_pool.page_views`)
+is scalar-prefetched and the kernel's BlockSpec index maps read the
+referenced arena pages directly, with per-slot logical positions
+doubling as the liveness mask and the fused RoPE realignment angles.
+The jnp gather path stays on as the bitwise oracle (causality is
+implied either way: the new token is the newest position in its row);
+`cfg.decode_kernel` can pin either decode path independently of the
+backend (`core.engine.decode_uses_paged`).
 
 Shapes are bucketed (sequence bucket for prefill, page/batch buckets for
 decode) so steady-state serving retraces O(1) times.
@@ -43,10 +50,11 @@ from repro.configs.base import LMConfig
 from repro.core import engine as ENG
 from repro.core.assembly import RECOMPUTE, AssemblyPlan, plan_spans
 from repro.kernels import default_interpret
-from repro.kernels.flash_attention.ops import mha_flash
+from repro.kernels.paged_attention.ops import paged_decode_mha
+from repro.kernels.paged_attention.ref import masked_decode_attention_ref
 from repro.models import layers as L
 from repro.serving import block_store as BS
-from repro.serving.kv_pool import PagedKVPool, PoolExhausted, pool_for
+from repro.serving.kv_pool import PagedKVPool, PoolExhausted, page_views, pool_for
 
 # Decode runs one query per request: a small q tile keeps the padded
 # query block cheap while kv tiles stay MXU-sized.
@@ -114,35 +122,18 @@ class StepReport:
         return self.charge_decode + self.charge_chunks + self.charge_finalize
 
 
-def _decode_attn(q, k_l, v_l, kv_valid, cfg: LMConfig):
-    """One decode-layer attention: q (N, Hq, Dh) vs rotated k_l/v_l
-    (N, S+1, Hkv, Dh) under the per-row `kv_valid` (N, S+1) mask.
+def _decode_attn(q, k_l, v_l, kv_valid):
+    """One decode-layer attention on the gather path: q (N, Hq, Dh) vs
+    rotated k_l/v_l (N, S+1, Hkv, Dh) under the per-row `kv_valid`
+    (N, S+1) mask.
 
     Causality never needs positions here: the new token is the newest in
-    its row, so the key-liveness mask IS the causal mask — which is what
-    lets the pallas route use the flash kernel with ``causal=False``.
+    its row, so the key-liveness mask IS the causal mask.  The body is
+    `paged_attention.ref.masked_decode_attention_ref` — the SAME helper
+    the paged kernel's oracle calls, so the two oracles (and their
+    masking constant / dtype discipline) cannot drift apart.
     """
-    if cfg.attn_backend == "pallas":
-        return mha_flash(
-            q[:, None],
-            k_l,
-            v_l,
-            kv_valid=kv_valid,
-            causal=False,
-            q_block=DECODE_Q_BLOCK,
-            kv_block=ENG.PALLAS_KV_BLOCK,
-            interpret=default_interpret(),
-        )[:, 0]
-    N = q.shape[0]
-    Hkv = cfg.n_kv_heads
-    G = cfg.n_heads // Hkv
-    scale = 1.0 / (cfg.resolved_head_dim**0.5)
-    qr = q.reshape(N, Hkv, G, -1)
-    s = jnp.einsum("nhgd,nshd->nhgs", qr, k_l, preferred_element_type=jnp.float32)
-    s = jnp.where(kv_valid[:, None, None, :], s * scale, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("nhgs,nshd->nhgd", p.astype(v_l.dtype), v_l)
-    return o.reshape(N, cfg.n_heads, -1)
+    return masked_decode_attention_ref(q, k_l, v_l, kv_valid)
 
 
 def _decode_step(
@@ -152,6 +143,8 @@ def _decode_step(
     seq_lens,
     new_pages,
     new_slots,
+    page_ids,
+    slot_pos,
     arena_k,
     arena_v,
     cfg: LMConfig,
@@ -162,7 +155,15 @@ def _decode_step(
     ids (logical order — entries may point into shared store pages);
     seq_lens: (N,) tokens resident *before* this step (= the new token's
     position); new_pages/new_slots: (N,) physical slot claimed for the
-    new token's KV.  -> (logits (N, V), arena_k', arena_v').
+    new token's KV; page_ids/slot_pos: the page-granular view
+    (`kv_pool.page_views`) the paged kernel consumes — tiny dummies on
+    the gather path, where they are dead code.
+    -> (logits (N, V), arena_k', arena_v').
+
+    The paged route writes each layer's fresh K/V into the arena
+    *before* attention, so the kernel reads the new token (tagged with
+    logical position len) through the same page view as every cached
+    token — the gather path's explicit concat disappears.
 
     Jitted below with the arenas donated on TPU/GPU so the update is
     in-place; CPU doesn't implement donation, so there each step copies
@@ -177,18 +178,22 @@ def _decode_step(
         x = x * (cfg.d_model**0.5)
     pos_new = seq_lens.astype(jnp.int32)  # (N,)
 
-    # one arena gather per step: slot-granular, so a row may interleave
-    # private pages with store-shared pages -> (N, S, L, Hkv, Dh)
-    kg = arena_k[slot_tables // page, slot_tables % page]
-    vg = arena_v[slot_tables // page, slot_tables % page]
-    slot_pos = jnp.arange(S)
-    kv_pos = jnp.concatenate(
-        [jnp.broadcast_to(slot_pos[None], (N, S)), pos_new[:, None]], axis=1
-    )
-    kv_valid = jnp.concatenate(
-        [slot_pos[None, :] < seq_lens[:, None], jnp.ones((N, 1), bool)],
-        axis=1,
-    )  # (N, S+1)
+    paged = ENG.decode_uses_paged(cfg)
+    if not paged:
+        # one arena gather per step: slot-granular, so a row may
+        # interleave private pages with store-shared pages
+        # -> (N, S, L, Hkv, Dh)
+        kg = arena_k[slot_tables // page, slot_tables % page]
+        vg = arena_v[slot_tables // page, slot_tables % page]
+        slot_idx = jnp.arange(S)
+        kv_pos = jnp.concatenate(
+            [jnp.broadcast_to(slot_idx[None], (N, S)), pos_new[:, None]],
+            axis=1,
+        )
+        kv_valid = jnp.concatenate(
+            [slot_idx[None, :] < seq_lens[:, None], jnp.ones((N, 1), bool)],
+            axis=1,
+        )  # (N, S+1)
 
     for layer in range(cfg.n_layers):
         lp = ENG.layer_params(params, layer)
@@ -204,11 +209,23 @@ def _decode_step(
         )
 
         q = L.apply_rope(q[:, None], pos_new[:, None], cfg.rope_theta)[:, 0]
-        k_l = jnp.concatenate([kg[:, :, layer], k_new[:, None]], axis=1)
-        v_l = jnp.concatenate([vg[:, :, layer], v_new[:, None]], axis=1)
-        k_l = L.apply_rope(k_l, kv_pos, cfg.rope_theta)  # realign
-
-        o = _decode_attn(q, k_l, v_l, kv_valid, cfg)
+        if paged:
+            o = paged_decode_mha(
+                q,
+                arena_k,
+                arena_v,
+                page_ids,
+                slot_pos,
+                layer=layer,
+                rope_theta=cfg.rope_theta,
+                q_block=DECODE_Q_BLOCK,
+                interpret=default_interpret(),
+            )
+        else:
+            k_l = jnp.concatenate([kg[:, :, layer], k_new[:, None]], axis=1)
+            v_l = jnp.concatenate([vg[:, :, layer], v_new[:, None]], axis=1)
+            k_l = L.apply_rope(k_l, kv_pos, cfg.rope_theta)  # realign
+            o = _decode_attn(q, k_l, v_l, kv_valid)
         x = x + jnp.einsum("nhe,hed->nd", o, lp["wo"])
         x = x + ENG.mlp_block(
             L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps), lp, cfg
@@ -221,10 +238,10 @@ def _decode_step(
 
 if jax.default_backend() in ("tpu", "gpu"):
     _jit_decode_step = jax.jit(
-        _decode_step, static_argnums=(8,), donate_argnums=(6, 7)
+        _decode_step, static_argnums=(10,), donate_argnums=(8, 9)
     )
 else:
-    _jit_decode_step = jax.jit(_decode_step, static_argnums=(8,))
+    _jit_decode_step = jax.jit(_decode_step, static_argnums=(10,))
 
 
 class BatchEngine:
@@ -969,6 +986,15 @@ class BatchEngine:
         pages_p = np.zeros(n_pad, np.int32)  # pad rows: scratch page 0
         slots_p = np.zeros(n_pad, np.int32)
         pages_p[:n], slots_p[:n] = pages, slots
+        if ENG.decode_uses_paged(self.cfg):
+            pg_ids, sl_pos = page_views(
+                tables_p, lens_p, pages_p, slots_p, self.pool.page_size
+            )
+        else:
+            # dead inputs on the gather path; keep them tiny and
+            # shape-stable so they never force a retrace
+            pg_ids = np.zeros((n_pad, 1), np.int32)
+            sl_pos = np.full((n_pad, 1, self.pool.page_size), -1, np.int32)
         logits, ak, av = _jit_decode_step(
             self.params,
             jnp.asarray(toks),
@@ -976,6 +1002,8 @@ class BatchEngine:
             jnp.asarray(lens_p),
             jnp.asarray(pages_p),
             jnp.asarray(slots_p),
+            jnp.asarray(pg_ids),
+            jnp.asarray(sl_pos),
             self.pool.arena_k,
             self.pool.arena_v,
             self.cfg,

@@ -183,6 +183,7 @@ class ClusterEngine:
         hw: CM.Hardware = CM.V5E_1,
         seed: int = 0,
         attn_backend: Optional[str] = None,
+        decode_kernel: Optional[str] = None,
         kv_reuse: bool = False,
         sched: str = "wave",
         chunk_tokens: int = 128,
@@ -210,6 +211,8 @@ class ClusterEngine:
         cfg = system.cfg
         if attn_backend is not None:
             cfg = dataclasses.replace(cfg, attn_backend=attn_backend)
+        if decode_kernel is not None:
+            cfg = dataclasses.replace(cfg, decode_kernel=decode_kernel)
         self.cfg = cfg
         self.kv_reuse = kv_reuse
         self._item_keys: Dict[int, tuple] = {}

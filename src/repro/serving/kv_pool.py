@@ -466,6 +466,72 @@ class PagedKVPool:
         return tables, lens
 
 
+def page_views(tables: np.ndarray, lens: np.ndarray,
+               new_pages: np.ndarray, new_slots: np.ndarray,
+               page_size: int, pad_pages_to: int = 4
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Page-granular decode views for the fused paged-attention kernel.
+
+    Slot tables are slot-granular (a row may interleave private and
+    store-shared slots at arbitrary alignment, store runs need not be
+    page-aligned), so a classic per-request *block table* doesn't exist.
+    What does exist: the set of physical pages a row touches, with each
+    in-page slot tagged by the logical position it serves.  Attention is
+    permutation-invariant over keys, so the kernel can stream pages in
+    any order as long as every live slot carries its true position — the
+    position drives both the RoPE realignment and the liveness mask.
+
+    tables: (N, S) physical slot ids in logical order (`batch_tables`
+    layout, pad entries masked by `lens`); lens: (N,) tokens resident
+    before this step (= the new token's logical position);
+    new_pages/new_slots: (N,) the physical slot claimed for this step's
+    token (`append_slots`) — included in the view at position len, so
+    the kernel reads the new token's KV from the arena the decode step
+    just wrote, no concat needed.
+
+    -> (page_ids (N, Pmax) int32, slot_pos (N, Pmax, page_size) int32):
+    `page_ids[i, j]` is the j-th distinct physical page row i touches
+    (first-appearance order); `slot_pos[i, j, t]` is the logical
+    position slot t of that page serves for row i, or -1 when it serves
+    none (other requests' tokens, pad slots).  Pmax is padded to a
+    `pad_pages_to` multiple; pad columns reference the scratch page 0
+    with all-(-1) positions.  A pad decode row (len 0, new slot at the
+    scratch page) yields exactly one live slot, so its softmax is never
+    empty.
+    """
+    tables = np.asarray(tables)
+    n = tables.shape[0]
+    lens = np.asarray(lens, np.int64)
+    new_slot_ids = (np.asarray(new_pages, np.int64) * page_size
+                    + np.asarray(new_slots, np.int64))
+    per_row = []
+    for i in range(n):
+        ln = int(lens[i])
+        slots = np.empty(ln + 1, np.int64)
+        slots[:ln] = tables[i, :ln]
+        slots[ln] = new_slot_ids[i]
+        pages = slots // page_size
+        offs = slots % page_size
+        uniq, first, inv = np.unique(pages, return_index=True,
+                                     return_inverse=True)
+        order = np.argsort(first, kind="stable")
+        rank = np.empty(len(uniq), np.int64)
+        rank[order] = np.arange(len(uniq))
+        spos = np.full((len(uniq), page_size), -1, np.int32)
+        # distinct logical positions live in distinct physical slots, so
+        # the (page-rank, offset) pairs are unique — no write collides
+        spos[rank[inv], offs] = np.arange(ln + 1)
+        per_row.append((uniq[order].astype(np.int32), spos))
+    pmax = max(len(p) for p, _ in per_row)
+    pmax = max(-(-pmax // pad_pages_to) * pad_pages_to, pad_pages_to)
+    page_ids = np.zeros((n, pmax), np.int32)
+    slot_pos = np.full((n, pmax, page_size), -1, np.int32)
+    for i, (p, sp) in enumerate(per_row):
+        page_ids[i, :len(p)] = p
+        slot_pos[i, :len(p)] = sp
+    return page_ids, slot_pos
+
+
 def pool_for(cfg: LMConfig, page_size: int = 16, n_pages: int = 512
              ) -> PagedKVPool:
     """Pool sized from a model config (serving launcher convenience)."""

@@ -5,7 +5,10 @@ Two invariants pin the seam down:
 * backend parity — `attn_backend="pallas"` (interpret mode on CPU) must
   decode the exact same token sequences as the jnp reference through
   full prefill, rcllm (beyond-prefix selective) prefill, and N paged
-  decode steps;
+  decode steps — under pallas the decode steps route through the fused
+  paged-attention kernel (`decode_kernel="auto"`), and pinning
+  `decode_kernel="paged"` under jnp isolates the decode kernel from the
+  prefill backend;
 * path parity — the batched rcllm prefill (bucketed, stacked, one jitted
   step per bucket) must match the legacy per-request loop bit-for-bit on
   logits and on paged-pool contents.
@@ -46,10 +49,12 @@ def batch_reqs(tiny_system):
 
 
 def _decode_seqs(system, brs, backend: str, mode: str,
-                 batched_selective: bool = True):
+                 batched_selective: bool = True,
+                 decode_kernel: str = "auto"):
     """Prefill + DECODE_STEPS greedy decode steps under one backend.
     -> ({rid: tokens}, prefill logits, engine)."""
-    cfg = dataclasses.replace(system.cfg, attn_backend=backend)
+    cfg = dataclasses.replace(system.cfg, attn_backend=backend,
+                              decode_kernel=decode_kernel)
     eng = BatchEngine(system.params, cfg, pool=pool_for(cfg, n_pages=256),
                       bucket=64, batched_selective=batched_selective)
     logits = eng.prefill(brs, mode=mode)
@@ -67,12 +72,29 @@ def _decode_seqs(system, brs, backend: str, mode: str,
 @pytest.mark.parametrize("mode", ["full", "rcllm"])
 def test_backend_parity_decoded_tokens(tiny_system, batch_reqs, mode):
     """jnp and pallas backends must emit identical token sequences through
-    prefill + N paged decode steps (both modes)."""
+    prefill + N paged decode steps (both modes).  Under pallas, decode
+    runs the fused paged-attention kernel (decode_kernel="auto"), so
+    this also pins gather-decode vs paged-decode token parity."""
     system = tiny_system[0]
     toks_j, logits_j, _ = _decode_seqs(system, batch_reqs, "jnp", mode)
     toks_p, logits_p, _ = _decode_seqs(system, batch_reqs, "pallas", mode)
     np.testing.assert_allclose(logits_j, logits_p, atol=1e-4, rtol=1e-4)
     assert toks_j == toks_p
+
+
+@pytest.mark.parametrize("mode", ["full", "rcllm"])
+def test_decode_kernel_parity_under_jnp(tiny_system, batch_reqs, mode):
+    """Isolate the decode kernel from the prefill backend: with the jnp
+    backend fixed, decode_kernel="paged" must reproduce the gather
+    path's prefill logits bitwise (the knob touches decode only) and
+    decode the exact same greedy token sequences."""
+    system = tiny_system[0]
+    toks_g, logits_g, _ = _decode_seqs(system, batch_reqs, "jnp", mode,
+                                       decode_kernel="gather")
+    toks_p, logits_p, _ = _decode_seqs(system, batch_reqs, "jnp", mode,
+                                       decode_kernel="paged")
+    np.testing.assert_array_equal(logits_g, logits_p)
+    assert toks_g == toks_p
 
 
 def test_batched_rcllm_matches_per_request_bitwise(tiny_system, batch_reqs):

@@ -1,6 +1,9 @@
 """Batched serving path: paged KV pool, batched prefill/decode parity
-with the single-request engine, and the continuous batcher over the real
-JAX backend."""
+with the single-request engine, the continuous batcher over the real
+JAX backend, and adversarial slot-table layouts through the fused
+paged-decode kernel (gather path as oracle)."""
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -156,6 +159,96 @@ def test_selective_batch_prefill_matches_engine(tiny_system):
                                        atol=1e-6)
     out = eng.decode([0, 1], [int(np.argmax(l)) for l in logits])
     assert np.isfinite(out).all()
+
+
+# ------------------------------------- paged decode kernel, adversarial
+def _adversarial_pool(cfg, seed):
+    """A pool whose slot tables are maximally hostile to the paged
+    kernel's page views: rid 0's table interleaves store-shared and
+    private slots at a non-page-aligned boundary (store run starts at
+    logical position 3, enters the shared pages at slot offset 2, and
+    crosses their page boundary mid-run), and both rids' lengths are not
+    multiples of the page size.  Seeded so the gather/paged twin engines
+    see bit-identical arenas."""
+    r = np.random.default_rng(seed)
+    pool = pool_for(cfg, page_size=4, n_pages=64)
+    hd = cfg.resolved_head_dim
+
+    def kv(t):
+        return (r.normal(size=(t, cfg.n_layers, cfg.n_kv_heads, hd))
+                .astype(np.float32))
+
+    shared = pool.alloc_pages(3)                  # store-owned pages
+    sslots = pool.page_slots(shared)
+    pool.write_slots(sslots, kv(len(sslots)), kv(len(sslots)))
+    # rid 0: S=13 (% 4 != 0); positions 3..9 served by shared slots 2..8
+    pool.alloc_mapped(0, 13, np.arange(3, 10), sslots[2:9])
+    priv = np.asarray([0, 1, 2, 10, 11, 12])
+    pool.write_at(0, priv, kv(len(priv)), kv(len(priv)))
+    # rid 1: S=6 (% 4 != 0), fully private
+    pool.alloc(1, 6)
+    pool.write_prompt(1, kv(6), kv(6))
+    return pool
+
+
+def test_paged_kernel_adversarial_slot_tables(tiny):
+    """Greedy decode through the fused paged kernel must emit the same
+    tokens as the jnp gather path over interleaved store/private slot
+    tables at arbitrary alignment — including decode appends that grow
+    the tables across page boundaries mid-sequence."""
+    params, cfg = tiny
+    runs = {}
+    for kern in ("gather", "paged"):
+        eng = BatchEngine(params,
+                          dataclasses.replace(cfg, decode_kernel=kern),
+                          pool=_adversarial_pool(cfg, seed=3), bucket=32)
+        last = [3, 7]
+        toks, logits = [], []
+        for _ in range(6):                # rid 0: 13->19, rid 1: 6->12
+            out = eng.decode([0, 1], last)
+            last = [int(np.argmax(row)) for row in out]
+            toks.append(tuple(last))
+            logits.append(np.asarray(out))
+        runs[kern] = (toks, logits)
+    assert runs["gather"][0] == runs["paged"][0]   # bitwise token parity
+    for lg, lp in zip(runs["gather"][1], runs["paged"][1]):
+        np.testing.assert_allclose(lg, lp, atol=1e-5, rtol=1e-5)
+
+
+def test_requeued_victim_decodes_through_paged_kernel(tiny_system):
+    """A preempted-then-requeued victim (chunk in flight, abort rolls
+    pages and chunk state back, fresh begin_prefill) must decode the
+    same tokens through the paged kernel as through the gather path."""
+    from repro.data import synth as SY
+    system, pool_rv, prof, _ = tiny_system
+    rq = SY.make_trace(system.catalog, pool_rv, prof, 1, qps=1.0,
+                       n_users=3, n_candidates=8, reviews_per_user=2,
+                       seed=23)[0]
+    plan = system.plan_for(rq)
+    ck, cv, have = system.cached_kv(plan)
+    req = BatchRequest(rid=0, tokens=plan.tokens, plan=plan, cached_k=ck,
+                       cached_v=cv, have=have, n_reserve=4)
+
+    def run(decode_kernel):
+        cfg = dataclasses.replace(system.cfg, decode_kernel=decode_kernel)
+        eng = BatchEngine(system.params, cfg,
+                          pool=pool_for(cfg, n_pages=256), chunk_tokens=64)
+        eng.begin_prefill(req)
+        eng.step(64, [], [], [0])              # one chunk in flight
+        assert 0 in eng.prefill_states
+        eng.abort_prefill(0)                   # preempted
+        assert eng.pool.stats().pages_in_use == 0
+        eng.begin_prefill(req)                 # requeued from its plan
+        rep = eng.step(10_000, [], [], [0])
+        last = int(np.argmax(rep.finalized[0]))
+        toks = [last]
+        for _ in range(4):
+            out = eng.decode([0], [last])
+            last = int(np.argmax(out[0]))
+            toks.append(last)
+        return toks
+
+    assert run("gather") == run("paged")
 
 
 # ------------------------------------------------ batcher over real engine

@@ -91,8 +91,9 @@ def test_chunked_prefill_matches_monolithic(tiny_system, chunk):
 # ------------------------------------------ serving-loop token parity
 def _run_sched(system, pend, plans, reuse, sched, attn_backend,
                chunk_tokens=64, step_tokens=256, n_pages=512,
-               eager_kv_writes=None):
-    cfg = dataclasses.replace(system.cfg, attn_backend=attn_backend)
+               eager_kv_writes=None, decode_kernel="auto"):
+    cfg = dataclasses.replace(system.cfg, attn_backend=attn_backend,
+                              decode_kernel=decode_kernel)
     pool = pool_for(cfg, n_pages=n_pages)
     eng = BatchEngine(system.params, cfg, pool=pool,
                       store=SharedBlockStore(pool) if reuse else None,
@@ -112,21 +113,30 @@ def _run_sched(system, pend, plans, reuse, sched, attn_backend,
 
 
 @pytest.mark.parametrize("kv_reuse", [False, True])
-@pytest.mark.parametrize("attn_backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("attn_backend,decode_kernel",
+                         [("jnp", "auto"),      # gather decode (oracle)
+                          ("pallas", "auto"),   # paged decode via backend
+                          ("jnp", "paged")])    # paged decode isolated
 def test_chunked_decoded_token_parity(tiny_system, heavy_workload,
-                                      kv_reuse, attn_backend):
+                                      kv_reuse, attn_backend,
+                                      decode_kernel):
     """Decoded tokens are bitwise identical between --sched wave and
     --sched chunked, with and without the shared block store, under
-    both attention backends — on the heavy-tail trace, so long-prompt
-    chunking (many chunks, mid-stream finalizes) is actually exercised.
+    both attention backends and both decode kernels — on the heavy-tail
+    trace, so long-prompt chunking (many chunks, mid-stream finalizes)
+    is actually exercised.  The ("jnp", "paged") rows pin the fused
+    paged-decode kernel against the same-backend prefill, isolating
+    decode-kernel effects from prefill-backend effects.
     """
     system, *_ = tiny_system
     _, pend, plans, reuse = heavy_workload
     reuse = reuse if kv_reuse else None
     gen_w, done_w, _ = _run_sched(system, pend, plans, reuse, "wave",
-                                  attn_backend)
+                                  attn_backend,
+                                  decode_kernel=decode_kernel)
     gen_c, done_c, w = _run_sched(system, pend, plans, reuse, "chunked",
-                                  attn_backend)
+                                  attn_backend,
+                                  decode_kernel=decode_kernel)
     assert gen_w == gen_c
     assert len(done_c) == len(pend)
     assert len(w.ticks) > 0
@@ -252,7 +262,13 @@ def test_abort_prefill_rolls_back_cleanly(tiny_system, heavy_workload):
 def test_midprefill_preemption_in_loop(tiny_system):
     """Decode-time PoolExhausted with a request mid-prefill: the
     batcher preempts the (younger) prefilling request, its chunk state
-    rolls back, and both requests still finish with full outputs."""
+    rolls back, and both requests still finish with full outputs.
+
+    The scenario runs under both decode kernels — the preemption/retry
+    dance (append rollback, victim re-prefill) must decode the exact
+    same tokens through the fused paged kernel as through the jnp
+    gather path, with page_size=1 as the degenerate worst case for the
+    page views (every slot its own page)."""
     system, pool_rv, prof, _ = tiny_system
     trace = WL.heavy_tail_trace(system.catalog, pool_rv, prof, 6, qps=8.0,
                                 n_users=3, long_prompt_frac=0.5,
@@ -270,10 +286,6 @@ def test_midprefill_preemption_in_loop(tiny_system):
     # an empty free list — forcing a preemption whose victim is the
     # younger rid 1, mid-prefill.
     plans = {0: all_plans[short], 1: all_plans[long_]}
-    pend = [
-        PendingRequest(0.0, 0, n_a, 3, plans[0][0].tokens),
-        PendingRequest(0.0, 1, n_b, 1, plans[1][0].tokens),
-    ]
 
     class NoReserveBackend(JaxEngineBackend):
         def _batch_requests(self, batch):
@@ -282,21 +294,31 @@ def test_midprefill_preemption_in_loop(tiny_system):
                 br.n_reserve = 0              # simulate broken accounting
             return out
 
-    pool = PagedKVPool(system.cfg.n_layers, system.cfg.n_kv_heads,
-                       system.cfg.resolved_head_dim, page_size=1,
-                       n_pages=n_a + n_b + 1)
-    eng = BatchEngine(system.params, system.cfg, pool=pool, chunk_tokens=64)
-    backend = NoReserveBackend(eng, mode="rcllm", plans=plans)
-    batcher = ContinuousBatcher(backend=backend, sched="chunked",
-                                chunk_tokens=64, step_tokens=128)
-    done = batcher.run(list(pend))
-    assert len(done) == 2                         # nobody was lost
-    assert batcher.workers[0].preempted >= 1
-    assert len(backend.generated[0]) == 3
-    assert len(backend.generated[1]) == 1
-    assert pool.stats().pages_in_use == 0
-    assert not eng.prefill_states
-    check_partition(pool)
+    def run(decode_kernel):
+        cfg = dataclasses.replace(system.cfg, decode_kernel=decode_kernel)
+        pend = [
+            PendingRequest(0.0, 0, n_a, 3, plans[0][0].tokens),
+            PendingRequest(0.0, 1, n_b, 1, plans[1][0].tokens),
+        ]
+        pool = PagedKVPool(cfg.n_layers, cfg.n_kv_heads,
+                           cfg.resolved_head_dim, page_size=1,
+                           n_pages=n_a + n_b + 1)
+        eng = BatchEngine(system.params, cfg, pool=pool, chunk_tokens=64)
+        backend = NoReserveBackend(eng, mode="rcllm", plans=plans)
+        batcher = ContinuousBatcher(backend=backend, sched="chunked",
+                                    chunk_tokens=64, step_tokens=128)
+        done = batcher.run(pend)
+        assert len(done) == 2                     # nobody was lost
+        assert batcher.workers[0].preempted >= 1
+        assert len(backend.generated[0]) == 3
+        assert len(backend.generated[1]) == 1
+        assert pool.stats().pages_in_use == 0
+        assert not eng.prefill_states
+        check_partition(pool)
+        return backend.generated
+
+    gen = {k: run(k) for k in ("gather", "paged")}
+    assert gen["gather"] == gen["paged"]          # bitwise token parity
 
 
 # --------------------------------------------------- pool machinery
