@@ -35,9 +35,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core.rcllm import make_tiny_system
-from repro.serving.batch_engine import BatchEngine
-from repro.serving.batching import ContinuousBatcher, JaxEngineBackend
-from repro.serving.kv_pool import pool_for
+from repro.serving import api as API
 from repro.serving.workload import heavy_tail_trace, rcllm_workload
 
 POOL_PAGES = 1024
@@ -48,21 +46,19 @@ STEP_TOKENS = 2048
 
 def _serve(system, pend, plans, sched, measured):
     """1 warm + `measured` passes of one discipline on one engine."""
-    pool = pool_for(system.cfg, n_pages=POOL_PAGES)
-    engine = BatchEngine(
-        system.params, system.cfg, pool=pool, chunk_tokens=CHUNK_TOKENS
+    scfg = API.ServeConfig(
+        engine="jax",
+        sched=sched,
+        n_pages=POOL_PAGES,
+        chunk_tokens=CHUNK_TOKENS,
+        step_tokens=STEP_TOKENS,
     )
-    backend = JaxEngineBackend(engine, mode="rcllm", plans=plans)
+    engine = API.build_engine(system.params, system.cfg, scfg)
+    backend = API.build_backend(engine, scfg, plans=plans)
     ttfts, tbts, ticks, oversized = [], [], 0, 0
     steady = None
     for i in range(1 + measured):
-        batcher = ContinuousBatcher(
-            backend=backend,
-            max_batch_tokens=4096,
-            sched=sched,
-            chunk_tokens=CHUNK_TOKENS,
-            step_tokens=STEP_TOKENS,
-        )
+        batcher = API.build_batcher(backend, scfg)
         done = batcher.run(list(pend))
         ttft = np.asarray(
             [

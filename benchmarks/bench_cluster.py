@@ -18,6 +18,7 @@ import os
 from benchmarks.common import emit
 from repro.core.rcllm import make_tiny_system
 from repro.data import synth as SY
+from repro.serving.api import ServeConfig
 from repro.serving.cluster import ClusterEngine
 
 POLICIES = ("affinity", "round_robin", "least_loaded")
@@ -49,10 +50,9 @@ def run(out_dir: str = "results/bench", quick: bool = False) -> None:
     for policy in POLICIES:
         # two passes per policy: the first warms the jit caches at every
         # shape bucket, the second is measured
+        scfg = ServeConfig(engine="jax", k=k, policy=policy)
         for _ in range(2):
-            rep = ClusterEngine(system, k=k, policy=policy).run(
-                trace, decode_steps=decode_steps
-            )
+            rep = ClusterEngine(system, scfg).run(trace, decode_steps=decode_steps)
         s = rep.summary()
         s["per_worker_hit_rate"] = [
             round(w.mean_hit_rate, 4) if w.mean_hit_rate is not None else None

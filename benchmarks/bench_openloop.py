@@ -1,0 +1,152 @@
+"""Open-loop serving benchmark: Poisson arrivals vs the wall clock.
+
+Every other serving benchmark is *closed-loop*: the whole trace is
+handed to `ContinuousBatcher.run` and the scheduler's virtual clock
+decides what "latency" means.  This one drives the same heavy-tail
+trace through `serving.server.AsyncSessionServer` as real wall-clock
+traffic: `server.replay(..., speed=s)` sleeps the trace's Poisson
+arrival gaps (divided by ``s``), so submissions race the scheduler
+exactly like production ingress.  Sweeping ``s`` sweeps the offered
+rate, which turns per-request wall TTFT into the paper-style
+*SLO-attainment curve*: the fraction of requests whose first token
+lands inside ``SLO_TTFT_S``, per offered rate — flat at 1.0 while the
+server keeps up, collapsing once the queue outruns service capacity.
+
+Two guarantees are asserted, not just reported:
+
+* **token parity** — open-loop admission order and batch composition
+  differ from the closed-loop run, but per-request compute is
+  composition-invariant (the cross-cutting property of PRs 1-6), so
+  every session must decode tokens bitwise identical to the
+  closed-loop reference;
+* the engine gets ONE closed-loop warm pass before the sweep so jit
+  compilation (the chunked shape set closes after one pass — see
+  bench_chunked) is not billed to the first open-loop requests.
+
+Emits the standard ``name,us_per_call,derived`` CSV rows plus
+``openloop.json`` in `out_dir`; ``--quick`` shrinks the trace (CI).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.rcllm import make_tiny_system
+from repro.serving import api as API
+from repro.serving.server import serve_trace
+from repro.serving.workload import heavy_tail_trace, rcllm_workload
+
+POOL_PAGES = 1024
+LONG_PROMPT_FRAC = 0.4
+BASE_QPS = 4.0          # trace-stamp rate; offered rate = BASE_QPS * speed
+SPEEDS = (1.0, 4.0, 16.0)  # identical in --quick so baseline keys line up
+SLO_TTFT_S = 2.0        # generous: shared CI runners, interpreted kernels
+
+
+def _rate_key(speed: float) -> str:
+    return f"{BASE_QPS * speed:g}qps"
+
+
+def run(out_dir: str = "results/bench", quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    n_req = 8 if quick else 16
+    decode_steps = 3
+
+    system, pool_rv, prof, _ = make_tiny_system(
+        n_items=60, n_requests_hist=30, k_instances=2, n_layers=4, d_model=32
+    )
+    trace = heavy_tail_trace(
+        system.catalog,
+        pool_rv,
+        prof,
+        n_req,
+        qps=BASE_QPS,
+        n_users=n_req,
+        long_prompt_frac=LONG_PROMPT_FRAC,
+        long_prompt_reviews=6,
+        seed=5,
+    )
+    pend, plans = rcllm_workload(system, trace, decode_steps=decode_steps)
+
+    scfg = API.ServeConfig(
+        engine="jax",
+        sched="chunked",
+        n_pages=POOL_PAGES,
+    )
+    engine = API.build_engine(system.params, system.cfg, scfg)
+    backend = API.build_backend(engine, scfg, plans=plans)
+
+    # closed-loop warm pass: compiles the chunked shape set AND pins the
+    # reference token streams the open-loop runs must reproduce
+    API.build_batcher(backend, scfg).run(list(pend))
+    reference = {rid: tuple(toks) for rid, toks in backend.generated.items()}
+
+    submits = [
+        (
+            p.arrival_s,
+            API.SubmitRequest(
+                rid=p.rid,
+                tokens=p.tokens,
+                max_tokens=p.decode_steps,
+                context=plans.get(p.rid),
+            ),
+        )
+        for p in pend
+    ]
+
+    rates = {}
+    token_parity = 1.0
+    for speed in SPEEDS:
+        completions, server = serve_trace(backend, scfg, submits, speed=speed)
+        ttft = np.asarray([c.ttft_s for c in completions.values()])
+        parity = float(
+            np.mean([completions[rid].tokens == reference[rid] for rid in reference])
+        )
+        token_parity = min(token_parity, parity)
+        attainment = float(np.mean(ttft <= SLO_TTFT_S))
+        key = _rate_key(speed)
+        rates[key] = {
+            "offered_qps": BASE_QPS * speed,
+            "attainment": attainment,
+            "ttft_p50_s": float(np.percentile(ttft, 50)),
+            "ttft_p99_s": float(np.percentile(ttft, 99)),
+            "ttft_mean_s": float(ttft.mean()),
+            "preempted": server.worker.preempted,
+            "completed": server.metrics.completed,
+            "token_parity": parity,
+        }
+        emit(
+            f"openloop/{key}",
+            rates[key]["ttft_p99_s"] * 1e6,
+            f"attainment={attainment:.2f} "
+            f"ttft_p50={rates[key]['ttft_p50_s']:.4f}s parity={parity:.2f}",
+        )
+
+    assert token_parity == 1.0, (
+        "open-loop serving changed decoded tokens vs the closed-loop "
+        f"reference (parity={token_parity:.3f}; per-request compute must "
+        "be composition-invariant)"
+    )
+
+    out = {
+        "requests": n_req,
+        "decode_steps": decode_steps,
+        "long_prompt_frac": LONG_PROMPT_FRAC,
+        "base_qps": BASE_QPS,
+        "slo_ttft_s": SLO_TTFT_S,
+        "sched": scfg.sched,
+        "protocol": "1 closed-loop warm pass (jit + reference tokens), "
+        "then one open-loop wall-clock replay per offered rate; "
+        "attainment = fraction of requests with TTFT <= slo_ttft_s",
+        "token_parity": token_parity,
+        "rates": rates,
+    }
+    with open(os.path.join(out_dir, "openloop.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -29,9 +29,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core.rcllm import make_tiny_system
-from repro.serving.batch_engine import BatchEngine
-from repro.serving.batching import ContinuousBatcher, JaxEngineBackend
-from repro.serving.block_store import SharedBlockStore
+from repro.serving import api as API
 from repro.serving.kv_pool import pool_for
 from repro.serving.workload import (
     rcllm_reuse_info,
@@ -54,7 +52,7 @@ def _warm_buckets(system, plans):
     could form — on a throwaway big pool, since the prefill jits don't
     depend on arena shape.
     """
-    from repro.serving.batch_engine import BatchRequest
+    from repro.serving.batch_engine import BatchEngine, BatchRequest
     from repro.serving.block_store import shape_bucket
 
     pool = pool_for(system.cfg, n_pages=2048)
@@ -105,18 +103,14 @@ def _run(system, pend, plans, reuse, kv_reuse: bool, measured: int = 3):
     difference; min-of-N is the standard robust estimator and both
     modes get the same N).
     """
-    pool = pool_for(system.cfg, n_pages=POOL_PAGES)
-    store = SharedBlockStore(pool) if kv_reuse else None
-    engine = BatchEngine(system.params, system.cfg, pool=pool, store=store)
-    backend = JaxEngineBackend(
-        engine,
-        mode="rcllm",
-        plans=plans,
-        reuse=reuse if kv_reuse else None,
+    scfg = API.ServeConfig(engine="jax", kv_reuse=kv_reuse, n_pages=POOL_PAGES)
+    engine = API.build_engine(system.params, system.cfg, scfg)
+    backend = API.build_backend(
+        engine, scfg, plans=plans, reuse=reuse if kv_reuse else None
     )
     best = None
     for i in range(2 + measured):
-        batcher = ContinuousBatcher(backend=backend, max_batch_tokens=4096)
+        batcher = API.build_batcher(backend, scfg)
         done = batcher.run(list(pend))
         ttft = np.asarray(
             [

@@ -22,13 +22,8 @@ from benchmarks.common import emit
 from repro.core import cost_model as CM
 from repro.core.rcllm import make_tiny_system
 from repro.data import synth as SY
-from repro.serving.batch_engine import BatchEngine
-from repro.serving.batching import (
-    ContinuousBatcher,
-    JaxEngineBackend,
-    PendingRequest,
-)
-from repro.serving.kv_pool import pool_for
+from repro.serving import api as API
+from repro.serving.batching import ContinuousBatcher, PendingRequest
 from repro.serving.workload import rcllm_workload
 
 
@@ -106,12 +101,13 @@ def run(out_dir: str = "results/bench", quick: bool = False) -> None:
         # fast clock composes different prefill batches than the
         # compile-heavy first pass), the third is measured — without
         # this, trace/compile time dominates sub-ms steps on tiny models
+        scfg = API.ServeConfig(engine="jax", mode=mode)
         for _pass in range(3):
-            engine = BatchEngine(system.params, cfg, pool=pool_for(cfg, n_pages=512))
-            backend = JaxEngineBackend(
-                engine, mode=mode, plans=plans if mode == "rcllm" else {}
+            engine = API.build_engine(system.params, cfg, scfg)
+            backend = API.build_backend(
+                engine, scfg, plans=plans if mode == "rcllm" else {}
             )
-            batcher = ContinuousBatcher(backend=backend, max_batch_tokens=4096)
+            batcher = API.build_batcher(backend, scfg)
             done = batcher.run(list(pend))
         s = _summarize(done, batcher.workers, backend.generated)
         s["throughput_tok_s"] = s.pop("throughput_per_s")

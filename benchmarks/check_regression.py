@@ -89,6 +89,13 @@ METRICS = (
     Metric("paged_decode.json", ("gather", "decode_step_s"), "time"),
     Metric("paged_decode.json", ("paged", "decode_step_s"), "time"),
     Metric("paged_decode.json", ("token_parity",), "floor", floor=0.5),
+    # open-loop session server: wall-clock latency is runner-dependent,
+    # so the gates are structural — at the lowest offered rate the SLO
+    # must hold, and open-loop scheduling must never change decoded
+    # tokens (composition invariance; bench_openloop also asserts ==1.0)
+    Metric("openloop.json", ("rates", "4qps", "attainment"), "rate"),
+    Metric("openloop.json", ("rates", "4qps", "ttft_p50_s"), "time"),
+    Metric("openloop.json", ("token_parity",), "floor", floor=0.99),
 )
 
 

@@ -11,6 +11,13 @@ from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
+# Canonical serving-execution knob values.  These live here (not in
+# repro.serving.api) because LMConfig owns the fields; the serving API
+# re-exports them so every layer validates against one tuple.
+ATTN_BACKENDS = ("jnp", "pallas")
+DECODE_KERNELS = ("auto", "gather", "paged")
+
+
 @dataclass(frozen=True)
 class MoEConfig:
     n_experts: int
@@ -60,6 +67,18 @@ class LMConfig:
     rcllm_enabled: bool = True      # item-KV reuse + selective attention apply
     selective_window: int = 256     # sliding window for selective recompute
     selective_hh_frac: float = 0.05  # heavy-hitter fraction (r budget contribution)
+
+    def __post_init__(self):
+        # frozen dataclass: dataclasses.replace re-runs this, so an
+        # invalid execution knob can never be smuggled in via replace
+        if self.attn_backend not in ATTN_BACKENDS:
+            raise ValueError(
+                f"attn_backend={self.attn_backend!r} not in {ATTN_BACKENDS}"
+            )
+        if self.decode_kernel not in DECODE_KERNELS:
+            raise ValueError(
+                f"decode_kernel={self.decode_kernel!r} not in {DECODE_KERNELS}"
+            )
 
     @property
     def resolved_head_dim(self) -> int:

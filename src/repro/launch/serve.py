@@ -1,36 +1,58 @@
 """Serving launcher: cluster simulation or the real batched JAX engine.
 
     # distributed cluster simulation (analytic cost model, K instances)
-    PYTHONPATH=src python -m repro.launch.serve --k 40 --qps 120
+    PYTHONPATH=src python -m repro.launch.serve --config engine=sim,k=40 \\
+        --qps 120
 
     # real hardware: continuous batching + paged KV pool on one instance
-    PYTHONPATH=src python -m repro.launch.serve --engine jax --requests 8 --k 1
+    PYTHONPATH=src python -m repro.launch.serve --config engine=jax \\
+        --requests 8
 
     # real hardware, K instances: affinity-scheduled cluster of JAX
     # engines over sharded item caches (per-request TTFT, per-worker
     # hit rates, explicit cross-shard transfers)
-    PYTHONPATH=src python -m repro.launch.serve --engine jax --k 4 \\
-        --requests 12 --mode rcllm
+    PYTHONPATH=src python -m repro.launch.serve --config engine=jax,k=4 \\
+        --requests 12
 
     # unified token-budget scheduler: chunk-resumable selective prefill
     # mixed with decode in every tick (no whole-prefill waves)
-    PYTHONPATH=src python -m repro.launch.serve --engine jax --requests 12 \\
-        --sched chunked --chunk-tokens 128 --long-prompt-frac 0.2
+    PYTHONPATH=src python -m repro.launch.serve \\
+        --config engine=jax,sched=chunked,chunk_tokens=128 \\
+        --requests 12 --long-prompt-frac 0.2
 
-All paths drive the *same* batching loop; `--engine` picks the backend
-behind its seam (`serving.batching.EngineBackend`) and `--k` with
-``--engine jax`` picks single-instance vs the `serving.cluster` path.
-``--sched`` picks the scheduling discipline: ``wave`` (whole-prefill
+    # the asyncio session server: the same trace as live streaming
+    # sessions (per-tick online metrics in the output's "online" key)
+    PYTHONPATH=src python -m repro.launch.serve --server \\
+        --config engine=jax,sched=chunked,kv_reuse=on --requests 12
+
+Serving knobs live in ONE typed object — `serving.api.ServeConfig` —
+passed as ``--config key=value[,key=value...]`` and validated up front
+(invalid combos like ``decode_kernel=paged`` with ``engine=sim`` fail
+with a message naming both knobs).  The historical per-knob flags
+(``--engine --k --sched --kv-reuse ...``) still work: they fold into
+the same dataclass through `ServeConfig.from_args` with a single
+`DeprecationWarning`.  Workload shape (``--requests --qps --zipf-users
+--long-prompt-frac``) and launcher behaviour (``--warmup --server
+--speed``) stay first-class flags — they describe the experiment, not
+the serving stack.
+
+All paths drive the *same* batching loop; ``engine`` picks the backend
+behind its seam (`serving.batching.EngineBackend`) and ``k`` with
+``engine=jax`` picks single-instance vs the `serving.cluster` path.
+``sched`` picks the scheduling discipline: ``wave`` (whole-prefill
 batches, prefill-prioritized — the default) or ``chunked`` (every tick
 packs decode tokens plus fixed-size prefill chunks under a global token
 budget; decoded tokens are bitwise identical either way).  With
-``--mode rcllm`` each prompt goes through decomposition → assembly
+``mode=rcllm`` each prompt goes through decomposition → assembly
 plan → beyond-prefix cache insertion → selective recompute → paged
-decode; ``--mode full`` is the Full-Recompute reference.  See
-examples/serve_cluster.py for the narrated simulator; this entry point
-emits machine-readable JSON, including a per-request latency split
-(queue-wait vs prefill-compute vs decode) and time-between-tokens
-percentiles so scheduler changes are attributable from bench artifacts.
+decode; ``mode=full`` is the Full-Recompute reference.  ``--server``
+re-expresses the trace-driven run as a thin client of the asyncio
+session server (`serving.server`): identical output schema (and, with
+``--speed 0``, bitwise-identical decoded tokens) plus the server's
+rolling online metrics.  This entry point emits machine-readable JSON,
+including a per-request latency split (queue-wait vs prefill-compute vs
+decode) and time-between-tokens percentiles so scheduler changes are
+attributable from bench artifacts.
 """
 
 from __future__ import annotations
@@ -43,13 +65,14 @@ import numpy as np
 from repro.configs import registry as REG
 from repro.core import cost_model as CM
 from repro.core import simulator as SIM
+from repro.serving.api import ServeConfig, SubmitRequest
 
 
-def run_sim(args) -> dict:
-    qps = args.qps if args.qps is not None else 3.0 * args.k
+def run_sim(config: ServeConfig, args) -> dict:
+    qps = args.qps if args.qps is not None else 3.0 * config.k
     cfg = REG.ARCHS[args.model]
     reqs, placement, _ = SIM.make_sim_setup(
-        k=args.k, n_requests=args.requests, qps=qps, n_items=8000, seed=1
+        k=config.k, n_requests=args.requests, qps=qps, n_items=8000, seed=1
     )
     res = SIM.simulate(
         cfg,
@@ -57,18 +80,18 @@ def run_sim(args) -> dict:
         reqs,
         placement,
         SIM.SimConfig(
-            mode=args.mode,
-            policy=args.policy,
-            r_item=args.r_item,
-            r_rev=args.r_rev,
+            mode=config.mode,
+            policy=config.policy,
+            r_item=config.r_item,
+            r_rev=config.r_rev,
         ),
     )
     return {
         "engine": "sim",
-        "k": args.k,
+        "k": config.k,
         "qps": qps,
-        "mode": args.mode,
-        "policy": args.policy,
+        "mode": config.mode,
+        "policy": config.policy,
         **res.summary(),
     }
 
@@ -83,6 +106,14 @@ def _percentiles(xs, qs=(50, 90, 99)) -> dict:
 def _latency_split(completions) -> dict:
     """Per-request latency attribution + aggregates from completions."""
     done = sorted(completions, key=lambda c: c.rid)
+    if not done:
+        # every session was rejected/cancelled before producing a token
+        # (the server path degrades per-request instead of raising)
+        keys = ("ttft_p50_s", "ttft_p90_s", "ttft_p99_s", "ttft_mean_s")
+        out = {k: None for k in keys}
+        out.update(queue_wait_mean_s=None, prefill_mean_s=None, decode_mean_s=None)
+        out["per_request"] = []
+        return out
     ttft = np.asarray([c.first_token_s - c.arrival_s for c in done])
     return {
         "ttft_p50_s": float(np.percentile(ttft, 50)),
@@ -121,41 +152,21 @@ def _tick_stats(workers) -> dict:
         "oversized_ticks": sum(1 for t in ticks if t.oversized),
         "mean_tick_tokens": float(
             np.mean(
-                [t.decode_tokens + t.chunk_tokens + t.finalize_tokens
-                 for t in ticks]
+                [t.decode_tokens + t.chunk_tokens + t.finalize_tokens for t in ticks]
             )
         ),
     }
 
 
-def _check_jax_flags(args) -> None:
-    if args.mode == "prefix":
-        raise SystemExit(
-            "--engine jax supports --mode rcllm|full "
-            "(prefix caching is a simulator-only baseline)"
-        )
-    if args.kv_reuse == "on" and args.mode != "rcllm":
-        raise SystemExit(
-            "--kv-reuse on needs --mode rcllm (the shared "
-            "block store holds beyond-prefix blocks)"
-        )
-    if args.sched == "chunked" and args.mode != "rcllm":
-        raise SystemExit(
-            "--sched chunked drives the beyond-prefix selective "
-            "prefill; --mode full has no chunk-resumable path"
-        )
-
-
-def run_jax_cluster(args) -> dict:
+def run_jax_cluster(config: ServeConfig, args) -> dict:
     """K real engine workers behind the Eq. 2 scheduler (serving.cluster)."""
     from repro.core.rcllm import make_tiny_system
     from repro.data import synth as SY
     from repro.serving.cluster import ClusterEngine
 
-    _check_jax_flags(args)
     qps = args.qps if args.qps is not None else 8.0
     system, pool_rv, prof, _ = make_tiny_system(
-        n_items=80, n_requests_hist=40, k_instances=args.k,
+        n_items=80, n_requests_hist=40, k_instances=config.k,
         n_layers=2, d_model=32,
     )
     trace = SY.make_trace(
@@ -172,40 +183,23 @@ def run_jax_cluster(args) -> dict:
         long_prompt_frac=args.long_prompt_frac,
     )
 
-    def make_cluster():
-        return ClusterEngine(
-            system,
-            k=args.k,
-            mode=args.mode,
-            policy=args.policy,
-            page_size=args.page_size,
-            n_pages=args.pages,
-            max_batch_tokens=args.max_batch_tokens,
-            attn_backend=args.attn_backend,
-            decode_kernel=args.decode_kernel,
-            kv_reuse=args.kv_reuse == "on",
-            sched=args.sched,
-            chunk_tokens=args.chunk_tokens,
-            step_tokens=args.step_tokens,
-        )
-
     if args.warmup:
-        make_cluster().run(trace, decode_steps=args.decode_steps)
-    cluster = make_cluster()
-    rep = cluster.run(trace, decode_steps=args.decode_steps)
+        ClusterEngine(system, config).run(trace, decode_steps=config.decode_steps)
+    cluster = ClusterEngine(system, config)
+    rep = cluster.run(trace, decode_steps=config.decode_steps)
 
     ttft = rep.ttft()
     return {
         "engine": "jax-cluster",
-        "k": args.k,
-        "mode": args.mode,
-        "sched": args.sched,
-        "attn_backend": args.attn_backend,
-        "decode_kernel": args.decode_kernel,
-        "kv_reuse": args.kv_reuse,
+        "k": config.k,
+        "mode": config.mode,
+        "sched": config.sched,
+        "attn_backend": config.attn_backend,
+        "decode_kernel": config.decode_kernel,
+        "kv_reuse": "on" if config.kv_reuse else "off",
         "policy": rep.policy,
         "requests": len(rep.completions),
-        "decode_steps": args.decode_steps,
+        "decode_steps": config.decode_steps,
         "includes_jit_compile": not args.warmup,
         "per_request_ttft_s": [round(float(x), 4) for x in ttft],
         **_latency_split(rep.completions),
@@ -235,40 +229,31 @@ def run_jax_cluster(args) -> dict:
     }
 
 
-def run_jax(args) -> dict:
-    """Continuous batching over the real engine on this host's devices."""
-    import dataclasses
-
-    from repro.core import engine as ENG
-    from repro.serving.batch_engine import BatchEngine
-    from repro.serving.batching import (
-        ContinuousBatcher,
-        JaxEngineBackend,
-        PendingRequest,
-    )
-    from repro.serving.kv_pool import pool_for
+def _jax_workload(config: ServeConfig, args):
+    """Build (params, lm_cfg, requests, plans, reuse) for the single-
+    instance jax paths — shared by the closed-loop runner and the
+    session server so both serve the exact same trace."""
+    from repro.serving.batching import PendingRequest
     from repro.serving.workload import rcllm_workload
 
-    _check_jax_flags(args)
-    if args.zipf_users is not None and args.mode != "rcllm":
+    if args.zipf_users is not None and config.mode != "rcllm":
         raise SystemExit(
             "--zipf-users shapes the rcllm trace; it has no "
-            "effect on --mode full prompts"
+            "effect on mode=full prompts"
         )
     qps = args.qps if args.qps is not None else 8.0
     rng = np.random.default_rng(1)
-    mode = args.mode
     plans = {}
     reuse = None
 
-    if mode == "rcllm":
+    if config.mode == "rcllm":
         # full RcLLM stack: tiny model + both cache pools + placement
         from repro.core.rcllm import make_tiny_system
         from repro.data import synth as SY
         from repro.serving.workload import rcllm_reuse_info
 
         system, pool_rv, prof, _ = make_tiny_system(
-            n_items=80, n_requests_hist=40, k_instances=max(args.k, 1),
+            n_items=80, n_requests_hist=40, k_instances=max(config.k, 1),
             n_layers=2, d_model=32,
         )
         params, cfg = system.params, system.cfg
@@ -289,8 +274,8 @@ def run_jax(args) -> dict:
             user_zipf_a=args.zipf_users,
             long_prompt_frac=args.long_prompt_frac,
         )
-        reqs, plans = rcllm_workload(system, trace, decode_steps=args.decode_steps)
-        if args.kv_reuse == "on":
+        reqs, plans = rcllm_workload(system, trace, decode_steps=config.decode_steps)
+        if config.kv_reuse:
             reuse = rcllm_reuse_info(system, trace, plans)
     else:
         # Full-Recompute reference on random prompts
@@ -327,63 +312,28 @@ def run_jax(args) -> dict:
                     arrival_s=float(arrivals[rid]),
                     rid=rid,
                     n_tokens=n,
-                    decode_steps=args.decode_steps,
+                    decode_steps=config.decode_steps,
                     tokens=rng.integers(1, cfg.vocab_size, n).astype(np.int32),
                 )
             )
+    return params, cfg, reqs, plans, reuse
 
-    # the attention-backend seam: jnp reference vs Pallas kernels inside
-    # the engine's jitted prefill/decode steps (offline caches above were
-    # built with the default backend; their pre-RoPE bytes are
-    # backend-invariant)
-    cfg = dataclasses.replace(
-        cfg, attn_backend=args.attn_backend, decode_kernel=args.decode_kernel
-    )
 
-    def make_batcher():
-        from repro.serving.block_store import SharedBlockStore
-
-        pool = pool_for(cfg, page_size=args.page_size, n_pages=args.pages)
-        engine = BatchEngine(
-            params,
-            cfg,
-            pool=pool,
-            sel=ENG.SelectiveConfig(r_item=args.r_item, r_rev=args.r_rev, window=16),
-            store=(SharedBlockStore(pool) if args.kv_reuse == "on" else None),
-            chunk_tokens=args.chunk_tokens,
-        )
-        backend = JaxEngineBackend(engine, mode=mode, plans=plans, reuse=reuse)
-        return engine, backend, ContinuousBatcher(
-            backend=backend,
-            max_batch_tokens=args.max_batch_tokens,
-            sched=args.sched,
-            chunk_tokens=args.chunk_tokens,
-            step_tokens=args.step_tokens,
-        )
-
-    if args.warmup:
-        # throwaway pass to fill the jit caches, so the reported times
-        # are step times rather than trace/compile times
-        make_batcher()[2].run(list(reqs))
-    engine, backend, batcher = make_batcher()
-    done = sorted(batcher.run(reqs), key=lambda c: c.rid)
-
-    total = max(c.done_s for c in done)
+def _engine_report(config: ServeConfig, args, engine, backend, done) -> dict:
+    total = max((c.done_s for c in done), default=0.0)
     n_toks = sum(len(backend.generated[c.rid]) for c in done)
     stats = engine.pool.stats()
     out = {
         "engine": "jax",
-        "mode": mode,
-        "sched": args.sched,
+        "mode": config.mode,
+        "sched": config.sched,
         "attn_backend": backend.attn_backend,
-        "decode_kernel": args.decode_kernel,
+        "decode_kernel": config.decode_kernel,
         "requests": len(done),
-        "kv_reuse": args.kv_reuse,
-        "decode_steps": args.decode_steps,
+        "kv_reuse": "on" if config.kv_reuse else "off",
+        "decode_steps": config.decode_steps,
         "includes_jit_compile": not args.warmup,
         **_latency_split(done),
-        **_tbt_stats(batcher.workers),
-        **_tick_stats(batcher.workers),
         "decode_tokens": int(n_toks),
         "throughput_tok_s": float(n_toks / max(total, 1e-9)),
         "pool_peak_pages": engine.pool.peak_pages,
@@ -396,87 +346,140 @@ def run_jax(args) -> dict:
     return out
 
 
-def main():
+def run_jax(config: ServeConfig, args) -> dict:
+    """Continuous batching over the real engine on this host's devices."""
+    from repro.core import engine as ENG
+    from repro.serving import api as API
+
+    params, cfg, reqs, plans, reuse = _jax_workload(config, args)
+    sel = ENG.SelectiveConfig(r_item=config.r_item, r_rev=config.r_rev, window=16)
+
+    def make_batcher():
+        engine = API.build_engine(params, cfg, config, sel=sel)
+        backend = API.build_backend(engine, config, plans=plans, reuse=reuse)
+        return engine, backend, API.build_batcher(backend, config)
+
+    if args.warmup:
+        # throwaway pass to fill the jit caches, so the reported times
+        # are step times rather than trace/compile times
+        make_batcher()[2].run(list(reqs))
+    engine, backend, batcher = make_batcher()
+    done = sorted(batcher.run(reqs), key=lambda c: c.rid)
+
+    out = _engine_report(config, args, engine, backend, done)
+    out.update(_tbt_stats(batcher.workers))
+    out.update(_tick_stats(batcher.workers))
+    return out
+
+
+def run_jax_server(config: ServeConfig, args) -> dict:
+    """The same single-instance trace served through the asyncio session
+    server: streaming sessions over the identical scheduling loop, plus
+    rolling online metrics.  ``--speed 0`` replays the trace's arrival
+    stamps deterministically (decoded tokens bitwise-identical to
+    `run_jax`); ``--speed > 0`` turns it into open-loop wall-clock
+    traffic."""
+    from repro.core import engine as ENG
+    from repro.serving import api as API
+    from repro.serving.server import AsyncSessionServer, serve_trace
+
+    params, cfg, reqs, plans, reuse = _jax_workload(config, args)
+    sel = ENG.SelectiveConfig(r_item=config.r_item, r_rev=config.r_rev, window=16)
+    submits = [
+        (
+            r.arrival_s,
+            SubmitRequest(
+                rid=r.rid,
+                tokens=r.tokens,
+                max_tokens=r.decode_steps,
+                context=plans.get(r.rid),
+                reuse=(reuse or {}).get(r.rid),
+            ),
+        )
+        for r in reqs
+    ]
+
+    def make_server():
+        engine = API.build_engine(params, cfg, config, sel=sel)
+        backend = API.build_backend(engine, config)
+        return engine, backend, AsyncSessionServer(backend, config)
+
+    if args.warmup:
+        import asyncio
+
+        from repro.serving.server import replay
+
+        engine, backend, server = make_server()
+        asyncio.run(replay(server, submits, speed=args.speed))
+    engine, backend, _ = make_server()
+    completions, server = serve_trace(backend, config, submits, speed=args.speed)
+    # the worker's completion records carry the same virtual-clock
+    # latency split the closed-loop runner reports
+    done = sorted(server.worker.done, key=lambda c: c.rid)
+
+    out = _engine_report(config, args, engine, backend, done)
+    out.update(_tbt_stats([server.worker]))
+    out.update(_tick_stats([server.worker]))
+    out["server"] = True
+    out["speed"] = args.speed
+    out["finish_reasons"] = {
+        reason: sum(1 for c in completions.values() if c.reason == reason)
+        for reason in sorted({c.reason for c in completions.values()})
+    }
+    out["online"] = server.metrics_snapshot()
+    return out
+
+
+def build_config(args) -> ServeConfig:
+    """``--config`` + legacy per-knob flags -> one validated ServeConfig."""
+    if args.config is not None:
+        base = ServeConfig.parse(args.config)
+    else:
+        # historical defaults: engine=sim with 40 simulated instances;
+        # --engine jax serves one real instance unless --k asks for more
+        eng = args.engine if args.engine is not None else "sim"
+        k = args.k if args.k is not None else (1 if eng == "jax" else 40)
+        base = ServeConfig(engine=eng, k=k)
+    return ServeConfig.from_args(args, base=base)
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument(
-        "--engine",
-        default="sim",
-        choices=["sim", "jax"],
-        help="sim: analytic cluster simulator; jax: real "
-        "batched engine + paged KV pool on this host "
-        "(--k > 1 runs the serving.cluster path: K "
-        "engines over sharded item caches)",
+        "--config",
+        default=None,
+        help="serving stack as key=value[,key=value...] over "
+        "serving.api.ServeConfig — e.g. "
+        "engine=jax,k=2,sched=chunked,kv_reuse=on.  The typed "
+        "replacement for the per-knob flags below",
     )
     ap.add_argument(
-        "--k",
-        type=int,
-        default=None,
-        help="instance count; default 40 for --engine sim, "
-        "1 for --engine jax (pass --k N for the real "
-        "multi-instance cluster)",
+        "--server",
+        action="store_true",
+        help="drive the trace through the asyncio session server "
+        "(serving.server; engine=jax, k=1): streaming sessions over "
+        "the same scheduling loop, online metrics in the output's "
+        "'online' key.  Identical decoded tokens at --speed 0",
     )
+    ap.add_argument(
+        "--speed",
+        type=float,
+        default=0.0,
+        help="--server arrival pacing: 0 = deterministic replay of "
+        "the trace's arrival stamps; >0 = open-loop wall-clock "
+        "arrivals at trace-time / speed",
+    )
+    # ------- workload / launcher flags (first-class, not deprecated) -------
     ap.add_argument("--qps", type=float, default=None)
     ap.add_argument("--requests", type=int, default=1500)
     ap.add_argument("--model", default="rcllm-qwen3-8b")
-    ap.add_argument("--mode", default="rcllm", choices=["rcllm", "prefix", "full"])
-    ap.add_argument(
-        "--attn-backend",
-        default="jnp",
-        choices=["jnp", "pallas"],
-        help="attention inside the jax engine's jitted steps: "
-        "jnp reference, or the Pallas flash/selective "
-        "kernels (interpret mode off-TPU)",
-    )
-    ap.add_argument(
-        "--decode-kernel",
-        default="auto",
-        choices=["auto", "gather", "paged"],
-        help="decode K/V read strategy: auto follows --attn-backend "
-        "(pallas -> fused paged-attention kernel, jnp -> arena "
-        "gather); gather/paged pin one path — decoded tokens are "
-        "identical either way",
-    )
-    ap.add_argument(
-        "--kv-reuse",
-        default="off",
-        choices=["off", "on"],
-        help="cross-request beyond-prefix KV reuse: a shared "
-        "ref-counted block store (pinned user tier + "
-        "LRU item tier) over each engine's paged pool; "
-        "decoded tokens are identical either way",
-    )
-    ap.add_argument(
-        "--sched",
-        default="wave",
-        choices=["wave", "chunked"],
-        help="scheduling discipline for the jax engine: wave = "
-        "whole-prefill batches (prefill-prioritized); chunked = "
-        "unified token-budget ticks mixing decode with "
-        "chunk-resumable selective prefill.  Decoded tokens are "
-        "bitwise identical either way",
-    )
-    ap.add_argument(
-        "--chunk-tokens",
-        type=int,
-        default=128,
-        help="prefill chunk size for --sched chunked (layer-0 "
-        "scan dispatch width; multiples of 64 keep the jit "
-        "shape grid small)",
-    )
-    ap.add_argument(
-        "--step-tokens",
-        type=int,
-        default=None,
-        help="per-tick token budget for --sched chunked "
-        "(default: max(4 * chunk_tokens, 512))",
-    )
     ap.add_argument(
         "--zipf-users",
         type=float,
         default=None,
         help="rcllm trace: draw user ids Zipf(a) instead of "
         "uniformly — heavy repeat users, the workload "
-        "where --kv-reuse pays (e.g. 1.4)",
+        "where kv_reuse pays (e.g. 1.4)",
     )
     ap.add_argument(
         "--long-prompt-frac",
@@ -484,34 +487,56 @@ def main():
         default=0.0,
         help="rcllm trace: fraction of users carrying a lognormal "
         "heavy tail of extra reviews — long-prompt head-of-line "
-        "interference, the workload where --sched chunked pays "
+        "interference, the workload where sched=chunked pays "
         "(e.g. 0.2)",
     )
-    ap.add_argument("--policy", default="affinity")
-    ap.add_argument("--r-item", type=float, default=0.3)
-    ap.add_argument("--r-rev", type=float, default=0.3)
-    # --engine jax knobs
-    ap.add_argument("--decode-steps", type=int, default=4)
     ap.add_argument("--prompt-tokens", type=int, default=160)
-    ap.add_argument("--max-batch-tokens", type=int, default=4096)
-    ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--pages", type=int, default=512)
     ap.add_argument(
         "--warmup",
         action="store_true",
         help="run a throwaway pass first so reported times "
         "exclude jit compilation",
     )
-    args = ap.parse_args()
+    # ---- legacy per-knob serving flags (deprecated: they fold into the ----
+    # ---- ServeConfig with one DeprecationWarning; prefer --config) -------
+    ap.add_argument("--engine", default=None, choices=["sim", "jax"])
+    ap.add_argument("--k", type=int, default=None)
+    ap.add_argument("--mode", default=None, choices=["rcllm", "prefix", "full"])
+    ap.add_argument("--attn-backend", default=None, choices=["jnp", "pallas"])
+    ap.add_argument(
+        "--decode-kernel", default=None, choices=["auto", "gather", "paged"]
+    )
+    ap.add_argument("--kv-reuse", default=None, choices=["off", "on"])
+    ap.add_argument("--sched", default=None, choices=["wave", "chunked"])
+    ap.add_argument("--chunk-tokens", type=int, default=None)
+    ap.add_argument("--step-tokens", type=int, default=None)
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--r-item", type=float, default=None)
+    ap.add_argument("--r-rev", type=float, default=None)
+    ap.add_argument("--decode-steps", type=int, default=None)
+    ap.add_argument("--max-batch-tokens", type=int, default=None)
+    ap.add_argument("--page-size", type=int, default=None)
+    ap.add_argument("--pages", type=int, default=None)
+    args = ap.parse_args(argv)
 
-    if args.k is None:
-        # 40 instances is the simulator's paper-scale default; a real
-        # multi-engine cluster on this host must be asked for explicitly
-        args.k = 1 if args.engine == "jax" else 40
-    if args.engine == "jax":
-        out = run_jax_cluster(args) if args.k > 1 else run_jax(args)
+    try:
+        config = build_config(args)
+    except ValueError as e:
+        raise SystemExit(str(e))
+
+    if args.server:
+        if config.engine != "jax":
+            raise SystemExit("--server drives the real engine: engine=jax")
+        if config.k != 1:
+            raise SystemExit(
+                "--server runs a single-worker session server (k=1); "
+                "multi-worker serving is the closed-loop cluster path"
+            )
+        out = run_jax_server(config, args)
+    elif config.engine == "jax":
+        out = run_jax_cluster(config, args) if config.k > 1 else run_jax(config, args)
     else:
-        out = run_sim(args)
+        out = run_sim(config, args)
     print(json.dumps(out, indent=1))
 
 

@@ -1,0 +1,431 @@
+"""Typed public serving API — the one front door to the serving stack.
+
+Every serving entry point (``launch/serve.py``, the asyncio session
+server, the cluster engine, the benchmarks) historically re-listed the
+same ~15 knobs as positional/keyword arguments threaded through three
+layers (``serve.py -> ClusterEngine -> JaxEngineBackend ->
+BatchEngine``), so adding one knob was a five-file diff and invalid
+combinations surfaced as deep crashes.  This module replaces that relay
+with one validated dataclass plus the frozen request/response types the
+session server speaks:
+
+* `ServeConfig` — every engine/scheduler/backend/kernel/reuse knob in
+  one frozen dataclass, validated at construction (an invalid combo
+  like ``decode_kernel="paged"`` with ``engine="sim"`` raises
+  immediately with a message naming both knobs, instead of failing five
+  layers down).  `ServeConfig.from_args` maps the legacy ``serve.py``
+  flag namespace into the dataclass — the deprecation shim that keeps
+  old invocations working.
+
+* `SubmitRequest` / `StreamEvent` / `Completion` — the typed session
+  protocol: a client submits a frozen request (prompt tokens, token
+  budget, stop sequences, sampling params) and consumes an async
+  iterator of `StreamEvent`s ending in exactly one ``finished`` event;
+  `Completion` is the materialized terminal view.
+
+* `SamplingParams` / `sample_token` — per-sequence sampling with an
+  explicit PRNG seed.  ``temperature == 0`` is greedy argmax (the
+  parity-test mode: every scheduler/backend/reuse combination decodes
+  bitwise-identical tokens); ``temperature > 0`` draws from the
+  (optionally top-k truncated) softmax using a per-request
+  ``numpy`` Generator, so a (seed, prompt) pair replays exactly.
+
+* `build_engine` / `build_backend` / `build_batcher` — the sliced
+  views: each consumes exactly the `ServeConfig` fields its layer needs,
+  so the per-knob keyword plumbing between layers is gone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ATTN_BACKENDS, DECODE_KERNELS
+
+ENGINES = ("sim", "jax")
+MODES = ("rcllm", "prefix", "full")
+SCHEDS = ("wave", "chunked")
+FINISH_REASONS = ("length", "stop", "cancelled", "rejected")
+
+
+# --------------------------------------------------------------- config
+@dataclass(frozen=True)
+class ServeConfig:
+    """Every serving knob, validated once, threaded everywhere.
+
+    The fields mirror the historical ``launch/serve.py`` flags; see
+    `from_args` for the exact mapping.  ``step_tokens=None`` resolves to
+    ``max(4 * chunk_tokens, 512)`` (the chunked scheduler's default
+    budget) via `resolved_step_tokens`.
+    """
+
+    engine: str = "jax"
+    k: int = 1
+    mode: str = "rcllm"
+    policy: str = "affinity"
+    sched: str = "wave"
+    attn_backend: str = "jnp"
+    decode_kernel: str = "auto"
+    kv_reuse: bool = False
+    chunk_tokens: int = 128
+    step_tokens: Optional[int] = None
+    max_batch_tokens: int = 4096
+    max_decode_batch: int = 64
+    page_size: int = 16
+    n_pages: int = 512
+    decode_steps: int = 4
+    r_item: float = 0.3
+    r_rev: float = 0.3
+
+    def __post_init__(self):
+        def bad(msg: str):
+            raise ValueError(f"invalid ServeConfig: {msg}")
+
+        for name, val, choices in (
+            ("engine", self.engine, ENGINES),
+            ("mode", self.mode, MODES),
+            ("sched", self.sched, SCHEDS),
+            ("attn_backend", self.attn_backend, ATTN_BACKENDS),
+            ("decode_kernel", self.decode_kernel, DECODE_KERNELS),
+        ):
+            if val not in choices:
+                bad(f"{name}={val!r} not in {choices}")
+        if self.engine == "sim":
+            # the analytic simulator has no attention, no pool and no
+            # chunk-resumable prefill: any real-engine knob is a
+            # configuration error, caught here rather than five layers in
+            if self.decode_kernel != "auto":
+                bad(
+                    f"decode_kernel={self.decode_kernel!r} needs engine='jax' "
+                    "(the simulator has no decode kernel)"
+                )
+            if self.attn_backend != "jnp":
+                bad(
+                    f"attn_backend={self.attn_backend!r} needs engine='jax' "
+                    "(the simulator runs no attention)"
+                )
+            if self.kv_reuse:
+                bad("kv_reuse=True needs engine='jax' (no pool to share)")
+            if self.sched == "chunked":
+                bad("sched='chunked' needs engine='jax' (the simulator is wave-only)")
+        else:
+            if self.mode == "prefix":
+                bad(
+                    "mode='prefix' is a simulator-only baseline; "
+                    "engine='jax' supports mode in ('rcllm', 'full')"
+                )
+        if self.kv_reuse and self.mode != "rcllm":
+            bad(
+                f"kv_reuse=True needs mode='rcllm' (the shared block store "
+                f"holds beyond-prefix blocks), got mode={self.mode!r}"
+            )
+        if self.sched == "chunked" and self.mode != "rcllm":
+            bad(
+                "sched='chunked' drives the beyond-prefix selective prefill; "
+                f"mode={self.mode!r} has no chunk-resumable path"
+            )
+        if self.k < 1:
+            bad(f"k={self.k} must be >= 1")
+        if self.chunk_tokens < 1:
+            bad(f"chunk_tokens={self.chunk_tokens} must be >= 1")
+        if self.step_tokens is not None and self.step_tokens < 1:
+            bad(f"step_tokens={self.step_tokens} must be >= 1 (or None)")
+        if self.page_size < 1 or self.n_pages < 2:
+            bad(
+                f"page_size={self.page_size} must be >= 1 and "
+                f"n_pages={self.n_pages} >= 2 (page 0 is the scratch page)"
+            )
+        if self.decode_steps < 1:
+            bad(f"decode_steps={self.decode_steps} must be >= 1")
+        if not (0.0 <= self.r_item <= 1.0 and 0.0 <= self.r_rev <= 1.0):
+            bad(f"r_item={self.r_item}/r_rev={self.r_rev} must be in [0, 1]")
+
+    @property
+    def resolved_step_tokens(self) -> int:
+        if self.step_tokens is not None:
+            return self.step_tokens
+        return max(4 * self.chunk_tokens, 512)
+
+    def replace(self, **kw) -> "ServeConfig":
+        """A modified copy, re-validated."""
+        return dataclasses.replace(self, **kw)
+
+    def apply_to(self, lm_cfg):
+        """Slice the model-execution knobs onto an `LMConfig`."""
+        return dataclasses.replace(
+            lm_cfg,
+            attn_backend=self.attn_backend,
+            decode_kernel=self.decode_kernel,
+        )
+
+    # ------------------------- legacy flag shim -------------------------
+    #: ``argparse`` attribute -> ServeConfig field for the historical
+    #: per-knob ``launch/serve.py`` flags (`--pages` became ``n_pages``;
+    #: ``--kv-reuse off|on`` becomes the bool).
+    LEGACY_FLAGS = {
+        "engine": "engine",
+        "k": "k",
+        "mode": "mode",
+        "policy": "policy",
+        "sched": "sched",
+        "attn_backend": "attn_backend",
+        "decode_kernel": "decode_kernel",
+        "kv_reuse": "kv_reuse",
+        "chunk_tokens": "chunk_tokens",
+        "step_tokens": "step_tokens",
+        "max_batch_tokens": "max_batch_tokens",
+        "page_size": "page_size",
+        "pages": "n_pages",
+        "decode_steps": "decode_steps",
+        "r_item": "r_item",
+        "r_rev": "r_rev",
+    }
+
+    @classmethod
+    def from_args(
+        cls, args, base: Optional["ServeConfig"] = None, warn: bool = True
+    ) -> "ServeConfig":
+        """Map a legacy ``serve.py`` argparse namespace into a config.
+
+        Only attributes that are present *and not None* override — the
+        launcher declares every legacy flag with ``default=None`` so a
+        flag the user never typed falls through to `base` (or the
+        dataclass default).  When any legacy flag was typed, one
+        `DeprecationWarning` names them all (a single warning path, not
+        one per flag).
+        """
+        overrides: Dict[str, object] = {}
+        used = []
+        for attr, fld in cls.LEGACY_FLAGS.items():
+            val = getattr(args, attr, None)
+            if val is None:
+                continue
+            if fld == "kv_reuse" and isinstance(val, str):
+                val = val == "on"
+            overrides[fld] = val
+            used.append("--" + attr.replace("_", "-"))
+        if used and warn:
+            warnings.warn(
+                f"per-knob serve flags ({', '.join(used)}) are deprecated; "
+                "pass one --config key=value[,key=value...] ServeConfig "
+                "instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        base = base if base is not None else cls()
+        return base.replace(**overrides) if overrides else base
+
+    @classmethod
+    def parse(cls, spec: str, base: Optional["ServeConfig"] = None) -> "ServeConfig":
+        """Build a config from a compact ``key=value,key=value`` string —
+        the launcher's new-style ``--config`` flag.  Values are coerced
+        by the field's declared type; booleans accept on/off/true/false.
+        """
+        base = base if base is not None else cls()
+        if not spec.strip():
+            return base
+        fields = {f.name: f for f in dataclasses.fields(cls)}
+        overrides: Dict[str, object] = {}
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                raise ValueError(f"--config entry {part!r} is not key=value")
+            key, val = part.split("=", 1)
+            key = key.strip()
+            if key not in fields:
+                raise ValueError(
+                    f"--config key {key!r} is not a ServeConfig field "
+                    f"(choose from {sorted(fields)})"
+                )
+            overrides[key] = _coerce(fields[key], val.strip())
+        return base.replace(**overrides)
+
+
+def _coerce(fld: dataclasses.Field, val: str):
+    t = fld.type
+    if "bool" in t:
+        low = val.lower()
+        if low in ("on", "true", "1", "yes"):
+            return True
+        if low in ("off", "false", "0", "no"):
+            return False
+        raise ValueError(f"--config {fld.name}={val!r}: expected on/off")
+    if val.lower() == "none":
+        return None
+    if "int" in t:
+        return int(val)
+    if "float" in t:
+        return float(val)
+    return val
+
+
+# ------------------------------------------------------------- sampling
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-sequence sampling.  ``temperature == 0`` is greedy argmax —
+    the default, and the mode every bitwise parity test pins.  With
+    ``temperature > 0`` the token is drawn from the softmax of
+    ``logits / temperature`` (optionally truncated to the ``top_k``
+    highest logits) using a per-request PRNG seeded with ``seed``, so
+    one (seed, prompt) pair replays the exact same stream."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature={self.temperature} must be >= 0")
+        if self.top_k < 0:
+            raise ValueError(f"top_k={self.top_k} must be >= 0")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def sample_token(
+    logits: np.ndarray,
+    params: SamplingParams = GREEDY,
+    rng: Optional[np.random.Generator] = None,
+) -> int:
+    """One token from one row of logits under `params`."""
+    logits = np.asarray(logits, np.float64)
+    if params.greedy or rng is None:
+        return int(np.argmax(logits))
+    z = logits / params.temperature
+    if params.top_k and params.top_k < len(z):
+        kth = np.partition(z, -params.top_k)[-params.top_k]
+        z = np.where(z >= kth, z, -np.inf)
+    z = z - np.max(z)
+    p = np.exp(z)
+    p /= p.sum()
+    return int(rng.choice(len(p), p=p))
+
+
+def match_stop(generated: Sequence[int], stops: Sequence[Tuple[int, ...]]) -> bool:
+    """Does the generated stream end with any stop sequence?"""
+    for s in stops:
+        n = len(s)
+        if n and len(generated) >= n and tuple(generated[-n:]) == tuple(s):
+            return True
+    return False
+
+
+# ------------------------------------------------------ session protocol
+@dataclass(frozen=True)
+class SubmitRequest:
+    """One client request to the session server.
+
+    ``tokens`` is the prompt (int32 ids).  ``max_tokens`` bounds the
+    generated stream (prefill's first token included); ``stop`` is a
+    tuple of token-id sequences — generation ends the moment the stream
+    *ends with* one of them (the matching tokens are kept, vLLM-style
+    inclusive semantics for token-id stops).  ``context`` carries the
+    rcllm assembly payload — ``(plan, cached_k, cached_v, have)`` — and
+    ``reuse`` the cross-request block metadata; both are None for
+    mode='full' prompts.
+    """
+
+    rid: int
+    tokens: np.ndarray
+    max_tokens: int = 4
+    stop: Tuple[Tuple[int, ...], ...] = ()
+    sampling: SamplingParams = GREEDY
+    context: Optional[tuple] = field(default=None, repr=False)
+    reuse: Optional[object] = field(default=None, repr=False)
+
+    def __post_init__(self):
+        if self.max_tokens < 1:
+            raise ValueError(f"max_tokens={self.max_tokens} must be >= 1")
+        if any(len(s) == 0 for s in self.stop):
+            raise ValueError("empty stop sequence")
+
+
+@dataclass(frozen=True)
+class StreamEvent:
+    """One element of a session's event stream.  Exactly one event per
+    stream has ``finished=True`` (its ``token`` may still carry the
+    final sampled id); ``reason`` is then one of `FINISH_REASONS`."""
+
+    rid: int
+    index: int  # 0-based position in the generated stream
+    token: Optional[int]
+    t_s: float  # server wall clock (seconds since server start)
+    finished: bool = False
+    reason: Optional[str] = None
+
+
+@dataclass(frozen=True)
+class Completion:
+    """Terminal view of one session: every generated token plus the
+    latency split the closed-loop runner reports."""
+
+    rid: int
+    tokens: Tuple[int, ...]
+    reason: str
+    submitted_s: float
+    first_token_s: Optional[float]
+    done_s: float
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.submitted_s
+
+
+# ------------------------------------------------------- sliced builders
+def build_engine(params, lm_cfg, config: ServeConfig, pool=None, sel=None):
+    """`BatchEngine` from the config's engine/pool/reuse slice.  The
+    returned engine's `cfg` carries the attention backend and decode
+    kernel; `pool`/`sel` override only when a caller needs a bespoke
+    pool (tests) or selective budget."""
+    from repro.core import engine as ENG
+    from repro.serving.batch_engine import BatchEngine
+    from repro.serving.block_store import SharedBlockStore
+    from repro.serving.kv_pool import pool_for
+
+    cfg = config.apply_to(lm_cfg)
+    if pool is None:
+        pool = pool_for(cfg, page_size=config.page_size, n_pages=config.n_pages)
+    if sel is None:
+        sel = ENG.SelectiveConfig(r_item=config.r_item, r_rev=config.r_rev)
+    return BatchEngine(
+        params,
+        cfg,
+        pool=pool,
+        sel=sel,
+        store=SharedBlockStore(pool) if config.kv_reuse else None,
+        chunk_tokens=config.chunk_tokens,
+    )
+
+
+def build_backend(engine, config: ServeConfig, plans=None, reuse=None):
+    """`JaxEngineBackend` over a built engine (mode slice)."""
+    from repro.serving.batching import JaxEngineBackend
+
+    return JaxEngineBackend(engine, mode=config.mode, plans=plans, reuse=reuse)
+
+
+def build_batcher(backend, config: ServeConfig):
+    """`ContinuousBatcher` over a backend (scheduler slice)."""
+    from repro.serving.batching import ContinuousBatcher
+
+    return ContinuousBatcher(
+        backend=backend,
+        max_batch_tokens=config.max_batch_tokens,
+        max_decode_batch=config.max_decode_batch,
+        sched=config.sched,
+        chunk_tokens=config.chunk_tokens,
+        step_tokens=config.step_tokens,
+    )

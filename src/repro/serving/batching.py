@@ -55,6 +55,7 @@ from typing import Callable, Dict, List, Optional, Protocol, Sequence
 
 import numpy as np
 
+from repro.serving.api import GREEDY, SamplingParams, match_stop, sample_token
 from repro.serving.kv_pool import PoolExhausted
 
 
@@ -69,6 +70,17 @@ class PendingRequest:
 
 
 @dataclass
+class DecodeEntry:
+    """One running request in a worker's decode set (rid-keyed —
+    `PendingRequest` equality compares only ``arrival_s``, so identity
+    or equality lookups alias equal-arrival requests)."""
+
+    req: PendingRequest
+    ttft_s: float
+    steps_left: int
+
+
+@dataclass
 class Completion:
     rid: int
     arrival_s: float
@@ -79,6 +91,9 @@ class Completion:
     # prefill batch launched; chunked: it was admitted into the
     # prefilling set) — splits latency into queue-wait vs compute
     admitted_s: float = 0.0
+    # why generation ended: "length" (token budget) or "stop" (a stop
+    # sequence matched; see api.SubmitRequest)
+    reason: str = "length"
 
     @property
     def queue_wait_s(self) -> float:
@@ -169,8 +184,15 @@ class JaxEngineBackend:
 
     `mode="full"` prefills every prompt exactly; `mode="rcllm"` runs the
     beyond-prefix selective path (requests then need `.plan`/cached KV —
-    supply them via `plans`).  Greedy sampling; generated tokens are kept
-    per request for inspection.
+    supply them via `plans`).  Generated tokens are kept per request for
+    inspection.
+
+    Token selection is greedy argmax unless a session registered
+    per-request `api.SamplingParams` via `set_session` — then the token
+    is drawn with a per-request PRNG seeded from the params, and the
+    generated stream is checked against the session's stop sequences
+    after every append (`early_stop` tells the scheduling loop to retire
+    the request before its token budget runs out).
     """
 
     def __init__(
@@ -190,6 +212,53 @@ class JaxEngineBackend:
         self._admit_cache: Dict[int, tuple] = {}
         self.last_token: Dict[int, int] = {}
         self.generated: Dict[int, List[int]] = {}
+        # session state (api.py front end): per-request sampling params,
+        # stop sequences, lazily-built PRNGs, and the reason a request's
+        # generation ended early ("stop"); absent rids sample greedily
+        self.sampling: Dict[int, SamplingParams] = {}
+        self.stop_seqs: Dict[int, tuple] = {}
+        self._rngs: Dict[int, np.random.Generator] = {}
+        self.finish_reason: Dict[int, str] = {}
+
+    def set_session(
+        self,
+        rid: int,
+        sampling: SamplingParams = GREEDY,
+        stop: Sequence[Sequence[int]] = (),
+    ) -> None:
+        """Register session semantics for a request before it is served."""
+        if not sampling.greedy:
+            self.sampling[rid] = sampling
+        if stop:
+            self.stop_seqs[rid] = tuple(tuple(s) for s in stop)
+
+    def _pick(self, rid: int, lg) -> int:
+        params = self.sampling.get(rid, GREEDY)
+        if params.greedy:
+            return int(np.argmax(lg))
+        rng = self._rngs.get(rid)
+        if rng is None:
+            # per-request stream: (seed, rid) so two sessions with the
+            # same params still draw independently, yet one (seed, rid,
+            # prompt) triple replays exactly — including after a
+            # preemption re-prefills the request from scratch
+            rng = np.random.default_rng((params.seed, rid))
+            self._rngs[rid] = rng
+        return sample_token(np.asarray(lg), params, rng)
+
+    def _append(self, rid: int, tok: int, first: bool = False) -> None:
+        self.last_token[rid] = tok
+        if first:
+            self.generated[rid] = [tok]
+        else:
+            self.generated[rid].append(tok)
+        stops = self.stop_seqs.get(rid)
+        if stops and match_stop(self.generated[rid], stops):
+            self.finish_reason[rid] = "stop"
+
+    def early_stop(self, rid: int) -> bool:
+        """Did this request hit a stop sequence (retire it now)?"""
+        return rid in self.finish_reason
 
     @property
     def attn_backend(self) -> str:
@@ -222,9 +291,7 @@ class JaxEngineBackend:
         t0 = time.perf_counter()
         logits = self.engine.prefill(self._batch_requests(batch), self.mode)
         for r, lg in zip(batch, logits):
-            tok = int(np.argmax(lg))
-            self.last_token[r.rid] = tok
-            self.generated[r.rid] = [tok]
+            self._append(r.rid, self._pick(r.rid, lg), first=True)
         return time.perf_counter() - t0
 
     def can_admit(
@@ -283,21 +350,31 @@ class JaxEngineBackend:
         rids = [r.rid for r in batch]
         logits = self.engine.decode(rids, [self.last_token[r] for r in rids])
         for rid, lg in zip(rids, logits):
-            tok = int(np.argmax(lg))
-            self.last_token[rid] = tok
-            self.generated[rid].append(tok)
+            self._append(rid, self._pick(rid, lg))
         return time.perf_counter() - t0
 
+    def _release(self, rid: int) -> None:
+        self.engine.release(rid)
+        self.last_token.pop(rid, None)
+        self._admit_cache.pop(rid, None)
+
     def finish(self, req: PendingRequest) -> None:
-        self.engine.release(req.rid)
-        self.last_token.pop(req.rid, None)
-        self._admit_cache.pop(req.rid, None)
+        self._release(req.rid)
+        self.sampling.pop(req.rid, None)
+        self.stop_seqs.pop(req.rid, None)
+        self._rngs.pop(req.rid, None)
+        # finish_reason is kept: the session server reads it after the
+        # completion is retired to label the terminal StreamEvent
 
     def preempt(self, req: PendingRequest) -> None:
         """Release pages/refs for a mid-decode eviction, keeping the
         request re-runnable (subclasses that drop plans in `finish`
-        must NOT drop them here — the victim re-prefills)."""
-        JaxEngineBackend.finish(self, req)
+        must NOT drop them here — the victim re-prefills).  Sampling
+        params and stop sequences are kept too; the PRNG is reset so the
+        re-run replays the identical token stream from its seed."""
+        JaxEngineBackend._release(self, req.rid)
+        self._rngs.pop(req.rid, None)
+        self.finish_reason.pop(req.rid, None)
 
     # ------------------------- chunked discipline -------------------------
     def begin_prefill(self, req: PendingRequest) -> None:
@@ -330,13 +407,9 @@ class JaxEngineBackend:
         )
         if rep.decode_logits is not None:
             for rid, lg in zip(rids, rep.decode_logits):
-                tok = int(np.argmax(lg))
-                self.last_token[rid] = tok
-                self.generated[rid].append(tok)
+                self._append(rid, self._pick(rid, lg))
         for rid, lg in rep.finalized.items():
-            tok = int(np.argmax(lg))
-            self.last_token[rid] = tok
-            self.generated[rid] = [tok]
+            self._append(rid, self._pick(rid, lg), first=True)
         return rep, time.perf_counter() - t0
 
     def preempt_prefill(self, req: PendingRequest) -> None:
@@ -346,6 +419,8 @@ class JaxEngineBackend:
         self.engine.abort_prefill(req.rid)
         self.last_token.pop(req.rid, None)
         self._admit_cache.pop(req.rid, None)
+        self._rngs.pop(req.rid, None)
+        self.finish_reason.pop(req.rid, None)
 
 
 class WorkerState:
@@ -397,8 +472,10 @@ class WorkerState:
         self._preempt_counts: Dict[int, int] = {}
         self.waiting: List[PendingRequest] = []
         self.prefilling: List[PendingRequest] = []  # chunked sched only
-        # decode set entries: [req, ttft_s, decode_steps_left]
-        self.decoding: List[list] = []
+        # decode set, rid-keyed (insertion-ordered, so batch slicing is
+        # FIFO); equality/identity lookups on PendingRequest alias
+        # equal-arrival requests — rids are the only safe key
+        self.decoding: Dict[int, DecodeEntry] = {}
         self.done: List[Completion] = []
         self.ticks: List[TickRecord] = []
         self.tbt: List[float] = []  # time-between-tokens samples
@@ -427,12 +504,19 @@ class WorkerState:
         est += sum(r.n_tokens for r in self.waiting) * self._prefill_s_per_tok
         est += sum(r.n_tokens for r in self.prefilling) * self._prefill_s_per_tok
         if self.decoding:
-            est += max(e[2] for e in self.decoding) * self._decode_s_per_step
+            est += (
+                max(e.steps_left for e in self.decoding.values())
+                * self._decode_s_per_step
+            )
         return est
 
     @staticmethod
     def _ewma(old: float, new: float) -> float:
         return new if old == 0.0 else 0.5 * old + 0.5 * new
+
+    def _stopped(self, rid: int) -> bool:
+        es = getattr(self.backend, "early_stop", None)
+        return es is not None and es(rid)
 
     def step(self) -> None:
         if self.sched == "chunked":
@@ -469,11 +553,11 @@ class WorkerState:
             )
         if batch:
             admitted = self.clock
-            # remove by identity: PendingRequest equality compares only
+            # remove by rid: PendingRequest equality compares only
             # arrival_s (the sort key), so equal-arrival requests would
             # alias under list.remove
-            picked = set(map(id, batch))
-            self.waiting = [r for r in self.waiting if id(r) not in picked]
+            picked = {r.rid for r in batch}
+            self.waiting = [r for r in self.waiting if r.rid not in picked]
             dt = self.backend.prefill(batch)
             self.clock += dt
             self.busy_seconds += dt
@@ -481,7 +565,8 @@ class WorkerState:
                 self._prefill_s_per_tok, dt / max(tok, 1)
             )
             for r in batch:
-                if r.decode_steps <= 1:  # TTFT token was the output
+                stopped = self._stopped(r.rid)
+                if r.decode_steps <= 1 or stopped:  # TTFT token was the output
                     self.done.append(
                         Completion(
                             r.rid,
@@ -490,20 +575,21 @@ class WorkerState:
                             self.clock,
                             self.wid,
                             admitted_s=admitted,
+                            reason="stop" if stopped else "length",
                         )
                     )
                     self.backend.finish(r)
                 else:
                     self._admit_t[r.rid] = admitted
                     self._last_tok_t[r.rid] = self.clock
-                    self.decoding.append(
-                        [r, self.clock - r.arrival_s, r.decode_steps - 1]
+                    self.decoding[r.rid] = DecodeEntry(
+                        r, self.clock - r.arrival_s, r.decode_steps - 1
                     )
         else:
             while True:
-                db = self.decoding[: self.max_decode_batch]
+                db = list(self.decoding.values())[: self.max_decode_batch]
                 try:
-                    dt = self.backend.decode([e[0] for e in db])
+                    dt = self.backend.decode([e.req for e in db])
                     break
                 except PoolExhausted:
                     # decode could not claim a KV slot for every running
@@ -520,9 +606,11 @@ class WorkerState:
             self.busy_seconds += dt
             self._decode_s_per_step = self._ewma(self._decode_s_per_step, dt)
             for e in db:
-                e[2] -= 1
-                self._sample_tbt(e[0].rid)
-            self._retire_decoded(db)
+                e.steps_left -= 1
+                if self._stopped(e.req.rid):
+                    e.steps_left = 0
+                self._sample_tbt(e.req.rid)
+            self._retire_decoded()
 
     # ---------------------------- chunked sched ----------------------------
     def _step_chunked(self) -> None:
@@ -532,11 +620,11 @@ class WorkerState:
         self.clock = self.ready_time()
         self._admit_chunked()
         while True:
-            db = self.decoding[: self.max_decode_batch]
+            db = list(self.decoding.values())[: self.max_decode_batch]
             try:
                 rep, dt = self.backend.step(
                     self.step_tokens,
-                    [e[0] for e in db],
+                    [e.req for e in db],
                     self.prefilling,
                 )
                 break
@@ -558,9 +646,7 @@ class WorkerState:
         charge = max(rep.charged, 1)
         pf_tokens = rep.charge_chunks + rep.charge_finalize
         if pf_tokens:
-            self._prefill_s_per_tok = self._ewma(
-                self._prefill_s_per_tok, dt / charge
-            )
+            self._prefill_s_per_tok = self._ewma(self._prefill_s_per_tok, dt / charge)
         if rep.charge_decode:
             self._decode_s_per_step = self._ewma(
                 self._decode_s_per_step, dt * rep.charge_decode / charge
@@ -577,14 +663,17 @@ class WorkerState:
         )
         if rep.decode_logits is not None:
             for e in db:
-                e[2] -= 1
-                self._sample_tbt(e[0].rid)
-            self._retire_decoded(db)
+                e.steps_left -= 1
+                if self._stopped(e.req.rid):
+                    e.steps_left = 0
+                self._sample_tbt(e.req.rid)
+            self._retire_decoded()
         finalized = [r for r in self.prefilling if r.rid in rep.finalized]
         self.prefilling = [r for r in self.prefilling if r.rid not in rep.finalized]
         for req in finalized:
             admitted = self._admit_t.get(req.rid, req.arrival_s)
-            if req.decode_steps <= 1:
+            stopped = self._stopped(req.rid)
+            if req.decode_steps <= 1 or stopped:
                 self._admit_t.pop(req.rid, None)
                 self.done.append(
                     Completion(
@@ -594,13 +683,14 @@ class WorkerState:
                         self.clock,
                         self.wid,
                         admitted_s=admitted,
+                        reason="stop" if stopped else "length",
                     )
                 )
                 self.backend.finish(req)
             else:
                 self._last_tok_t[req.rid] = self.clock
-                self.decoding.append(
-                    [req, self.clock - req.arrival_s, req.decode_steps - 1]
+                self.decoding[req.rid] = DecodeEntry(
+                    req, self.clock - req.arrival_s, req.decode_steps - 1
                 )
 
     def _admit_chunked(self) -> None:
@@ -634,35 +724,34 @@ class WorkerState:
             self.tbt.append(self.clock - last)
         self._last_tok_t[rid] = self.clock
 
-    def _retire_decoded(self, db: Sequence[list]) -> None:
-        keep = []
-        for e in self.decoding:
-            if e[2] <= 0:
-                req = e[0]
-                self.done.append(
-                    Completion(
-                        req.rid,
-                        req.arrival_s,
-                        req.arrival_s + e[1],
-                        self.clock,
-                        self.wid,
-                        admitted_s=self._admit_t.pop(req.rid, req.arrival_s),
-                    )
+    def _retire_decoded(self) -> None:
+        spent = [rid for rid, e in self.decoding.items() if e.steps_left <= 0]
+        for rid in spent:
+            e = self.decoding.pop(rid)
+            req = e.req
+            self.done.append(
+                Completion(
+                    req.rid,
+                    req.arrival_s,
+                    req.arrival_s + e.ttft_s,
+                    self.clock,
+                    self.wid,
+                    admitted_s=self._admit_t.pop(rid, req.arrival_s),
+                    reason="stop" if self._stopped(rid) else "length",
                 )
-                self._last_tok_t.pop(req.rid, None)
-                self.backend.finish(req)
-            else:
-                keep.append(e)
-        self.decoding = keep
+            )
+            self._last_tok_t.pop(rid, None)
+            self.backend.finish(req)
 
     def _preempt_youngest(self) -> None:
         """Evict the youngest running request under pool pressure:
         release its resources and put it back in the arrival queue (it
-        will re-prefill — greedy decode regenerates the same tokens, so
-        only its latency suffers).  Under the chunked discipline the
-        victim set includes mid-prefill requests; their chunk state
-        rolls back cleanly (`preempt_prefill`) and the plan is kept."""
-        cands = [e[0] for e in self.decoding] + list(self.prefilling)
+        will re-prefill — deterministic sampling regenerates the same
+        tokens, so only its latency suffers).  Under the chunked
+        discipline the victim set includes mid-prefill requests; their
+        chunk state rolls back cleanly (`preempt_prefill`) and the plan
+        is kept."""
+        cands = [e.req for e in self.decoding.values()] + list(self.prefilling)
         req = max(cands, key=lambda r: (r.arrival_s, r.rid))
         self._preempt_counts[req.rid] = self._preempt_counts.get(req.rid, 0) + 1
         if self._preempt_counts[req.rid] > 8:
@@ -671,17 +760,45 @@ class WorkerState:
                 " times: the pool cannot hold its decode tokens even "
                 "alone — backend decode-page reservation is broken"
             )
-        if any(r is req for r in self.prefilling):
-            self.prefilling = [r for r in self.prefilling if r is not req]
+        if any(r.rid == req.rid for r in self.prefilling):
+            self.prefilling = [r for r in self.prefilling if r.rid != req.rid]
             self._admit_t.pop(req.rid, None)
             self.backend.preempt_prefill(req)
         else:
-            self.decoding = [e for e in self.decoding if e[0] is not req]
+            self.decoding.pop(req.rid)
             self._last_tok_t.pop(req.rid, None)
             self._admit_t.pop(req.rid, None)
             self.backend.preempt(req)
         self.preempted += 1
         bisect.insort(self.waiting, req)
+
+    def cancel(self, rid: int) -> Optional[str]:
+        """Cancel a request wherever it currently lives, rolling pool
+        state back through the same seams preemption uses: a waiting
+        request is simply dequeued; a mid-prefill request drops its
+        chunk state, pages and store refs (`preempt_prefill`); a
+        mid-decode request releases through `finish`.  -> the stage it
+        was cancelled in, or None if unknown here (already completed, or
+        dispatched to a different worker).  Call only at a tick boundary
+        (never mid-`step`)."""
+        for i, r in enumerate(self.waiting):
+            if r.rid == rid:
+                del self.waiting[i]
+                return "waiting"
+        for i, r in enumerate(self.prefilling):
+            if r.rid == rid:
+                del self.prefilling[i]
+                self._admit_t.pop(rid, None)
+                self.backend.preempt_prefill(r)
+                self.backend.finish(r)  # release is idempotent; drops
+                return "prefilling"  # plans + session state for good
+        e = self.decoding.pop(rid, None)
+        if e is not None:
+            self._admit_t.pop(rid, None)
+            self._last_tok_t.pop(rid, None)
+            self.backend.finish(e.req)
+            return "decoding"
+        return None
 
 
 # dispatch hook: (request, arrival time, workers) -> worker index
@@ -733,6 +850,14 @@ class ClusterBatcher:
         self.dispatch = dispatch or least_backlog_dispatch
 
     def run(self, requests: Sequence[PendingRequest]) -> List[Completion]:
+        # every per-request map in the loop (decode set, admit times,
+        # backend plans/sessions) is rid-keyed, so duplicate rids would
+        # silently cross streams — reject them up front
+        seen: set = set()
+        for r in requests:
+            if r.rid in seen:
+                raise ValueError(f"duplicate request rid {r.rid}")
+            seen.add(r.rid)
         pending = sorted(requests)
         i = 0
         while i < len(pending) or any(w.has_work() for w in self.workers):

@@ -26,7 +26,7 @@ dedicated hardware (per-worker TTFT is each instance's own wall work).
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
@@ -38,6 +38,7 @@ from repro.core import engine as ENG
 from repro.core import item_cache as IC
 from repro.core import scheduler as SCH
 from repro.data import synth as SY
+from repro.serving import api as API
 from repro.serving import workload as WL
 from repro.serving.batch_engine import BatchEngine
 from repro.serving.batching import (
@@ -47,8 +48,6 @@ from repro.serving.batching import (
     PendingRequest,
     WorkerState,
 )
-from repro.serving.block_store import SharedBlockStore
-from repro.serving.kv_pool import pool_for
 
 
 class ClusterWorkerBackend(JaxEngineBackend):
@@ -161,34 +160,57 @@ class ClusterEngine:
     """K real engine workers behind the Eq. 2 affinity dispatcher.
 
     `system` is an `RcLLMSystem` whose placement was built with
-    `k_instances == k`; each worker w serves placement shard w.  `mode`
-    selects the prefill path ("rcllm" beyond-prefix selective, or "full"
-    recompute — the latter never touches the item cache, so transfers
-    and hit rates degenerate to the placement map only).
+    `k_instances == config.k`; each worker w serves placement shard w.
+    `config.mode` selects the prefill path ("rcllm" beyond-prefix
+    selective, or "full" recompute — the latter never touches the item
+    cache, so transfers and hit rates degenerate to the placement map
+    only).
+
+    Construction takes one `api.ServeConfig` — every engine / scheduler
+    / backend / kernel / reuse knob lives there, validated up front.
+    The historical per-knob keywords (``ClusterEngine(system, k=2,
+    kv_reuse=True, ...)``) still work through a deprecation shim that
+    folds them into a `ServeConfig`, with one `DeprecationWarning`.
     """
+
+    #: legacy per-knob keywords the shim folds into a ServeConfig
+    LEGACY_KW = frozenset(API.ServeConfig.LEGACY_FLAGS.values()) | {"max_decode_batch"}
 
     def __init__(
         self,
         system,
-        k: int,
-        mode: str = "rcllm",
-        policy: str = "affinity",
-        alpha: float = 0.7,
-        beta: float = 0.3,
-        page_size: int = 16,
-        n_pages: int = 512,
-        max_batch_tokens: int = 4096,
-        max_decode_batch: int = 64,
+        config: Optional[API.ServeConfig] = None,
+        *,
         sel: Optional[ENG.SelectiveConfig] = None,
         hw: CM.Hardware = CM.V5E_1,
         seed: int = 0,
-        attn_backend: Optional[str] = None,
-        decode_kernel: Optional[str] = None,
-        kv_reuse: bool = False,
-        sched: str = "wave",
-        chunk_tokens: int = 128,
-        step_tokens: Optional[int] = None,
+        alpha: float = 0.7,
+        beta: float = 0.3,
+        **legacy,
     ):
+        if legacy:
+            unknown = sorted(set(legacy) - self.LEGACY_KW)
+            if unknown:
+                raise TypeError(f"unknown ClusterEngine kwargs: {unknown}")
+            warnings.warn(
+                "per-knob ClusterEngine keywords are deprecated; pass one "
+                "api.ServeConfig",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            legacy = {k: v for k, v in legacy.items() if v is not None}
+            if isinstance(legacy.get("kv_reuse"), str):
+                legacy["kv_reuse"] = legacy["kv_reuse"] == "on"
+            config = (config or API.ServeConfig()).replace(**legacy)
+        if config is None:
+            raise TypeError("ClusterEngine needs an api.ServeConfig (or legacy kwargs)")
+        if config.engine != "jax":
+            raise ValueError(
+                f"ClusterEngine runs real engines; config.engine="
+                f"{config.engine!r} (the simulator cluster is "
+                "launch/serve.py run_sim)"
+            )
+        k, mode = config.k, config.mode
         if system.placement.k != k:
             raise ValueError(
                 f"placement has {system.placement.k} shards, cluster wants "
@@ -201,48 +223,40 @@ class ClusterEngine:
                 "mode='full'"
             )
         self.system = system
+        self.config = config
         self.k = k
         self.mode = mode
         self.hw = hw
         # the attention-backend seam: workers run the system's model under
-        # a possibly different attention implementation (jnp reference vs
-        # the Pallas kernels) — the offline caches were built once with
-        # the system's config and are backend-invariant (pre-RoPE bytes)
-        cfg = system.cfg
-        if attn_backend is not None:
-            cfg = dataclasses.replace(cfg, attn_backend=attn_backend)
-        if decode_kernel is not None:
-            cfg = dataclasses.replace(cfg, decode_kernel=decode_kernel)
-        self.cfg = cfg
-        self.kv_reuse = kv_reuse
+        # the config's attention implementation (jnp reference vs the
+        # Pallas kernels) — the offline caches were built once with the
+        # system's config and are backend-invariant (pre-RoPE bytes)
+        self.cfg = config.apply_to(system.cfg)
+        self.kv_reuse = config.kv_reuse
         self._item_keys: Dict[int, tuple] = {}
         self.backends: List[ClusterWorkerBackend] = []
         for w in range(k):
-            pool = pool_for(cfg, page_size=page_size, n_pages=n_pages)
-            engine = BatchEngine(
-                system.params,
-                cfg,
-                pool=pool,
-                sel=sel or ENG.SelectiveConfig(),
-                store=SharedBlockStore(pool) if kv_reuse else None,
-                chunk_tokens=chunk_tokens,
-            )
+            engine = API.build_engine(system.params, system.cfg, config, sel=sel)
             shard = None
             if system.item_store is not None:
                 shard = IC.ShardClient(system.item_store, w)
             backend = ClusterWorkerBackend(engine, shard, mode=mode, hw=hw)
             self.backends.append(backend)
         self.scheduler = SCH.ClusterScheduler(
-            system.placement, policy=policy, alpha=alpha, beta=beta, seed=seed
+            system.placement,
+            policy=config.policy,
+            alpha=alpha,
+            beta=beta,
+            seed=seed,
         )
         self.batcher = ClusterBatcher(
             self.backends,
             dispatch=self._dispatch,
-            max_batch_tokens=max_batch_tokens,
-            max_decode_batch=max_decode_batch,
-            sched=sched,
-            chunk_tokens=chunk_tokens,
-            step_tokens=step_tokens,
+            max_batch_tokens=config.max_batch_tokens,
+            max_decode_batch=config.max_decode_batch,
+            sched=config.sched,
+            chunk_tokens=config.chunk_tokens,
+            step_tokens=config.step_tokens,
         )
         self._trace_by_rid: Dict[int, object] = {}
         self.assigned: Dict[int, int] = {}

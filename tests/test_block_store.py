@@ -6,6 +6,7 @@ import dataclasses
 import numpy as np
 import pytest
 
+from repro.serving import api as API
 from repro.serving import workload as WL
 from repro.serving.batch_engine import BatchEngine, BatchRequest
 from repro.serving.batching import (ClusterBatcher, ContinuousBatcher,
@@ -337,9 +338,9 @@ def test_cluster_kv_reuse_parity_and_transfers(tiny_system):
     system, pool_rv, prof, _ = tiny_system
     trace = WL.zipf_repeat_trace(system.catalog, pool_rv, prof, 8, qps=12.0,
                                  n_users=3, zipf_a=1.4, seed=6)
-    rep_off = ClusterEngine(system, k=2, n_pages=256).run(
-        trace, decode_steps=2)
-    rep_on = ClusterEngine(system, k=2, n_pages=256, kv_reuse=True).run(
+    cfg = API.ServeConfig(engine="jax", k=2, n_pages=256)
+    rep_off = ClusterEngine(system, cfg).run(trace, decode_steps=2)
+    rep_on = ClusterEngine(system, cfg.replace(kv_reuse=True)).run(
         trace, decode_steps=2)
     assert rep_off.generated == rep_on.generated
     xfer_off = sum(w.transfer_blocks for w in rep_off.workers)

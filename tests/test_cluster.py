@@ -6,6 +6,7 @@ import pytest
 
 from repro.core import item_cache as IC
 from repro.core import scheduler as SCH
+from repro.serving import api as API
 from repro.serving.batching import (
     ClusterBatcher,
     ContinuousBatcher,
@@ -98,9 +99,9 @@ def test_dispatch_policy_parity_decoded_tokens(tiny_system, trace):
     system, _, _, _ = tiny_system
     reports = {}
     for policy in ("affinity", "round_robin"):
-        rep = ClusterEngine(system, k=2, policy=policy).run(
-            trace, decode_steps=3
-        )
+        rep = ClusterEngine(
+            system, API.ServeConfig(engine="jax", k=2, policy=policy)
+        ).run(trace, decode_steps=3)
         assert len(rep.completions) == len(trace)
         reports[policy] = rep
     aff, rr = reports["affinity"], reports["round_robin"]
@@ -120,7 +121,9 @@ def test_cluster_transfer_step_is_billed(tiny_system, trace):
     non-zero modeled cost added to the worker clock, and hot items are
     never transferred."""
     system, _, _, _ = tiny_system
-    eng = ClusterEngine(system, k=2, policy="round_robin")
+    eng = ClusterEngine(
+        system, API.ServeConfig(engine="jax", k=2, policy="round_robin")
+    )
     rep = eng.run(trace, decode_steps=2)
     n_blocks = sum(w.transfer_blocks for w in rep.workers)
     assert n_blocks > 0, "round-robin on a sharded catalog must transfer"

@@ -1,0 +1,411 @@
+"""Async session server + typed serving API.
+
+Pins the PR's tentpole contracts:
+
+* the server is a *front end*, not a new scheduler: a speed-0 trace
+  replay through `AsyncSessionServer` decodes tokens bitwise identical
+  to the closed-loop `ContinuousBatcher.run` on the same trace, across
+  {wave, chunked} x {kv-reuse on, off};
+* cancellation rolls pool state back through the preemption seams —
+  queued, mid-prefill (`preempt_prefill`/`abort_prefill`) and
+  mid-decode (`finish`) — leaving the ownership partition intact and
+  zero pages in use;
+* stop sequences and ``max_tokens`` bound the stream with the right
+  finish reason; non-greedy sampling replays exactly from its seed;
+* `ServeConfig` rejects invalid knob combinations at construction, and
+  the legacy flag/kwarg shims (`from_args`, `ClusterEngine(**legacy)`)
+  keep old invocations working behind one `DeprecationWarning`.
+"""
+import argparse
+import asyncio
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving import api as API
+from repro.serving import workload as WL
+from repro.serving.batching import PendingRequest, WorkerState
+from repro.serving.block_store import check_partition
+from repro.serving.server import AsyncSessionServer, replay, serve_trace
+
+
+@pytest.fixture(scope="module")
+def tiny_system():
+    from repro.core.rcllm import make_tiny_system
+    return make_tiny_system(n_items=60, n_requests_hist=30, k_instances=2,
+                            n_layers=2, d_model=32)
+
+
+@pytest.fixture(scope="module")
+def heavy_workload(tiny_system):
+    system, pool_rv, prof, _ = tiny_system
+    trace = WL.heavy_tail_trace(system.catalog, pool_rv, prof, 6, qps=8.0,
+                                n_users=3, long_prompt_frac=0.4,
+                                long_prompt_reviews=6, seed=5)
+    pend, plans = WL.rcllm_workload(system, trace, decode_steps=3)
+    reuse = WL.rcllm_reuse_info(system, trace, plans)
+    return trace, pend, plans, reuse
+
+
+def _build(system, scfg, plans=None, reuse=None):
+    engine = API.build_engine(system.params, system.cfg, scfg)
+    backend = API.build_backend(engine, scfg, plans=plans, reuse=reuse)
+    return engine, backend
+
+
+def _submits(pend, plans, reuse=None, max_tokens=None, stop=None,
+             sampling=API.GREEDY):
+    out = []
+    for p in pend:
+        out.append((p.arrival_s, API.SubmitRequest(
+            rid=p.rid,
+            tokens=p.tokens,
+            max_tokens=max_tokens.get(p.rid, p.decode_steps)
+            if max_tokens else p.decode_steps,
+            stop=stop.get(p.rid, ()) if stop else (),
+            sampling=sampling,
+            context=plans.get(p.rid),
+            reuse=(reuse or {}).get(p.rid),
+        )))
+    return out
+
+
+def _assert_clean(engine):
+    assert engine.pool.stats().pages_in_use == 0
+    assert not engine.prefill_states
+    check_partition(engine.pool, engine.store)
+
+
+# ------------------------------------------- closed-loop token parity
+@pytest.mark.parametrize("sched", ["wave", "chunked"])
+@pytest.mark.parametrize("kv_reuse", [False, True])
+def test_server_replay_matches_closed_loop(tiny_system, heavy_workload,
+                                           sched, kv_reuse):
+    """A speed-0 replay through the async server decodes every session
+    bitwise identical to the closed-loop batcher on the same trace —
+    the server changes *when* work is admitted, never *what* a request
+    computes."""
+    system, *_ = tiny_system
+    _, pend, plans, reuse = heavy_workload
+    reuse = reuse if kv_reuse else None
+    scfg = API.ServeConfig(engine="jax", sched=sched, kv_reuse=kv_reuse,
+                           n_pages=256, chunk_tokens=64)
+
+    eng_ref, backend_ref = _build(system, scfg, plans=plans, reuse=reuse)
+    done_ref = API.build_batcher(backend_ref, scfg).run(
+        [PendingRequest(p.arrival_s, p.rid, p.n_tokens, p.decode_steps,
+                        p.tokens) for p in pend])
+    ref = {rid: tuple(t) for rid, t in backend_ref.generated.items()}
+    _assert_clean(eng_ref)
+    assert len(done_ref) == len(pend)
+
+    eng, backend = _build(system, scfg)
+    completions, server = serve_trace(
+        backend, scfg, _submits(pend, plans, reuse=reuse))
+    assert set(completions) == set(ref)
+    for rid, comp in completions.items():
+        assert comp.tokens == ref[rid], f"rid {rid} diverged"
+        assert comp.reason == "length"
+        # speed-0 replay stamps submitted_s in *trace* time while
+        # first_token_s is server wall time, so ttft_s is only
+        # meaningful for wall-clock submissions (speed > 0); the
+        # closed-loop latency split lives in server.worker.done
+        assert comp.ttft_s is not None
+    assert server.metrics.completed == len(pend)
+    assert len(server.worker.done) == len(pend)
+    for c in server.worker.done:
+        assert c.arrival_s <= c.first_token_s <= c.done_s
+    _assert_clean(eng)
+
+
+def test_stream_events_well_formed(tiny_system, heavy_workload):
+    """Each session's stream: one event per token with contiguous
+    indices, then exactly one finished event carrying the reason."""
+    system, *_ = tiny_system
+    _, pend, plans, _ = heavy_workload
+    scfg = API.ServeConfig(engine="jax", sched="chunked", n_pages=256,
+                           chunk_tokens=64)
+    _, backend = _build(system, scfg)
+
+    async def drive():
+        server = AsyncSessionServer(backend, scfg)
+        sessions = [server.submit(req, arrival_s=t)
+                    for t, req in _submits(pend, plans)]
+        events = {s.rid: [] for s in sessions}
+        async with server:
+            for sess in sessions:
+                async for ev in sess:
+                    events[sess.rid].append(ev)
+        return sessions, events
+
+    sessions, events = asyncio.run(drive())
+    for sess in sessions:
+        evs = events[sess.rid]
+        assert [e.finished for e in evs] == [False] * (len(evs) - 1) + [True]
+        assert [e.index for e in evs[:-1]] == list(range(len(evs) - 1))
+        assert evs[-1].reason == "length"
+        comp = sess.completion
+        assert tuple(e.token for e in evs[:-1]) == comp.tokens
+        assert len(comp.tokens) == sess.request.max_tokens
+
+
+# ------------------------------------------------------- cancellation
+def test_cancel_queued_session(tiny_system, heavy_workload):
+    """A cancel that lands before admission finishes the session as
+    'cancelled' without the request ever touching the engine."""
+    system, *_ = tiny_system
+    _, pend, plans, _ = heavy_workload
+    scfg = API.ServeConfig(engine="jax", sched="chunked", n_pages=256)
+    engine, backend = _build(system, scfg)
+    server = AsyncSessionServer(backend, scfg)
+    sess = server.submit(API.SubmitRequest(rid=7, tokens=pend[0].tokens,
+                                           context=plans.get(pend[0].rid)))
+    sess.cancel()
+
+    async def drive():
+        async with server:
+            return await sess.result()
+
+    comp = asyncio.run(drive())
+    assert comp.reason == "cancelled"
+    assert comp.tokens == ()
+    assert server.metrics.cancelled == 1
+    _assert_clean(engine)
+
+
+def test_cancel_mid_prefill(tiny_system, heavy_workload):
+    """Cancelling a request between prefill chunks rolls its chunk
+    state, pages and store refs back (the `preempt_prefill` seam) and
+    keeps the pool partition intact."""
+    system, *_ = tiny_system
+    _, pend, plans, reuse = heavy_workload
+    scfg = API.ServeConfig(engine="jax", sched="chunked", kv_reuse=True,
+                           n_pages=256, chunk_tokens=64)
+    engine, backend = _build(system, scfg, plans=plans, reuse=reuse)
+    worker = WorkerState(backend, sched="chunked", chunk_tokens=64)
+    victim = max(pend, key=lambda p: p.n_tokens)
+    worker.waiting.append(PendingRequest(0.0, victim.rid, victim.n_tokens,
+                                         victim.decode_steps, victim.tokens))
+    worker.step()                      # admits + runs the first chunk
+    assert victim.rid in engine.prefill_states
+    assert worker.cancel(victim.rid) == "prefilling"
+    assert victim.rid not in engine.prefill_states
+    assert not worker.has_work()
+    for blk in (engine.store.blocks if engine.store else {}).values():
+        assert blk.refcount == 0
+    _assert_clean(engine)
+    assert worker.cancel(victim.rid) is None    # unknown now: no-op
+
+
+def test_cancel_mid_decode(tiny_system, heavy_workload):
+    """Cancelling a decoding session through the async client handle:
+    the stream ends with a 'cancelled' event after the tokens already
+    emitted, every other session completes normally, and no pages
+    leak."""
+    system, *_ = tiny_system
+    _, pend, plans, _ = heavy_workload
+    scfg = API.ServeConfig(engine="jax", sched="chunked", n_pages=256,
+                           chunk_tokens=64)
+    engine, backend = _build(system, scfg)
+    victim = pend[0].rid
+
+    async def drive():
+        server = AsyncSessionServer(backend, scfg)
+        sessions = {}
+        async with server:
+            for t, req in _submits(pend, plans,
+                                   max_tokens={victim: 64}):
+                sessions[req.rid] = server.submit(req, arrival_s=t)
+            vs = sessions[victim]
+            got = 0
+            async for ev in vs:
+                if ev.finished:
+                    break
+                got += 1
+                if got == 2:
+                    vs.cancel()
+            await server.drain()
+        return server, sessions
+
+    server, sessions = asyncio.run(drive())
+    comp = sessions[victim].completion
+    assert comp.reason == "cancelled"
+    assert 2 <= len(comp.tokens) < 64       # stopped well short of budget
+    for rid, sess in sessions.items():
+        if rid != victim:
+            assert sess.completion.reason == "length"
+            assert len(sess.completion.tokens) == sess.request.max_tokens
+    assert server.metrics.cancelled == 1
+    _assert_clean(engine)
+
+
+# --------------------------------------- stop sequences / max_tokens
+@pytest.mark.parametrize("sched", ["wave", "chunked"])
+def test_stop_sequence_ends_stream(tiny_system, heavy_workload, sched):
+    """A stop sequence derived from the greedy reference stream ends
+    generation the moment the stream ends with it (inclusive
+    semantics), with reason 'stop' — under both disciplines."""
+    system, *_ = tiny_system
+    _, pend, plans, _ = heavy_workload
+    scfg = API.ServeConfig(engine="jax", sched=sched, n_pages=256,
+                           chunk_tokens=64)
+    _, backend_ref = _build(system, scfg)
+    ref, _ = serve_trace(backend_ref, scfg, _submits(pend, plans))
+    rid = next(r for r in sorted(ref) if len(ref[r].tokens) >= 3)
+    stop_seq = ref[rid].tokens[1:2]          # second generated token
+
+    engine, backend = _build(system, scfg)
+    completions, _ = serve_trace(
+        backend, scfg, _submits(pend, plans, stop={rid: (stop_seq,)}))
+    assert completions[rid].reason == "stop"
+    assert completions[rid].tokens == ref[rid].tokens[:2]
+    for other in ref:
+        if other != rid:
+            assert completions[other].tokens == ref[other].tokens
+    _assert_clean(engine)
+
+
+def test_max_tokens_bounds_stream(tiny_system, heavy_workload):
+    """`max_tokens` is the total generated budget — 1 means prefill's
+    token only, N means exactly N, reason 'length'."""
+    system, *_ = tiny_system
+    _, pend, plans, _ = heavy_workload
+    scfg = API.ServeConfig(engine="jax", sched="chunked", n_pages=256,
+                           chunk_tokens=64)
+    budgets = {p.rid: 1 + (i % 3) for i, p in enumerate(pend)}
+    engine, backend = _build(system, scfg)
+    completions, _ = serve_trace(
+        backend, scfg, _submits(pend, plans, max_tokens=budgets))
+    for rid, comp in completions.items():
+        assert len(comp.tokens) == budgets[rid]
+        assert comp.reason == "length"
+    _assert_clean(engine)
+
+
+# ------------------------------------------------------------ sampling
+def test_sampling_replays_from_seed(tiny_system, heavy_workload):
+    """temperature > 0: a (seed, prompt) pair replays the exact same
+    stream across fresh engines; changing the seed changes at least one
+    stream (vocab is tiny, so assert across all sessions)."""
+    system, *_ = tiny_system
+    _, pend, plans, _ = heavy_workload
+    scfg = API.ServeConfig(engine="jax", sched="chunked", n_pages=256,
+                           chunk_tokens=64)
+
+    def run(seed):
+        engine, backend = _build(system, scfg)
+        sp = API.SamplingParams(temperature=1.0, top_k=4, seed=seed)
+        completions, _ = serve_trace(
+            backend, scfg, _submits(pend, plans, sampling=sp))
+        _assert_clean(engine)
+        return {rid: c.tokens for rid, c in completions.items()}
+
+    a, b, c = run(7), run(7), run(8)
+    assert a == b
+    assert a != c
+
+
+def test_sample_token_greedy_and_topk():
+    logits = np.asarray([0.1, 3.0, -1.0, 2.9])
+    assert API.sample_token(logits) == 1
+    rng = np.random.default_rng(0)
+    sp = API.SamplingParams(temperature=0.5, top_k=2, seed=0)
+    draws = {API.sample_token(logits, sp, rng) for _ in range(64)}
+    assert draws <= {1, 3}                   # top-2 support only
+    assert API.match_stop([5, 6, 7], [(6, 7)])
+    assert not API.match_stop([5, 6, 7], [(5, 6)])
+    assert not API.match_stop([7], [(6, 7)])
+
+
+# ----------------------------------------------------- config surface
+def test_serveconfig_rejects_invalid_combos():
+    with pytest.raises(ValueError, match="decode_kernel"):
+        API.ServeConfig(engine="sim", decode_kernel="paged")
+    with pytest.raises(ValueError, match="attn_backend"):
+        API.ServeConfig(engine="sim", attn_backend="pallas")
+    with pytest.raises(ValueError, match="kv_reuse"):
+        API.ServeConfig(engine="sim", kv_reuse=True)
+    with pytest.raises(ValueError, match="chunked"):
+        API.ServeConfig(engine="sim", sched="chunked")
+    with pytest.raises(ValueError, match="prefix"):
+        API.ServeConfig(engine="jax", mode="prefix")
+    with pytest.raises(ValueError, match="kv_reuse"):
+        API.ServeConfig(engine="jax", mode="full", kv_reuse=True)
+    with pytest.raises(ValueError, match="not in"):
+        API.ServeConfig(engine="tpu")
+    with pytest.raises(ValueError, match="k="):
+        API.ServeConfig(k=0)
+    cfg = API.ServeConfig(chunk_tokens=64)
+    assert cfg.resolved_step_tokens == 512
+    assert cfg.replace(step_tokens=192).resolved_step_tokens == 192
+
+
+def test_from_args_legacy_shim_single_warning():
+    ns = argparse.Namespace(engine="jax", kv_reuse="on", pages=256,
+                            sched=None, mode=None, k=None)
+    with pytest.warns(DeprecationWarning, match="--kv-reuse"):
+        cfg = API.ServeConfig.from_args(ns)
+    assert cfg.kv_reuse is True and cfg.n_pages == 256
+    with pytest.warns(DeprecationWarning) as rec:
+        API.ServeConfig.from_args(ns)
+    assert len(rec) == 1                     # one warning names them all
+    import warnings as W
+    with W.catch_warnings():
+        W.simplefilter("error")              # no flags -> no warning
+        assert API.ServeConfig.from_args(argparse.Namespace()) \
+            == API.ServeConfig()
+
+
+def test_config_parse_spec():
+    cfg = API.ServeConfig.parse("sched=chunked,kv_reuse=on,pages=0"
+                                .replace("pages=0", "n_pages=128"))
+    assert cfg.sched == "chunked" and cfg.kv_reuse and cfg.n_pages == 128
+    with pytest.raises(ValueError, match="not a ServeConfig field"):
+        API.ServeConfig.parse("pages=128")
+    with pytest.raises(ValueError, match="key=value"):
+        API.ServeConfig.parse("chunked")
+
+
+def test_cluster_engine_legacy_kwargs(tiny_system):
+    from repro.serving.cluster import ClusterEngine
+    system, *_ = tiny_system
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        ce = ClusterEngine(system, k=2, policy="round_robin")
+    assert ce.config.k == 2 and ce.config.policy == "round_robin"
+    with pytest.raises(TypeError, match="nonsense"):
+        ClusterEngine(system, nonsense=1)
+
+
+# --------------------------------------------------- server guardrails
+def test_server_rejects_multiworker_and_duplicate_rid(tiny_system,
+                                                      heavy_workload):
+    system, *_ = tiny_system
+    _, pend, plans, _ = heavy_workload
+    scfg = API.ServeConfig(engine="jax", n_pages=256)
+    _, backend = _build(system, scfg)
+    with pytest.raises(ValueError, match="one worker"):
+        AsyncSessionServer(backend, scfg.replace(k=2))
+    server = AsyncSessionServer(backend, scfg)
+    req = API.SubmitRequest(rid=1, tokens=pend[0].tokens)
+    server.submit(req)
+    with pytest.raises(ValueError, match="duplicate"):
+        server.submit(req)
+
+
+def test_replay_speed_gt0_preserves_tokens(tiny_system, heavy_workload):
+    """Open-loop (wall-clock) submission changes batch composition but
+    not decoded tokens — the cross-cutting invariance, at the server
+    level (bench_openloop sweeps this at scale)."""
+    system, *_ = tiny_system
+    _, pend, plans, _ = heavy_workload
+    scfg = API.ServeConfig(engine="jax", sched="chunked", n_pages=256,
+                           chunk_tokens=64)
+    _, backend_ref = _build(system, scfg)
+    ref, _ = serve_trace(backend_ref, scfg, _submits(pend, plans))
+    engine, backend = _build(system, scfg)
+    fast, _ = serve_trace(backend, scfg, _submits(pend, plans),
+                          speed=200.0)
+    assert {r: c.tokens for r, c in fast.items()} \
+        == {r: c.tokens for r, c in ref.items()}
+    _assert_clean(engine)
