@@ -96,6 +96,14 @@ METRICS = (
     Metric("openloop.json", ("rates", "4qps", "attainment"), "rate"),
     Metric("openloop.json", ("rates", "4qps", "ttft_p50_s"), "time"),
     Metric("openloop.json", ("token_parity",), "floor", floor=0.99),
+    # mesh serving on forced host devices: per-tp step cost gated against
+    # its own baseline (tp>1 is *slower* here — one CPU carved into 8
+    # XLA devices pays GSPMD all-reduces with no added FLOPs, so a
+    # vs-tp1 ratio gate would be meaningless), plus a hard floor on
+    # decoded-token agreement with the unsharded engine
+    Metric("mesh.json", ("tp", "1", "ttft_mean_s"), "time"),
+    Metric("mesh.json", ("tp", "2", "ttft_mean_s"), "time"),
+    Metric("mesh.json", ("token_parity",), "floor", floor=0.99),
 )
 
 

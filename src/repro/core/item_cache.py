@@ -9,6 +9,7 @@ per-replica footprint.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -79,11 +80,16 @@ class ItemKVStore:
 @dataclass(frozen=True)
 class TransferRecord:
     """One explicit cross-shard block movement (the measurable unit the
-    cluster's transfer step is billed in)."""
+    cluster's transfer step is billed in).  ``measured_s`` is the wall
+    clock of the real `jax.device_put` device-to-device copy when the
+    client runs with per-instance home devices, 0.0 on the ledger-only
+    path (no devices — the cluster then bills the modeled
+    `cost_model.fetch_time_s` instead)."""
     item_id: int
     src_instance: int
     n_tokens: int
     n_bytes: int
+    measured_s: float = 0.0
 
 
 class ShardClient:
@@ -97,14 +103,60 @@ class ShardClient:
     cross-shard byte is accounted for (and can be cost-modeled by the
     serving layer).  Blocks whose items no shard holds stay misses — the
     engine recomputes them, as in the paper.
+
+    ``devices`` (a per-instance home-device list, indexable by instance
+    id) turns the ledger physical: every pull stages the holder's block
+    bytes on the holder's device (once, cached) and then runs a real
+    `jax.device_put` device-to-device copy onto this instance's device,
+    recording the *measured* wall seconds in the TransferRecord — the
+    cluster bills that instead of the modeled network time.  The block
+    contents are unchanged either way (the copy moves the same bytes),
+    so routing still never changes what a request decodes.
     """
 
-    def __init__(self, store: ItemKVStore, instance: int):
+    def __init__(self, store: ItemKVStore, instance: int, devices=None):
         self.store = store
         self.instance = instance
+        self.devices = list(devices) if devices else None
         self.transfers: List[TransferRecord] = []
         self.n_local_blocks = 0
         self.n_miss_blocks = 0
+        # holder-device-resident staging cache: item -> (k_dev, v_dev);
+        # the host->device upload is paid once per item, every pull's
+        # device-to-device hop is then measured cleanly
+        self._dev_blocks: Dict[int, tuple] = {}
+        self._measured_pending = 0.0
+
+    @property
+    def measures(self) -> bool:
+        """Does this client measure real device-to-device transfers?"""
+        return self.devices is not None
+
+    def home_device(self, instance: int):
+        return self.devices[instance % len(self.devices)]
+
+    def _measured_copy(self, blk: ItemBlock, src_instance: int) -> float:
+        import jax
+
+        kd, vd = self._dev_blocks.get(blk.item_id, (None, None))
+        if kd is None:
+            src = self.home_device(src_instance)
+            kd = jax.device_put(blk.k, src)
+            vd = jax.device_put(blk.v, src)
+            jax.block_until_ready((kd, vd))
+            self._dev_blocks[blk.item_id] = (kd, vd)
+        dst = self.home_device(self.instance)
+        t0 = time.perf_counter()
+        k2 = jax.device_put(kd, dst)
+        v2 = jax.device_put(vd, dst)
+        jax.block_until_ready((k2, v2))
+        return time.perf_counter() - t0
+
+    def take_measured_s(self) -> float:
+        """Measured seconds accumulated since the last take (the cluster
+        drains this right after each `stage` to bill the dispatch)."""
+        s, self._measured_pending = self._measured_pending, 0.0
+        return s
 
     def resident(self, item: int) -> bool:
         return int(item) in self.store.shards[self.instance].blocks
@@ -120,9 +172,14 @@ class ShardClient:
                 continue
             blk = self.store.shards[h].blocks.get(it)
             if blk is not None:
+                measured = 0.0
+                if self.devices is not None:
+                    measured = self._measured_copy(blk, h)
+                    self._measured_pending += measured
                 self.transfers.append(TransferRecord(
                     item_id=it, src_instance=h,
-                    n_tokens=len(blk.tokens), n_bytes=blk.nbytes()))
+                    n_tokens=len(blk.tokens), n_bytes=blk.nbytes(),
+                    measured_s=measured))
                 return blk
         return None
 
@@ -154,6 +211,9 @@ class ShardClient:
 
     def transferred_tokens(self) -> int:
         return sum(t.n_tokens for t in self.transfers)
+
+    def measured_seconds(self) -> float:
+        return sum(t.measured_s for t in self.transfers)
 
 
 class StagedBlocks:

@@ -137,8 +137,11 @@ class RcLLMSystem:
 def make_tiny_system(profile_name: str = "amazon", n_items: int = 300,
                      k_instances: int = 4, n_requests_hist: int = 200,
                      seed: int = 0, n_layers: int = 4, d_model: int = 64,
-                     item_coverage: float = 1.0):
-    """A small end-to-end RcLLM instance for tests/benchmarks on CPU."""
+                     item_coverage: float = 1.0, n_heads: int = 4,
+                     n_kv_heads: int = 2):
+    """A small end-to-end RcLLM instance for tests/benchmarks on CPU.
+    ``n_heads``/``n_kv_heads`` are overridable so the mesh parity tests
+    can build a model whose head counts divide higher tp degrees."""
     from repro.models import transformer as T
 
     prof = dataclasses.replace(SY.PROFILES[profile_name], n_items=n_items,
@@ -157,7 +160,7 @@ def make_tiny_system(profile_name: str = "amazon", n_items: int = 300,
             seen.add(r.user_id)
 
     cfg = LMConfig(name="rcllm-tiny", n_layers=n_layers, d_model=d_model,
-                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                   n_heads=n_heads, n_kv_heads=n_kv_heads, head_dim=16, d_ff=128,
                    vocab_size=4096, mlp_type="swiglu", dtype="float32",
                    attn_q_chunk=64, attn_kv_chunk=64, remat=False)
     params = T.init_params(jax.random.PRNGKey(seed), cfg)

@@ -31,7 +31,12 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
     rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "ok": False}
     t0 = time.time()
     try:
-        mesh = make_production_mesh(multi_pod=multi_pod)
+        # the dry-run models the paper's fixed v5e topology, not this
+        # host: name the shape explicitly (auto-factoring would size the
+        # mesh to the 512 forced host devices instead)
+        mesh = make_production_mesh(
+            multi_pod=multi_pod,
+            shape=(2, 16, 16) if multi_pod else (16, 16))
         fn, args, in_sh, out_sh = STEPS.build(arch, shape, mesh)
         with mesh:
             lowered = jax.jit(fn, in_shardings=in_sh,

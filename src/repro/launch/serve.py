@@ -25,6 +25,12 @@
     PYTHONPATH=src python -m repro.launch.serve --server \\
         --config engine=jax,sched=chunked,kv_reuse=on --requests 12
 
+    # tensor-parallel serving on a real jax mesh (2 devices on the model
+    # axis; on CPU, force host devices before the first jax import)
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m repro.launch.serve \\
+        --config mesh.tp=2,sched=chunked --requests 8
+
 Serving knobs live in ONE typed object — `serving.api.ServeConfig` —
 passed as ``--config key=value[,key=value...]`` and validated up front
 (invalid combos like ``decode_kernel=paged`` with ``engine=sim`` fail
@@ -136,6 +142,22 @@ def _latency_split(completions) -> dict:
     }
 
 
+def _mesh_info(config: ServeConfig):
+    """The mesh the run actually used, for the output JSON (None when
+    the config runs the classic unsharded path)."""
+    if not config.mesh.enabled:
+        return None
+    import jax
+
+    return {
+        "tp": config.mesh.tp,
+        "dp": config.mesh.dp,
+        "shape": list(config.mesh.resolved_shape),
+        "axis_names": list(config.mesh.axis_names),
+        "host_devices": len(jax.devices()),
+    }
+
+
 def _tbt_stats(workers) -> dict:
     samples = [dt for w in workers for dt in w.tbt]
     out = {f"tbt_{k}": v for k, v in _percentiles(samples).items()}
@@ -197,6 +219,7 @@ def run_jax_cluster(config: ServeConfig, args) -> dict:
         "attn_backend": config.attn_backend,
         "decode_kernel": config.decode_kernel,
         "kv_reuse": "on" if config.kv_reuse else "off",
+        "mesh": _mesh_info(config),
         "policy": rep.policy,
         "requests": len(rep.completions),
         "decode_steps": config.decode_steps,
@@ -331,6 +354,7 @@ def _engine_report(config: ServeConfig, args, engine, backend, done) -> dict:
         "decode_kernel": config.decode_kernel,
         "requests": len(done),
         "kv_reuse": "on" if config.kv_reuse else "off",
+        "mesh": _mesh_info(config),
         "decode_steps": config.decode_steps,
         "includes_jit_compile": not args.warmup,
         **_latency_split(done),

@@ -54,6 +54,124 @@ FINISH_REASONS = ("length", "stop", "cancelled", "rejected")
 
 # --------------------------------------------------------------- config
 @dataclass(frozen=True)
+class MeshConfig:
+    """The typed sharding surface: how the serving stack maps onto a real
+    ``jax.sharding.Mesh``.
+
+    ``tp`` shards attention heads / MLP hidden / the KV arena's kv-head
+    axis over the mesh's ``model`` axis (Megatron-style tensor
+    parallelism — GSPMD inserts the all-reduces); ``dp`` sizes the
+    ``data`` axis (replica sets — serving arrays are replicated over it).
+    ``mesh_shape=None`` derives the shape from ``tp``/``dp``; an explicit
+    shape (``--config mesh.mesh_shape=2x4``) must agree with any
+    explicitly-set ``tp``/``dp`` and fills them in otherwise.  The
+    default ``MeshConfig()`` is *disabled*: the stack runs exactly as
+    before, on the default device, with no mesh anywhere.  ``tp=1`` with
+    ``mesh_shape=(1, 1)`` is the enabled-but-single-device mesh the
+    bitwise parity tests pin (tokens identical to the unsharded path).
+    """
+
+    tp: int = 1
+    dp: int = 1
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    axis_names: Tuple[str, ...] = ("data", "model")
+
+    def __post_init__(self):
+        def bad(msg: str):
+            raise ValueError(f"invalid MeshConfig: {msg}")
+
+        if self.mesh_shape is not None:
+            object.__setattr__(self, "mesh_shape", tuple(self.mesh_shape))
+        object.__setattr__(self, "axis_names", tuple(self.axis_names))
+        if self.tp < 1 or self.dp < 1:
+            bad(f"tp={self.tp}/dp={self.dp} must be >= 1")
+        names = self.axis_names
+        if (
+            not names
+            or len(set(names)) != len(names)
+            or not all(isinstance(a, str) and a for a in names)
+        ):
+            bad(f"axis_names={names!r} must be distinct non-empty strings")
+        if "model" not in names:
+            bad(
+                f"axis_names={names!r} must include 'model' "
+                "(the tensor-parallel axis every PartitionSpec names)"
+            )
+        if self.mesh_shape is None:
+            if names != ("data", "model"):
+                bad(
+                    f"axis_names={names!r} needs an explicit mesh_shape "
+                    "(only the default ('data', 'model') layout can be "
+                    "derived from tp/dp)"
+                )
+            return
+        shape = self.mesh_shape
+        if len(shape) != len(names):
+            bad(
+                f"mesh_shape={shape} has {len(shape)} dims but "
+                f"axis_names={names!r} has {len(names)}"
+            )
+        if any(int(s) < 1 for s in shape):
+            bad(f"mesh_shape={shape} dims must be >= 1")
+        shape = tuple(int(s) for s in shape)
+        object.__setattr__(self, "mesh_shape", shape)
+        derived_tp = shape[names.index("model")]
+        derived_dp = 1
+        for name, size in zip(names, shape):
+            if name != "model":
+                derived_dp *= size
+        if self.tp not in (1, derived_tp):
+            bad(
+                f"mesh_shape={shape} puts {derived_tp} devices on the "
+                f"model axis but tp={self.tp}: drop one of the two knobs "
+                "or make them agree"
+            )
+        if self.dp not in (1, derived_dp):
+            bad(
+                f"mesh_shape={shape} puts {derived_dp} devices on the "
+                f"data axes but dp={self.dp}: drop one of the two knobs "
+                "or make them agree"
+            )
+        object.__setattr__(self, "tp", derived_tp)
+        object.__setattr__(self, "dp", derived_dp)
+
+    @property
+    def enabled(self) -> bool:
+        """Does this config ask for a mesh at all?  The default
+        ``MeshConfig()`` is disabled — everything runs unsharded on the
+        default device, byte-identical to the pre-mesh stack."""
+        return self.mesh_shape is not None or self.tp > 1 or self.dp > 1
+
+    @property
+    def resolved_shape(self) -> Tuple[int, ...]:
+        if self.mesh_shape is not None:
+            return self.mesh_shape
+        return (self.dp, self.tp)
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.resolved_shape:
+            n *= s
+        return n
+
+    def build(self):
+        """The real ``jax.sharding.Mesh``, or None when disabled.
+
+        Raises the `launch.mesh` explicit-shape error when the host has
+        fewer devices than the shape needs (on CPU, export
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before
+        the first jax import to force host devices)."""
+        if not self.enabled:
+            return None
+        from repro.launch.mesh import make_production_mesh
+
+        return make_production_mesh(
+            shape=self.resolved_shape, axis_names=self.axis_names
+        )
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     """Every serving knob, validated once, threaded everywhere.
 
@@ -80,6 +198,7 @@ class ServeConfig:
     decode_steps: int = 4
     r_item: float = 0.3
     r_rev: float = 0.3
+    mesh: MeshConfig = field(default_factory=MeshConfig)
 
     def __post_init__(self):
         def bad(msg: str):
@@ -143,6 +262,31 @@ class ServeConfig:
             bad(f"decode_steps={self.decode_steps} must be >= 1")
         if not (0.0 <= self.r_item <= 1.0 and 0.0 <= self.r_rev <= 1.0):
             bad(f"r_item={self.r_item}/r_rev={self.r_rev} must be in [0, 1]")
+        if not isinstance(self.mesh, MeshConfig):
+            bad(f"mesh must be a MeshConfig, got {type(self.mesh).__name__}")
+        if self.mesh.enabled and self.engine != "jax":
+            bad(
+                f"mesh.tp={self.mesh.tp}/mesh.dp={self.mesh.dp} needs "
+                f"engine='jax' (engine={self.engine!r} runs no devices)"
+            )
+        if self.mesh.tp > 1:
+            # the Mosaic/Pallas kernels are single-device programs: under
+            # tensor parallelism GSPMD partitions the jnp reference paths
+            # instead (decode_kernel='auto' resolves to the gather oracle,
+            # see `apply_to`) until sharded kernels land
+            if self.attn_backend == "pallas":
+                bad(
+                    f"attn_backend='pallas' with mesh.tp={self.mesh.tp}: "
+                    "the Pallas kernels are single-device; tensor "
+                    "parallelism needs attn_backend='jnp'"
+                )
+            if self.decode_kernel == "paged":
+                bad(
+                    f"decode_kernel='paged' with mesh.tp={self.mesh.tp}: "
+                    "the fused paged kernel is single-device; use "
+                    "decode_kernel='auto' (resolves to the jnp gather "
+                    "oracle under tp>1)"
+                )
 
     @property
     def resolved_step_tokens(self) -> int:
@@ -155,11 +299,19 @@ class ServeConfig:
         return dataclasses.replace(self, **kw)
 
     def apply_to(self, lm_cfg):
-        """Slice the model-execution knobs onto an `LMConfig`."""
+        """Slice the model-execution knobs onto an `LMConfig`.
+
+        Under ``mesh.tp > 1`` a ``decode_kernel='auto'`` resolves to the
+        jnp gather oracle explicitly (the paged Pallas kernel is
+        single-device), so the engine never has to re-derive the routing
+        from the mesh."""
+        decode_kernel = self.decode_kernel
+        if self.mesh.tp > 1 and decode_kernel == "auto":
+            decode_kernel = "gather"
         return dataclasses.replace(
             lm_cfg,
             attn_backend=self.attn_backend,
-            decode_kernel=self.decode_kernel,
+            decode_kernel=decode_kernel,
         )
 
     # ------------------------- legacy flag shim -------------------------
@@ -207,12 +359,12 @@ class ServeConfig:
             if fld == "kv_reuse" and isinstance(val, str):
                 val = val == "on"
             overrides[fld] = val
-            used.append("--" + attr.replace("_", "-"))
+            used.append(f"--{attr.replace('_', '-')} -> {fld}={render_value(val)}")
         if used and warn:
             warnings.warn(
-                f"per-knob serve flags ({', '.join(used)}) are deprecated; "
-                "pass one --config key=value[,key=value...] ServeConfig "
-                "instead",
+                f"per-knob serve flags are deprecated; pass --config "
+                f"{','.join(f'{f}={render_value(v)}' for f, v in overrides.items())}"
+                f" instead ({'; '.join(used)})",
                 DeprecationWarning,
                 stacklevel=2,
             )
@@ -224,12 +376,18 @@ class ServeConfig:
         """Build a config from a compact ``key=value,key=value`` string —
         the launcher's new-style ``--config`` flag.  Values are coerced
         by the field's declared type; booleans accept on/off/true/false.
+        `MeshConfig` fields nest with a dot (``mesh.tp=4``,
+        ``mesh.mesh_shape=2x4``, ``mesh.axis_names=data+model``); the
+        grammar is total — `render` emits a string this method parses
+        back to an equal config.
         """
         base = base if base is not None else cls()
         if not spec.strip():
             return base
         fields = {f.name: f for f in dataclasses.fields(cls)}
+        mesh_fields = {f.name: f for f in dataclasses.fields(MeshConfig)}
         overrides: Dict[str, object] = {}
+        mesh_overrides: Dict[str, object] = {}
         for part in spec.split(","):
             part = part.strip()
             if not part:
@@ -238,17 +396,76 @@ class ServeConfig:
                 raise ValueError(f"--config entry {part!r} is not key=value")
             key, val = part.split("=", 1)
             key = key.strip()
+            if key.startswith("mesh."):
+                sub = key[len("mesh.") :]
+                if sub not in mesh_fields:
+                    raise ValueError(
+                        f"--config key {key!r} is not a MeshConfig field "
+                        f"(choose from {sorted('mesh.' + f for f in mesh_fields)})"
+                    )
+                mesh_overrides[sub] = _coerce(mesh_fields[sub], val.strip())
+                continue
+            if key == "mesh":
+                raise ValueError(
+                    "--config mesh is a sub-config: set its fields as "
+                    "mesh.tp=4, mesh.dp=2, mesh.mesh_shape=2x4, "
+                    "mesh.axis_names=data+model"
+                )
             if key not in fields:
                 raise ValueError(
                     f"--config key {key!r} is not a ServeConfig field "
                     f"(choose from {sorted(fields)})"
                 )
             overrides[key] = _coerce(fields[key], val.strip())
-        return base.replace(**overrides)
+        if mesh_overrides:
+            overrides["mesh"] = dataclasses.replace(base.mesh, **mesh_overrides)
+        return base.replace(**overrides) if overrides else base
+
+    def render(self) -> str:
+        """The ``--config`` string reproducing this config exactly:
+        ``ServeConfig.parse(cfg.render()) == cfg`` for every valid
+        config (the round-trip the grammar tests pin)."""
+        parts = []
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name == "mesh":
+                for mf in dataclasses.fields(MeshConfig):
+                    parts.append(f"mesh.{mf.name}={render_value(getattr(v, mf.name))}")
+            else:
+                parts.append(f"{f.name}={render_value(v)}")
+        return ",".join(parts)
+
+
+def render_value(v) -> str:
+    """One value in the ``--config`` grammar (`_coerce`'s inverse):
+    booleans as on/off, None as none, int tuples ``x``-joined (mesh
+    shapes, ``2x4``), string tuples ``+``-joined (axis names,
+    ``data+model``)."""
+    if isinstance(v, bool):
+        return "on" if v else "off"
+    if v is None:
+        return "none"
+    if isinstance(v, tuple):
+        if all(isinstance(x, int) for x in v):
+            return "x".join(str(x) for x in v)
+        return "+".join(str(x) for x in v)
+    return str(v)
 
 
 def _coerce(fld: dataclasses.Field, val: str):
     t = fld.type
+    if "Tuple" in t:
+        if val.lower() == "none" and "Optional" in t:
+            return None
+        if "int" in t:
+            try:
+                return tuple(int(x) for x in val.split("x"))
+            except ValueError:
+                raise ValueError(
+                    f"--config {fld.name}={val!r}: expected an "
+                    "'x'-separated int tuple like 2x4"
+                ) from None
+        return tuple(s for s in val.split("+") if s)
     if "bool" in t:
         low = val.lower()
         if low in ("on", "true", "1", "yes"):
@@ -386,18 +603,31 @@ class Completion:
 
 # ------------------------------------------------------- sliced builders
 def build_engine(params, lm_cfg, config: ServeConfig, pool=None, sel=None):
-    """`BatchEngine` from the config's engine/pool/reuse slice.  The
+    """`BatchEngine` from the config's engine/pool/reuse/mesh slice.  The
     returned engine's `cfg` carries the attention backend and decode
     kernel; `pool`/`sel` override only when a caller needs a bespoke
-    pool (tests) or selective budget."""
+    pool (tests) or selective budget.
+
+    With ``config.mesh`` enabled this is the one place the mesh becomes
+    physical: the param tree is placed by the `sharding.specs`
+    PartitionSpec trees and the paged KV arena is sharded over the
+    mesh's model axis — the jitted prefill/decode steps are unchanged
+    (GSPMD propagates the shardings and inserts the collectives)."""
     from repro.core import engine as ENG
     from repro.serving.batch_engine import BatchEngine
     from repro.serving.block_store import SharedBlockStore
     from repro.serving.kv_pool import pool_for
 
     cfg = config.apply_to(lm_cfg)
+    mesh = config.mesh.build()
+    if mesh is not None:
+        from repro.sharding.specs import shard_lm_params
+
+        params = shard_lm_params(params, cfg, mesh)
     if pool is None:
-        pool = pool_for(cfg, page_size=config.page_size, n_pages=config.n_pages)
+        pool = pool_for(
+            cfg, page_size=config.page_size, n_pages=config.n_pages, mesh=mesh
+        )
     if sel is None:
         sel = ENG.SelectiveConfig(r_item=config.r_item, r_rev=config.r_rev)
     return BatchEngine(
@@ -407,6 +637,7 @@ def build_engine(params, lm_cfg, config: ServeConfig, pool=None, sel=None):
         sel=sel,
         store=SharedBlockStore(pool) if config.kv_reuse else None,
         chunk_tokens=config.chunk_tokens,
+        mesh=mesh,
     )
 
 

@@ -271,10 +271,28 @@ class BatchEngine:
         store: Optional[BS.SharedBlockStore] = None,
         chunk_tokens: int = 128,
         eager_kv_writes: Optional[bool] = None,
+        mesh=None,
     ):
+        # `mesh` is the jax.sharding.Mesh the params/arenas were placed on
+        # (None = the classic unsharded engine).  The jitted steps need no
+        # mesh plumbing — GSPMD propagates the input shardings — so the
+        # engine only records it and rejects the single-device Pallas
+        # decode route, which cannot run over sharded arenas.
+        if (
+            mesh is not None
+            and dict(mesh.shape).get("model", 1) > 1
+            and ENG.decode_uses_paged(cfg)
+        ):
+            raise ValueError(
+                f"decode_kernel={cfg.decode_kernel!r} routes decode through "
+                f"the single-device paged kernel, but the mesh model axis "
+                f"has {dict(mesh.shape)['model']} devices: use "
+                "decode_kernel='auto'/'gather' under tensor parallelism"
+            )
+        self.mesh = mesh
         self.params = params
         self.cfg = cfg
-        self.pool = pool if pool is not None else pool_for(cfg)
+        self.pool = pool if pool is not None else pool_for(cfg, mesh=mesh)
         self.sel = sel or ENG.SelectiveConfig()
         self.bucket = bucket
         self.decode_bucket = decode_bucket

@@ -14,8 +14,11 @@ shard lacks one of its item blocks triggers an explicit transfer step —
 the bytes are pulled from the holder shard through
 `core.item_cache.ShardClient` (ledgered per block) and the worker's
 clock is charged the modeled network time (`core.cost_model.fetch_time_s`
-with the paper's 100 Gbps interconnect).  Routing therefore changes
-*where* a request runs and what it costs, never *what* it decodes: the
+with the paper's 100 Gbps interconnect) — or, with `config.mesh`
+enabled, the *measured* wall time of a real `jax.device_put`
+device-to-device copy between the workers' home devices.  Routing
+therefore changes *where* a request runs and what it costs, never
+*what* it decodes: the
 staged bytes are identical on every worker, which the parity tests pin
 down.
 
@@ -192,9 +195,14 @@ class ClusterEngine:
             unknown = sorted(set(legacy) - self.LEGACY_KW)
             if unknown:
                 raise TypeError(f"unknown ClusterEngine kwargs: {unknown}")
+            keys = ",".join(
+                f"{k}={API.render_value(v)}"
+                for k, v in sorted(legacy.items())
+                if v is not None
+            )
             warnings.warn(
                 "per-knob ClusterEngine keywords are deprecated; pass one "
-                "api.ServeConfig",
+                f"api.ServeConfig (--config {keys})",
                 DeprecationWarning,
                 stacklevel=2,
             )
@@ -234,12 +242,24 @@ class ClusterEngine:
         self.cfg = config.apply_to(system.cfg)
         self.kv_reuse = config.kv_reuse
         self._item_keys: Dict[int, tuple] = {}
+        # under a real mesh each worker gets a home device (round-robin
+        # over the host's devices): cross-shard item pulls become real
+        # jax.device_put device-to-device copies whose *measured* wall
+        # time is billed instead of the modeled network time
+        self.worker_devices = None
+        if config.mesh.enabled:
+            import jax
+
+            devs = jax.devices()
+            self.worker_devices = [devs[w % len(devs)] for w in range(k)]
         self.backends: List[ClusterWorkerBackend] = []
         for w in range(k):
             engine = API.build_engine(system.params, system.cfg, config, sel=sel)
             shard = None
             if system.item_store is not None:
-                shard = IC.ShardClient(system.item_store, w)
+                shard = IC.ShardClient(
+                    system.item_store, w, devices=self.worker_devices
+                )
             backend = ClusterWorkerBackend(engine, shard, mode=mode, hw=hw)
             self.backends.append(backend)
         self.scheduler = SCH.ClusterScheduler(
@@ -348,9 +368,16 @@ class ClusterEngine:
                 instr_len=len(system.instruction),
             )
         if moved_tokens:
-            backend.pending_transfer_s[req.rid] = CM.fetch_time_s(
-                system.cfg, self.hw, 0, moved_tokens
-            )
+            if backend.shard.measures:
+                # real device-to-device copies: bill what the wall clock
+                # actually measured for this dispatch's pulls
+                backend.pending_transfer_s[req.rid] = (
+                    backend.shard.take_measured_s()
+                )
+            else:
+                backend.pending_transfer_s[req.rid] = CM.fetch_time_s(
+                    system.cfg, self.hw, 0, moved_tokens
+                )
 
     # -------------------------------- run ---------------------------------
     def run(self, trace: Sequence, decode_steps: int = 4) -> ClusterReport:

@@ -38,6 +38,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -100,13 +101,34 @@ class PagedKVPool:
 
     def __init__(self, n_layers: int, n_kv_heads: int, head_dim: int,
                  page_size: int = 16, n_pages: int = 512,
-                 dtype: str = "float32"):
+                 dtype: str = "float32", mesh=None):
         self.page_size = int(page_size)
         self.n_pages = int(n_pages)
         self.n_layers = n_layers
+        self.mesh = mesh
         shape = (self.n_pages, self.page_size, n_layers, n_kv_heads, head_dim)
-        self.arena_k = jnp.zeros(shape, jnp.dtype(dtype))
-        self.arena_v = jnp.zeros(shape, jnp.dtype(dtype))
+        arena_k = jnp.zeros(shape, jnp.dtype(dtype))
+        arena_v = jnp.zeros(shape, jnp.dtype(dtype))
+        if mesh is not None:
+            # per-device arena planes: each device holds every page but
+            # only its slice of the kv-head axis (the wk/wv head split).
+            # Slot tables and page bookkeeping below stay host-side numpy
+            # and device-agnostic; eager `.at[].set` scatters and decode
+            # gathers on the placed arenas preserve this sharding, so no
+            # write/read path changes
+            from repro.sharding.specs import serving_arena_spec
+
+            msz = dict(mesh.shape).get("model", 1)
+            if n_kv_heads % msz:
+                raise ValueError(
+                    f"arena kv-head axis of {n_kv_heads} cannot shard over "
+                    f"the mesh model axis of {msz} devices (mesh.tp={msz}): "
+                    f"pick a tp dividing n_kv_heads")
+            sharding = jax.sharding.NamedSharding(mesh, serving_arena_spec())
+            arena_k = jax.device_put(arena_k, sharding)
+            arena_v = jax.device_put(arena_v, sharding)
+        self.arena_k = arena_k
+        self.arena_v = arena_v
         # page 0 is reserved as scratch: padded decode-batch rows write
         # their dummy token there, and padded slot-table entries point at
         # it (reads are masked by seq_lens).  It is never allocated.
@@ -532,8 +554,9 @@ def page_views(tables: np.ndarray, lens: np.ndarray,
     return page_ids, slot_pos
 
 
-def pool_for(cfg: LMConfig, page_size: int = 16, n_pages: int = 512
-             ) -> PagedKVPool:
-    """Pool sized from a model config (serving launcher convenience)."""
+def pool_for(cfg: LMConfig, page_size: int = 16, n_pages: int = 512,
+             mesh=None) -> PagedKVPool:
+    """Pool sized from a model config (serving launcher convenience).
+    With `mesh`, the arenas are sharded over its model axis."""
     return PagedKVPool(cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim,
-                       page_size=page_size, n_pages=n_pages)
+                       page_size=page_size, n_pages=n_pages, mesh=mesh)

@@ -21,8 +21,8 @@ def _ns(mesh, spec):
 
 def tree_shardings(mesh, spec_tree):
     return jax.tree_util.tree_map(
-        lambda s: _ns(mesh, s), spec_tree,
-        is_leaf=lambda x: isinstance(x, P))
+        lambda s: _ns(mesh, s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -55,9 +55,11 @@ def lm_param_specs(cfg: LMConfig, mesh, *, mode: str = "train") -> Dict[str, Any
     if cfg.moe is not None:
         # experts over model (EP) + expert-ff over data: both axes carry the
         # (potentially TB-scale) expert weights even during training.
-        moe = {"router": P(None, None, None),
-               "w_up": P(None, m, None, dax),
-               "w_down": P(None, m, dax, None)}
+        moe = {
+            "router": P(None, None, None),
+            "w_up": P(None, m, None, dax),
+            "w_down": P(None, m, dax, None),
+        }
         if cfg.mlp_type in ("swiglu", "geglu"):
             moe["w_gate"] = P(None, m, None, dax)
         layer["moe"] = moe
@@ -77,6 +79,38 @@ def lm_param_specs(cfg: LMConfig, mesh, *, mode: str = "train") -> Dict[str, Any
     return specs
 
 
+def serving_arena_spec() -> P:
+    """Paged KV arena (n_pages, page_size, L, Hkv, Dh): kv heads over the
+    model axis — the same head split as wk/wv, so the decode gather and
+    the per-layer arena scatters stay local to each device's plane.
+    Pages/slots replicate (slot tables are host-side numpy and
+    device-agnostic: one logical page id addresses every device's slice
+    of that page)."""
+    return P(None, None, None, "model", None)
+
+
+def check_serving_divisibility(cfg: LMConfig, mesh) -> None:
+    """Serving tensor parallelism splits whole heads: both head counts
+    must divide by the model-axis size (no padded-shard fallback — a
+    config error here names the two knobs instead of degrading)."""
+    msz = mesh.shape["model"]
+    if cfg.n_heads % msz or cfg.n_kv_heads % msz:
+        raise ValueError(
+            f"mesh model axis of {msz} devices (mesh.tp={msz}) must divide "
+            f"n_heads={cfg.n_heads} and n_kv_heads={cfg.n_kv_heads}: pick a "
+            f"tp dividing both, or a model with more kv heads"
+        )
+
+
+def shard_lm_params(params, cfg: LMConfig, mesh):
+    """Place a host-resident LM param tree onto the mesh by
+    `lm_param_specs` (dense serving layout).  The jitted engine steps
+    need no changes — GSPMD propagates these shardings and inserts the
+    tensor-parallel collectives."""
+    check_serving_divisibility(cfg, mesh)
+    return jax.device_put(params, tree_shardings(mesh, lm_param_specs(cfg, mesh)))
+
+
 def zero_shard(spec_tree, shape_tree, mesh):
     """ZeRO-style sharding for optimizer moments: take each tensor's spec and
     shard the first still-replicated, divisible dim over the data axis."""
@@ -89,7 +123,7 @@ def zero_shard(spec_tree, shape_tree, mesh):
         for d in dims:
             for a in (d if isinstance(d, tuple) else (d,)):
                 used.add(a)
-        if any(a in used for a in dax):      # already data-sharded somewhere
+        if any(a in used for a in dax):  # already data-sharded somewhere
             return P(*dims)
         for i, (ax, size) in enumerate(zip(dims, sds.shape)):
             if ax is None and size % dsz == 0 and size >= dsz:
@@ -97,8 +131,9 @@ def zero_shard(spec_tree, shape_tree, mesh):
                 return P(*dims)
         return P(*dims)
 
-    return jax.tree_util.tree_map(one, spec_tree, shape_tree,
-                                  is_leaf=lambda x: isinstance(x, P))
+    return jax.tree_util.tree_map(
+        one, spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P)
+    )
 
 
 def lm_opt_state_specs(opt_abstract, param_specs, params_abstract, mesh):
@@ -127,14 +162,13 @@ def lm_opt_state_specs(opt_abstract, param_specs, params_abstract, mesh):
             for key in st:
                 if key == "v":
                     out["v"] = P(*dims)
-                elif key == "vr":      # param dims minus last
+                elif key == "vr":  # param dims minus last
                     out["vr"] = P(*dims[:-1])
-                elif key == "vc":      # param dims minus second-to-last
+                elif key == "vc":  # param dims minus second-to-last
                     out["vc"] = P(*(dims[:-2] + dims[-1:]))
             return out
 
-        flat_out = [one(s, p, st) for s, p, st in
-                    zip(flat_spec, flat_p, flat_state)]
+        flat_out = [one(s, p, st) for s, p, st in zip(flat_spec, flat_p, flat_state)]
         return tdef.unflatten(flat_out)
 
     return OptState(step=P(), inner=map_inner(opt_abstract.inner))
@@ -149,9 +183,11 @@ def lm_input_specs(cfg: LMConfig, mesh, step: str, dims: Dict[str, int]):
     if step == "prefill":
         return {"tokens": P(dax, None)}
     if step == "decode":
-        return {"tokens": P(dax, None) if b % dsz == 0 else P(None, None),
-                "cache": lm_cache_spec(cfg, mesh, b, dims["seq"]),
-                "positions": P(dax) if b % dsz == 0 else P(None)}
+        return {
+            "tokens": P(dax, None) if b % dsz == 0 else P(None, None),
+            "cache": lm_cache_spec(cfg, mesh, b, dims["seq"]),
+            "positions": P(dax) if b % dsz == 0 else P(None),
+        }
     raise ValueError(step)
 
 
@@ -167,7 +203,7 @@ def lm_cache_spec(cfg: LMConfig, mesh, batch: int, seq: int):
         if cfg.n_kv_heads % msz == 0:
             spec = P(None, dax, None, m, None)
         else:
-            spec = P(None, dax, m, None, None)       # shard sequence on model
+            spec = P(None, dax, m, None, None)  # shard sequence on model
     else:
         # tiny batch (long_500k): shard the sequence across everything
         all_ax = tuple(dax) + (m,)
@@ -190,6 +226,7 @@ def recsys_param_specs(cfg: RecsysConfig, mesh) -> Dict[str, Any]:
         return P(*([None] * leaf.ndim))
 
     from repro.recsys import models as RM
+
     abstract = RM.abstract_params(cfg)
     return jax.tree_util.tree_map_with_path(spec_of, abstract)
 
@@ -204,6 +241,7 @@ def recsys_input_specs(cfg: RecsysConfig, mesh, step: str, dims: Dict[str, int])
         return P(bspec, *([None] * (len(leaf_shape) - 1)))
 
     from repro.configs.registry import input_specs as reg_specs
+
     specs = reg_specs(cfg.name, _shape_name_of(cfg, step, dims))
     out = {}
     for k, v in specs.items():
@@ -221,6 +259,7 @@ def recsys_input_specs(cfg: RecsysConfig, mesh, step: str, dims: Dict[str, int])
 
 def _shape_name_of(cfg, step, dims):
     from repro.configs.registry import SHAPES
+
     for name, s in SHAPES["recsys"].items():
         if s.step == step and s.dims.get("batch") == dims.get("batch"):
             return name
@@ -232,8 +271,7 @@ def _shape_name_of(cfg, step, dims):
 # ---------------------------------------------------------------------------
 
 def gnn_param_specs(params_abstract, mesh):
-    return jax.tree_util.tree_map(
-        lambda l: P(*([None] * l.ndim)), params_abstract)
+    return jax.tree_util.tree_map(lambda l: P(*([None] * l.ndim)), params_abstract)
 
 
 def gnn_input_specs(mesh, shape_name: str, spec_shapes: Dict[str, Any]):
@@ -247,13 +285,16 @@ def gnn_input_specs(mesh, shape_name: str, spec_shapes: Dict[str, Any]):
                 # shard flat edge arrays only when divisible (pjit argument
                 # constraint); the step pads + re-shards internally otherwise
                 out[k] = P(edge_ax) if v.shape[0] % esz == 0 else P(None)
-            else:                         # molecule regime: (B, E)
+            else:  # molecule regime: (B, E)
                 out[k] = P(dax, None)
         elif k in ("atom_types", "positions", "targets") and shape_name == "molecule":
             out[k] = P(*([dax] + [None] * (len(v.shape) - 1)))
-        elif (k == "node_feat" and v.shape[0] * v.shape[1] > 2**27
-              and v.shape[0] % axis_size(mesh, dax) == 0):
-            out[k] = P(dax, None)         # huge node features, if divisible
+        elif (
+            k == "node_feat"
+            and v.shape[0] * v.shape[1] > 2**27
+            and v.shape[0] % axis_size(mesh, dax) == 0
+        ):
+            out[k] = P(dax, None)  # huge node features, if divisible
         else:
             out[k] = P(*([None] * len(v.shape)))
     return out
