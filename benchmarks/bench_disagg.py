@@ -1,0 +1,264 @@
+"""Disaggregated prefill/decode serving benchmark: migration vs re-prefill.
+
+One heavy-tail trace (`serving/workload.heavy_tail_trace`) runs through
+the two-worker jax cluster twice — unified (both workers admit and
+decode) and disaggregated (`disagg.prefill_workers=1,decode_workers=1`,
+every multi-step request migrates its KV from the prefill worker to the
+decode worker over the block-store transport).  Decoded tokens must be
+identical (`token_parity`, gated at 0.99 by check_regression; asserted
+== 1.0 on full runs) — disaggregation is a placement change, not a
+numerics change.
+
+The relay question RelayGR/MTServe pose is *what a handoff costs*: a
+decode stage can take over a request either by importing the prefill
+stage's KV bytes (migration) or by recomputing the prefill from the
+prompt (re-prefill).  The second half of the bench measures both, per
+request, with wall clocks: `mig_s` times a `jax.device_put` of exactly
+the bytes `migration_bytes` says would travel (private pages + store
+payloads whose content key misses on the destination — digest hits ride
+for free, the beyond-prefix fast path), mirroring the measured
+`ShardClient.pull` billing the cluster uses; `reprefill_s` times the
+same request's full chunked prefill on a warm engine.  Charging each
+discipline's handoff latency ahead of first-token delivery gives the
+relay TTFT distributions whose p99 ratio
+(`p99_ttft_reprefill_vs_migration`) is the headline: moving a few
+megabytes of KV beats re-running the model over hundreds of prompt
+tokens.
+
+Emits the standard ``name,us_per_call,derived`` CSV rows plus
+``disagg.json`` in `out_dir`; ``--quick`` shrinks the trace (CI).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.rcllm import make_tiny_system
+from repro.serving import api as API
+from repro.serving.batch_engine import BatchEngine, migration_bytes
+from repro.serving.block_store import SharedBlockStore
+from repro.serving.cluster import ClusterEngine
+from repro.serving.kv_pool import pool_for
+from repro.serving.workload import heavy_tail_trace, rcllm_batch_requests
+
+POOL_PAGES = 1024
+LONG_PROMPT_FRAC = 0.4
+CHUNK_TOKENS = 256
+
+
+def _ttfts(report):
+    out = {}
+    for c in report.completions:
+        out[c.rid] = c.first_token_s - c.arrival_s
+    return out
+
+
+def _stats(vals):
+    arr = np.asarray(sorted(vals))
+    return {
+        "ttft_p50_s": float(np.percentile(arr, 50)),
+        "ttft_p99_s": float(np.percentile(arr, 99)),
+        "ttft_mean_s": float(arr.mean()),
+    }
+
+
+def _run_cluster(system, trace, disagg, decode_steps):
+    cfg = API.ServeConfig(
+        engine="jax",
+        k=2,
+        sched="chunked",
+        kv_reuse=True,
+        n_pages=POOL_PAGES,
+        chunk_tokens=CHUNK_TOKENS,
+        disagg=disagg,
+    )
+    return ClusterEngine(system, cfg).run(trace, decode_steps=decode_steps)
+
+
+def _mk_engine(system):
+    pool = pool_for(system.cfg, n_pages=POOL_PAGES)
+    return BatchEngine(
+        system.params,
+        system.cfg,
+        pool=pool,
+        store=SharedBlockStore(pool),
+        chunk_tokens=CHUNK_TOKENS,
+    )
+
+
+def _prefill_chunked(eng, req):
+    """Full chunked prefill of one request on `eng`. -> seconds."""
+    t0 = time.perf_counter()
+    eng.begin_prefill(req)
+    while req.rid in eng.prefill_states:
+        eng.step(10_000, [], [], [req.rid])
+    return time.perf_counter() - t0
+
+
+def _handoff_economics(system, trace):
+    """Measured per-request handoff cost: KV transfer vs recompute."""
+    import jax
+
+    eng_src = _mk_engine(system)  # the prefill stage
+    eng_dst = _mk_engine(system)  # the decode stage (import target)
+    eng_rep = _mk_engine(system)  # the re-prefill counterfactual
+    reqs = rcllm_batch_requests(system, trace, n_reserve=2)
+    # warm pass: jax jit caches by shape globally, so after the source
+    # prefills everything once, the re-prefill timings below are pure
+    # recompute — the comparison is deliberately generous to re-prefill
+    mig_s, reprefill_s, moved_mb, digest_hits = [], [], [], 0
+    for req in reqs:
+        _prefill_chunked(eng_src, req)
+        rec = eng_src.export_request_kv(req.rid)
+        # exactly the bytes the content-addressed transport would move:
+        # private pages always, store payloads only on a digest miss
+        store_d = eng_dst.store
+        moved = [rec.export.page_k, rec.export.page_v]
+        for key, payload in rec.payloads.items():
+            if store_d is None or not store_d.has(key):
+                moved += [payload.host_k, payload.host_v]
+        assert sum(a.nbytes for a in moved) == migration_bytes(rec, store_d)
+        t0 = time.perf_counter()
+        staged = jax.device_put(moved)
+        jax.block_until_ready(staged)
+        mig = time.perf_counter() - t0
+        counters = eng_dst.import_request_kv(rec)
+        digest_hits += counters["digest_hits"]
+        moved_mb.append(counters["bytes"] / 1e6)
+        rep = _prefill_chunked(eng_rep, req)
+        mig_s.append(mig)
+        reprefill_s.append(rep)
+        for eng in (eng_src, eng_dst, eng_rep):
+            eng.release(req.rid)
+    return (
+        {r.rid: s for r, s in zip(reqs, mig_s)},
+        {r.rid: s for r, s in zip(reqs, reprefill_s)},
+        float(np.mean(moved_mb)),
+        digest_hits,
+    )
+
+
+def run(out_dir: str = "results/bench", quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    n_req = 10 if quick else 20
+    decode_steps = 4
+
+    system, pool_rv, prof, _ = make_tiny_system(
+        n_items=60, n_requests_hist=30, k_instances=2, n_layers=4, d_model=32
+    )
+    trace = heavy_tail_trace(
+        system.catalog,
+        pool_rv,
+        prof,
+        n_req,
+        qps=60.0,
+        n_users=n_req,
+        long_prompt_frac=LONG_PROMPT_FRAC,
+        long_prompt_reviews=6,
+        seed=5,
+    )
+
+    rep_uni = _run_cluster(system, trace, API.DisaggConfig(), decode_steps)
+    rep_dis = _run_cluster(
+        system,
+        trace,
+        API.DisaggConfig(prefill_workers=1, decode_workers=1),
+        decode_steps,
+    )
+    gen_uni = {r: tuple(t) for r, t in rep_uni.generated.items()}
+    gen_dis = {r: tuple(t) for r, t in rep_dis.generated.items()}
+    parity = float(
+        np.mean([gen_uni[r] == gen_dis.get(r) for r in gen_uni])
+    )
+    dec = rep_dis.workers[1]
+    ttft_uni, ttft_dis = _ttfts(rep_uni), _ttfts(rep_dis)
+
+    mig_s, reprefill_s, moved_mb, digest_hits = _handoff_economics(
+        system, trace
+    )
+    # relay TTFT: first-token delivery with each handoff discipline's
+    # measured latency charged ahead of it (migration ships KV bytes;
+    # re-prefill recomputes the prompt on the decode stage)
+    relay_mig = [ttft_dis[r] + mig_s[r] for r in ttft_dis]
+    relay_rep = [ttft_dis[r] + reprefill_s[r] for r in ttft_dis]
+    p99_mig = float(np.percentile(relay_mig, 99))
+    p99_rep = float(np.percentile(relay_rep, 99))
+
+    out = {
+        "requests": n_req,
+        "long_prompt_frac": LONG_PROMPT_FRAC,
+        "chunk_tokens": CHUNK_TOKENS,
+        "decode_steps": decode_steps,
+        "protocol": "unified vs disagg(1+1) on one heavy-tail trace; "
+        "handoff economics measured per request (device_put of the "
+        "exact migration bytes vs full chunked re-prefill on a warm "
+        "engine), charged ahead of first-token delivery",
+        "token_parity": parity,
+        "unified": _stats(ttft_uni.values()),
+        "disagg": {
+            **_stats(ttft_dis.values()),
+            "migrations": dec.migrations,
+            "migrated_pages": dec.migrated_pages,
+            "migration_mbytes": round(dec.migration_bytes / 1e6, 3),
+            "migration_s": round(dec.migration_s, 6),
+            "migration_digest_hits": dec.migration_digest_hits,
+        },
+        "p99_ttft_vs_unified": float(
+            np.percentile(list(ttft_uni.values()), 99)
+            / max(np.percentile(list(ttft_dis.values()), 99), 1e-9)
+        ),
+        "handoff": {
+            "mig_p50_s": float(np.percentile(list(mig_s.values()), 50)),
+            "mig_p99_s": float(np.percentile(list(mig_s.values()), 99)),
+            "reprefill_p50_s": float(
+                np.percentile(list(reprefill_s.values()), 50)
+            ),
+            "reprefill_p99_s": float(
+                np.percentile(list(reprefill_s.values()), 99)
+            ),
+            "moved_mbytes_mean": round(moved_mb, 3),
+            "digest_hits": digest_hits,
+        },
+        "relay_ttft_p99_migration_s": p99_mig,
+        "relay_ttft_p99_reprefill_s": p99_rep,
+        "p99_ttft_reprefill_vs_migration": p99_rep / max(p99_mig, 1e-9),
+    }
+    emit(
+        "disagg/unified",
+        out["unified"]["ttft_p99_s"] * 1e6,
+        f"ttft_mean={out['unified']['ttft_mean_s']:.4f}s",
+    )
+    emit(
+        "disagg/disagg",
+        out["disagg"]["ttft_p99_s"] * 1e6,
+        f"migrations={dec.migrations} "
+        f"moved={out['disagg']['migration_mbytes']:.2f}MB "
+        f"digest_hits={dec.migration_digest_hits} "
+        f"parity={parity:.2f}",
+    )
+    emit(
+        "disagg/handoff",
+        out["handoff"]["mig_p99_s"] * 1e6,
+        f"reprefill_p99={out['handoff']['reprefill_p99_s']:.4f}s "
+        f"relay_speedup={out['p99_ttft_reprefill_vs_migration']:.2f}x",
+    )
+    assert parity == 1.0, (
+        "disaggregation changed decoded tokens (must be bitwise equal): "
+        f"parity={parity:.3f}"
+    )
+    if not quick:
+        assert out["p99_ttft_reprefill_vs_migration"] > 1.0, (
+            "migrating KV must beat re-prefilling it on relay p99 TTFT: "
+            f"{out['p99_ttft_reprefill_vs_migration']:.3f}x"
+        )
+
+    with open(os.path.join(out_dir, "disagg.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    run(quick=True)

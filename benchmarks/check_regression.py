@@ -104,6 +104,20 @@ METRICS = (
     Metric("mesh.json", ("tp", "1", "ttft_mean_s"), "time"),
     Metric("mesh.json", ("tp", "2", "ttft_mean_s"), "time"),
     Metric("mesh.json", ("token_parity",), "floor", floor=0.99),
+    # disaggregated serving: role-splitting must never change decoded
+    # tokens (bench_disagg also asserts == 1.0), and migrating KV bytes
+    # must beat re-prefilling them on relay p99 TTFT with the measured
+    # transfer billing included; the disagg cluster's own tail is gated
+    # against its committed baseline, and the vs-unified ratio only
+    # guards structural collapse (1 prefill + 1 decode worker trades
+    # peak throughput for tail isolation, so parity is not guaranteed)
+    Metric("disagg.json", ("token_parity",), "floor", floor=0.99),
+    Metric("disagg.json", ("disagg", "ttft_p99_s"), "time"),
+    Metric(
+        "disagg.json", ("p99_ttft_reprefill_vs_migration",), "floor",
+        floor=1.0,
+    ),
+    Metric("disagg.json", ("p99_ttft_vs_unified",), "floor", floor=0.4),
 )
 
 

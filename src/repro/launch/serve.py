@@ -220,6 +220,15 @@ def run_jax_cluster(config: ServeConfig, args) -> dict:
         "decode_kernel": config.decode_kernel,
         "kv_reuse": "on" if config.kv_reuse else "off",
         "mesh": _mesh_info(config),
+        "disagg": (
+            {
+                "prefill_workers": config.disagg.prefill_workers,
+                "decode_workers": config.disagg.decode_workers,
+                "mig_gamma": config.disagg.mig_gamma,
+            }
+            if config.disagg.enabled
+            else None
+        ),
         "policy": rep.policy,
         "requests": len(rep.completions),
         "decode_steps": config.decode_steps,
@@ -232,6 +241,11 @@ def run_jax_cluster(config: ServeConfig, args) -> dict:
         "per_worker": [
             {
                 "worker": w.worker,
+                "role": (
+                    config.disagg.role_of(w.worker)
+                    if config.disagg.enabled
+                    else "unified"
+                ),
                 "requests": w.n_requests,
                 "mean_hit_rate": (
                     round(w.mean_hit_rate, 4)
@@ -245,6 +259,12 @@ def run_jax_cluster(config: ServeConfig, args) -> dict:
                 "pool_peak_pages": w.pool_peak_pages,
                 "busy_seconds": round(w.busy_seconds, 4),
                 "preempted": w.preempted,
+                "migrations": w.migrations,
+                "migrated_out": w.migrated_out,
+                "migrated_pages": w.migrated_pages,
+                "migration_mbytes": round(w.migration_bytes / 1e6, 3),
+                "migration_s": round(w.migration_s, 6),
+                "migration_digest_hits": w.migration_digest_hits,
                 "kv_reuse": w.kv_reuse,
             }
             for w in rep.workers

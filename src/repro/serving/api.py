@@ -172,6 +172,64 @@ class MeshConfig:
 
 
 @dataclass(frozen=True)
+class DisaggConfig:
+    """The typed disaggregation surface: how many cluster workers serve
+    each role, and how migration routing trades affinity against bytes.
+
+    ``prefill_workers`` / ``decode_workers`` split the cluster's ``k``
+    workers into role-typed halves: prefill workers admit and prefill
+    (sampling each request's first token), then hand the finished — or
+    chunk-partial — KV to a decode worker over the block-store
+    transport; decode workers never admit.  The default
+    ``DisaggConfig()`` is *disabled*: every worker is ``unified`` and
+    the stack runs byte-for-byte as before.  ``mig_gamma`` weights the
+    migration-byte term added to the Eq. 2 affinity score when choosing
+    the decode worker (a candidate already holding the request's store
+    blocks by digest moves fewer bytes and scores higher).
+    """
+
+    prefill_workers: int = 0
+    decode_workers: int = 0
+    mig_gamma: float = 0.25
+
+    def __post_init__(self):
+        def bad(msg: str):
+            raise ValueError(f"invalid DisaggConfig: {msg}")
+
+        if self.prefill_workers < 0 or self.decode_workers < 0:
+            bad(
+                f"prefill_workers={self.prefill_workers}/"
+                f"decode_workers={self.decode_workers} must be >= 0"
+            )
+        if (self.prefill_workers > 0) != (self.decode_workers > 0):
+            bad(
+                f"prefill_workers={self.prefill_workers} and "
+                f"decode_workers={self.decode_workers}: both roles need "
+                "at least one worker (0/0 disables disaggregation)"
+            )
+        if self.mig_gamma < 0:
+            bad(f"mig_gamma={self.mig_gamma} must be >= 0")
+
+    @property
+    def enabled(self) -> bool:
+        """Does this config split roles at all?  The default
+        ``DisaggConfig()`` is disabled — every worker is unified and
+        every existing flow is preserved byte-for-byte."""
+        return self.prefill_workers > 0
+
+    @property
+    def n_workers(self) -> int:
+        return self.prefill_workers + self.decode_workers
+
+    def role_of(self, wid: int) -> str:
+        """Worker role by cluster index: the first ``prefill_workers``
+        ids prefill, the rest decode; 'unified' when disabled."""
+        if not self.enabled:
+            return "unified"
+        return "prefill" if wid < self.prefill_workers else "decode"
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     """Every serving knob, validated once, threaded everywhere.
 
@@ -199,6 +257,7 @@ class ServeConfig:
     r_item: float = 0.3
     r_rev: float = 0.3
     mesh: MeshConfig = field(default_factory=MeshConfig)
+    disagg: DisaggConfig = field(default_factory=DisaggConfig)
 
     def __post_init__(self):
         def bad(msg: str):
@@ -269,6 +328,24 @@ class ServeConfig:
                 f"mesh.tp={self.mesh.tp}/mesh.dp={self.mesh.dp} needs "
                 f"engine='jax' (engine={self.engine!r} runs no devices)"
             )
+        if not isinstance(self.disagg, DisaggConfig):
+            bad(
+                f"disagg must be a DisaggConfig, got "
+                f"{type(self.disagg).__name__}"
+            )
+        if self.disagg.enabled:
+            if self.engine != "jax":
+                bad(
+                    f"disagg.prefill_workers={self.disagg.prefill_workers} "
+                    f"needs engine='jax' (engine={self.engine!r} has no KV "
+                    "to migrate)"
+                )
+            if self.k != self.disagg.n_workers:
+                bad(
+                    f"k={self.k} must equal disagg.prefill_workers + "
+                    f"disagg.decode_workers = {self.disagg.n_workers} "
+                    "(every cluster worker gets exactly one role)"
+                )
         if self.mesh.tp > 1:
             # the Mosaic/Pallas kernels are single-device programs: under
             # tensor parallelism GSPMD partitions the jnp reference paths
@@ -376,18 +453,22 @@ class ServeConfig:
         """Build a config from a compact ``key=value,key=value`` string —
         the launcher's new-style ``--config`` flag.  Values are coerced
         by the field's declared type; booleans accept on/off/true/false.
-        `MeshConfig` fields nest with a dot (``mesh.tp=4``,
-        ``mesh.mesh_shape=2x4``, ``mesh.axis_names=data+model``); the
-        grammar is total — `render` emits a string this method parses
-        back to an equal config.
+        Sub-config fields nest with a dot (``mesh.tp=4``,
+        ``mesh.mesh_shape=2x4``, ``mesh.axis_names=data+model``,
+        ``disagg.prefill_workers=2``); the grammar is total — `render`
+        emits a string this method parses back to an equal config.
         """
         base = base if base is not None else cls()
         if not spec.strip():
             return base
         fields = {f.name: f for f in dataclasses.fields(cls)}
-        mesh_fields = {f.name: f for f in dataclasses.fields(MeshConfig)}
+        subs = {"mesh": MeshConfig, "disagg": DisaggConfig}
+        sub_fields = {
+            name: {f.name: f for f in dataclasses.fields(t)}
+            for name, t in subs.items()
+        }
         overrides: Dict[str, object] = {}
-        mesh_overrides: Dict[str, object] = {}
+        sub_overrides: Dict[str, Dict[str, object]] = {n: {} for n in subs}
         for part in spec.split(","):
             part = part.strip()
             if not part:
@@ -396,20 +477,28 @@ class ServeConfig:
                 raise ValueError(f"--config entry {part!r} is not key=value")
             key, val = part.split("=", 1)
             key = key.strip()
-            if key.startswith("mesh."):
-                sub = key[len("mesh.") :]
-                if sub not in mesh_fields:
+            prefix = key.split(".", 1)[0]
+            if "." in key and prefix in subs:
+                sub = key[len(prefix) + 1 :]
+                flds = sub_fields[prefix]
+                if sub not in flds:
                     raise ValueError(
-                        f"--config key {key!r} is not a MeshConfig field "
-                        f"(choose from {sorted('mesh.' + f for f in mesh_fields)})"
+                        f"--config key {key!r} is not a "
+                        f"{subs[prefix].__name__} field (choose from "
+                        f"{sorted(prefix + '.' + f for f in flds)})"
                     )
-                mesh_overrides[sub] = _coerce(mesh_fields[sub], val.strip())
+                sub_overrides[prefix][sub] = _coerce(flds[sub], val.strip())
                 continue
-            if key == "mesh":
+            if key in subs:
+                examples = {
+                    "mesh": "mesh.tp=4, mesh.dp=2, mesh.mesh_shape=2x4, "
+                    "mesh.axis_names=data+model",
+                    "disagg": "disagg.prefill_workers=2, "
+                    "disagg.decode_workers=2, disagg.mig_gamma=0.25",
+                }
                 raise ValueError(
-                    "--config mesh is a sub-config: set its fields as "
-                    "mesh.tp=4, mesh.dp=2, mesh.mesh_shape=2x4, "
-                    "mesh.axis_names=data+model"
+                    f"--config {key} is a sub-config: set its fields as "
+                    f"{examples[key]}"
                 )
             if key not in fields:
                 raise ValueError(
@@ -417,8 +506,11 @@ class ServeConfig:
                     f"(choose from {sorted(fields)})"
                 )
             overrides[key] = _coerce(fields[key], val.strip())
-        if mesh_overrides:
-            overrides["mesh"] = dataclasses.replace(base.mesh, **mesh_overrides)
+        for name, ov in sub_overrides.items():
+            if ov:
+                overrides[name] = dataclasses.replace(
+                    getattr(base, name), **ov
+                )
         return base.replace(**overrides) if overrides else base
 
     def render(self) -> str:
@@ -426,11 +518,14 @@ class ServeConfig:
         ``ServeConfig.parse(cfg.render()) == cfg`` for every valid
         config (the round-trip the grammar tests pin)."""
         parts = []
+        subs = {"mesh": MeshConfig, "disagg": DisaggConfig}
         for f in dataclasses.fields(self):
             v = getattr(self, f.name)
-            if f.name == "mesh":
-                for mf in dataclasses.fields(MeshConfig):
-                    parts.append(f"mesh.{mf.name}={render_value(getattr(v, mf.name))}")
+            if f.name in subs:
+                for mf in dataclasses.fields(subs[f.name]):
+                    parts.append(
+                        f"{f.name}.{mf.name}={render_value(getattr(v, mf.name))}"
+                    )
             else:
                 parts.append(f"{f.name}={render_value(v)}")
         return ",".join(parts)

@@ -54,7 +54,13 @@ from repro.kernels.paged_attention.ops import paged_decode_mha
 from repro.kernels.paged_attention.ref import masked_decode_attention_ref
 from repro.models import layers as L
 from repro.serving import block_store as BS
-from repro.serving.kv_pool import PagedKVPool, PoolExhausted, page_views, pool_for
+from repro.serving.kv_pool import (
+    KVExport,
+    PagedKVPool,
+    PoolExhausted,
+    page_views,
+    pool_for,
+)
 
 # Decode runs one query per request: a small q tile keeps the padded
 # query block cheap while kv tiles stay MXU-sized.
@@ -102,6 +108,55 @@ class PrefillState:
     # buffered layer-0 rows awaiting the finalize scatter (lazy mode):
     # (positions, k0, v0) per completed chunk
     l0_buf: List[tuple] = field(default_factory=list)
+
+
+@dataclass
+class RequestKV:
+    """One request's engine-side state as a handoff record — the unit a
+    KV migration moves between workers.
+
+    Everything `BatchEngine` used to keep implicitly per-request is
+    factored out here: the pool snapshot (`export` — private page bytes
+    + slot table), the store blocks the request references (`payloads`,
+    riding their content keys so a destination holding a digest pays
+    zero transfer), the engine stats, and — for a chunk-partial handoff
+    — the live `PrefillState` (owed prefix/user inserts, mapped-mask,
+    buffered layer-0 rows, chunk scan position), so `finalize_prefill`
+    can run on a *different* engine than `begin_prefill`.  The serving
+    layer adds the sampling watermarks (`session`: generated tokens,
+    rng state, stop criteria) before routing.
+
+    The pool/store payloads are self-contained host bytes; a partial
+    handoff's `prefill.cp` additionally references the model params,
+    which migration assumes are replicated across workers (they are —
+    every cluster worker serves the same model).
+    """
+
+    rid: int
+    export: "KVExport"
+    held: List[tuple] = field(default_factory=list)  # store keys, w/ dups
+    payloads: Dict[tuple, BS.BlockPayload] = field(default_factory=dict)
+    stats: Optional[ENG.EngineStats] = None
+    prefill: Optional["PrefillState"] = None
+    session: Optional[dict] = None  # backend sampling watermarks
+
+    @property
+    def nbytes(self) -> int:
+        """Worst-case payload: private pages + every store block."""
+        return self.export.nbytes + sum(
+            p.nbytes for p in self.payloads.values()
+        )
+
+
+def migration_bytes(rec: RequestKV, store: Optional[BS.SharedBlockStore]) -> int:
+    """Bytes a worker holding `store` would actually move to import
+    `rec`: the private pages always travel; a store payload travels only
+    when its content key misses (the digest fast path)."""
+    moved = rec.export.nbytes
+    for key, payload in rec.payloads.items():
+        if store is None or not store.has(key):
+            moved += payload.nbytes
+    return moved
 
 
 @dataclass
@@ -815,6 +870,140 @@ class BatchEngine:
         the same tokens)."""
         self.prefill_states.pop(rid, None)
         self.release(rid)
+
+    # ------------------------------ migration ------------------------------
+    def export_request_kv(self, rid: int) -> RequestKV:
+        """Snapshot one request (finished OR chunk-partial prefill) as a
+        `RequestKV` handoff record.  Read-only: the source engine keeps
+        serving the request until the destination's import succeeds,
+        after which the caller evacuates it here (`abort_prefill` /
+        `release`)."""
+        export = self.pool.export_request(rid)
+        held = list(self.store_refs.get(rid, []))
+        payloads: Dict[tuple, BS.BlockPayload] = {}
+        if self.store is not None:
+            for key in held:
+                if key not in payloads:
+                    payload = self.store.export_payload(key)
+                    if payload is not None:
+                        payloads[key] = payload
+        return RequestKV(
+            rid=rid,
+            export=export,
+            held=held,
+            payloads=payloads,
+            stats=self.last_stats.get(rid),
+            prefill=self.prefill_states.get(rid),
+        )
+
+    def import_request_kv(self, rec: RequestKV) -> Dict[str, int]:
+        """Materialize a migrated request in THIS engine without any
+        recompute.
+
+        Store payloads resolve first (digest hit -> zero bytes moved;
+        miss -> insert under the original key; budget refusal -> the
+        referenced rows are privatized into fresh pages), building the
+        shared-slot translation map the pool import needs.  Transactional:
+        a `PoolExhausted` anywhere rolls back every page and store
+        reference this call took, so the caller can retry on another
+        worker and `check_partition` holds on both sides either way.
+
+        -> counters: pages/bytes moved, digest fast-path hits.
+        """
+        rid, export = rec.rid, rec.export
+        store = self.store
+        fmap: Dict[int, int] = {}
+        held_new: List[tuple] = []
+        raw_pages: List[int] = []
+        refused: Dict[tuple, BS.BlockPayload] = {}
+        counters = {
+            "pages": export.n_pages,
+            "bytes": export.nbytes,
+            "digest_hits": 0,
+        }
+        foreign = set(
+            int(s) for s in export.foreign_slots[export.owner_page < 0]
+        )
+        priv_old: set = set()
+        try:
+            if store is not None:
+                seen: set = set()
+                for key in rec.held:
+                    payload = rec.payloads.get(key)
+                    if payload is None:
+                        continue
+                    if key in refused:
+                        continue
+                    blk, hit = store.import_payload(
+                        payload, keep_free=export.n_pages
+                    )
+                    if blk is None:
+                        refused[key] = payload
+                        continue
+                    held_new.append(key)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    if hit:
+                        counters["digest_hits"] += 1
+                    else:
+                        counters["bytes"] += payload.nbytes
+                    for old, new in zip(payload.slots, blk.slots):
+                        fmap[int(old)] = int(new)
+                # budget-refused payloads: privatize the rows the slot
+                # table actually references (fresh pages owned by the
+                # request; the bytes travel like a payload miss)
+                for payload in refused.values():
+                    rows = [
+                        i
+                        for i, s in enumerate(payload.slots)
+                        if int(s) in foreign and int(s) not in fmap
+                    ]
+                    if not rows:
+                        continue
+                    pages = self.pool.alloc_pages(
+                        self.pool.pages_for(len(rows))
+                    )
+                    raw_pages.extend(pages)
+                    slots = self.pool.page_slots(pages)[: len(rows)]
+                    for i, s in zip(rows, slots):
+                        fmap[int(payload.slots[i])] = int(s)
+                        priv_old.add(int(payload.slots[i]))
+                    self.pool.write_slots(
+                        slots, payload.host_k[rows], payload.host_v[rows]
+                    )
+                    counters["bytes"] += (
+                        payload.host_k[rows].nbytes
+                        + payload.host_v[rows].nbytes
+                    )
+                    counters["pages"] += len(pages)
+            self.pool.import_request(export, fmap)
+        except PoolExhausted:
+            if raw_pages:
+                self.pool.release_pages(raw_pages)
+            if store is not None:
+                store.release_all(held_new)
+            raise
+        if raw_pages:
+            self.pool.page_tables[rid].extend(raw_pages)
+        if store is not None:
+            self.store_refs[rid] = held_new
+            store.flush_writes()
+        if rec.stats is not None:
+            self.last_stats[rid] = rec.stats
+        if rec.prefill is not None:
+            st = rec.prefill
+            if priv_old:
+                # privatized positions are no longer store-mapped: clear
+                # the mask so finalize writes (not remaps) them
+                for pos in np.where(export.owner_page < 0)[0]:
+                    if (
+                        int(export.foreign_slots[pos]) in priv_old
+                        and pos < len(st.mapped_mask)
+                    ):
+                        st.mapped_mask[pos] = False
+            self.prefill_states[rid] = st
+        return counters
 
     def _finalize_store(self, st: PrefillState, k_all, v_all, rec) -> np.ndarray:
         """Store bookkeeping for one finalizing request: insert the

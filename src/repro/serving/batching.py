@@ -376,6 +376,67 @@ class JaxEngineBackend:
         self._rngs.pop(req.rid, None)
         self.finish_reason.pop(req.rid, None)
 
+    # ----------------------------- migration ------------------------------
+    def export_request_kv(self, rid: int):
+        """Snapshot one request as an engine `RequestKV` record with the
+        backend's sampling watermarks attached (generated stream, rng
+        state, stop criteria, plan/reuse payloads) — everything a
+        different backend needs to continue the request mid-stream.
+        Read-only; call `evacuate` only after the import succeeded."""
+        rec = self.engine.export_request_kv(rid)
+        rec.session = {
+            "last_token": self.last_token.get(rid),
+            "generated": self.generated.get(rid),
+            "sampling": self.sampling.get(rid),
+            "stop": self.stop_seqs.get(rid),
+            "rng": self._rngs.get(rid),
+            "finish_reason": self.finish_reason.get(rid),
+            "plan": self.plans.get(rid),
+            "reuse": self.reuse.get(rid),
+        }
+        return rec
+
+    def import_request_kv(self, rec) -> Dict[str, int]:
+        """Install a migrated request: engine-side pages/store refs plus
+        the session watermarks.  -> the engine's migration counters.
+        Transactional through the engine (`PoolExhausted` rolls back)."""
+        counters = self.engine.import_request_kv(rec)
+        rid = rec.rid
+        s = rec.session or {}
+        if s.get("last_token") is not None:
+            self.last_token[rid] = s["last_token"]
+        if s.get("generated") is not None:
+            self.generated[rid] = list(s["generated"])
+        for key, store in (
+            ("sampling", self.sampling),
+            ("stop", self.stop_seqs),
+            ("rng", self._rngs),
+            ("finish_reason", self.finish_reason),
+            ("plan", self.plans),
+            ("reuse", self.reuse),
+        ):
+            if s.get(key) is not None:
+                store[rid] = s[key]
+        return counters
+
+    def evacuate(self, rid: int) -> None:
+        """Source-side cleanup after a successful migration: drop every
+        trace of the request here (pages, store refs, chunk state,
+        session maps) — the destination backend owns it now."""
+        self.engine.abort_prefill(rid)
+        for store in (
+            self.last_token,
+            self.generated,
+            self._admit_cache,
+            self.sampling,
+            self.stop_seqs,
+            self._rngs,
+            self.finish_reason,
+            self.plans,
+            self.reuse,
+        ):
+            store.pop(rid, None)
+
     # ------------------------- chunked discipline -------------------------
     def begin_prefill(self, req: PendingRequest) -> None:
         """Admit one request into chunk-resumable prefill (claims its
@@ -445,9 +506,12 @@ class WorkerState:
         sched: str = "wave",
         chunk_tokens: int = 128,
         step_tokens: Optional[int] = None,
+        role: str = "unified",
     ):
         if sched not in ("wave", "chunked"):
             raise ValueError(f"unknown sched {sched!r}")
+        if role not in ("unified", "prefill", "decode"):
+            raise ValueError(f"unknown worker role {role!r}")
         if sched == "chunked" and not hasattr(backend, "begin_prefill"):
             raise ValueError(
                 "sched='chunked' needs a chunk-capable backend "
@@ -455,6 +519,22 @@ class WorkerState:
             )
         self.backend = backend
         self.wid = wid
+        # role-typed tick phases (prefill/decode disaggregation): a
+        # 'prefill' worker admits and prefills, then hands each finished
+        # request to `migrate` instead of entering its own decode set; a
+        # 'decode' worker never admits — it receives migrated requests
+        # through `receive_migration`.  'unified' (the default) runs
+        # both phases exactly as before.
+        self.role = role
+        # migration hook, set by the cluster: (worker, entry, admitted_s)
+        # -> True when the request was handed off to a decode worker
+        self.migrate: Optional[Callable] = None
+        # migrated requests awaiting their transfer-delayed start:
+        # (available_t, DecodeEntry, admitted_s)
+        self.inbound: List[tuple] = []
+        self.migrated_out = 0
+        # rids a decode-role worker preempted itself and may re-admit
+        self._preempt_ok: set = set()
         self.max_batch_tokens = max_batch_tokens
         self.max_decode_batch = max_decode_batch
         self.sched = sched
@@ -488,13 +568,56 @@ class WorkerState:
         self._decode_s_per_step = 0.0
 
     def has_work(self) -> bool:
-        return bool(self.waiting or self.prefilling or self.decoding)
+        return bool(
+            self.waiting or self.prefilling or self.decoding or self.inbound
+        )
 
     def ready_time(self) -> float:
         """Earliest instant this worker can take its next step."""
         if self.decoding or self.prefilling:
             return self.clock
-        return max(self.clock, self.waiting[0].arrival_s)
+        due = []
+        if self.waiting:
+            due.append(self.waiting[0].arrival_s)
+        if self.inbound:
+            due.append(min(t for t, _, _ in self.inbound))
+        if not due:
+            return self.clock
+        return max(self.clock, min(due))
+
+    def receive_migration(
+        self, entry: DecodeEntry, available_t: float, admitted_s: float
+    ) -> None:
+        """Accept a migrated request: it joins the decode set at
+        `available_t` (the source's handoff time plus the billed
+        transfer seconds), carrying its already-sampled first token."""
+        self.inbound.append((available_t, entry, admitted_s))
+
+    def _accept_inbound(self) -> None:
+        """Move transfer-complete migrations into the decode set."""
+        due = [x for x in self.inbound if x[0] <= self.clock]
+        if not due:
+            return
+        self.inbound = [x for x in self.inbound if x[0] > self.clock]
+        for t, entry, admitted_s in due:
+            rid = entry.req.rid
+            self._admit_t[rid] = admitted_s
+            self._last_tok_t[rid] = t
+            self.decoding[rid] = entry
+
+    def _check_role_waiting(self) -> None:
+        """Decode-role workers never take dispatched admissions; the one
+        exception is a migrated request this worker itself preempted
+        under pool pressure (it re-prefills locally from the plan the
+        import installed)."""
+        if self.role != "decode":
+            return
+        bad = [r for r in self.waiting if r.rid not in self._preempt_ok]
+        if bad:
+            raise RuntimeError(
+                f"decode-role worker {self.wid} was dispatched request "
+                f"{bad[0].rid}: admissions must route to prefill workers"
+            )
 
     def backlog_seconds(self, t: float) -> float:
         """Estimated seconds of outstanding work as seen at time `t`:
@@ -531,21 +654,25 @@ class WorkerState:
         (prefill-prioritized, identical to the seed single-instance loop).
         """
         self.clock = self.ready_time()
+        self._accept_inbound()
         batch: List[PendingRequest] = []
         tok = 0
+        self._check_role_waiting()
         for r in self.waiting:
             if r.arrival_s > self.clock:
                 break
             if tok + r.n_tokens > self.max_batch_tokens and batch:
                 break
             if not self.backend.can_admit(r, batch):
-                # strict FCFS under backpressure: never admit a younger
-                # request past one waiting on capacity (head-of-line
-                # wait beats unbounded starvation)
+                # strict FCFS under backpressure: never admit a
+                # younger request past one waiting on capacity
+                # (head-of-line wait beats unbounded starvation)
                 break
             batch.append(r)
             tok += r.n_tokens
         if not batch and not self.decoding:
+            if not self.waiting:
+                return  # only future inbound migrations
             raise RuntimeError(
                 f"request {self.waiting[0].rid} ({self.waiting[0].n_tokens} "
                 "tokens) can never be admitted: KV pool too small "
@@ -580,11 +707,19 @@ class WorkerState:
                     )
                     self.backend.finish(r)
                 else:
-                    self._admit_t[r.rid] = admitted
-                    self._last_tok_t[r.rid] = self.clock
-                    self.decoding[r.rid] = DecodeEntry(
+                    entry = DecodeEntry(
                         r, self.clock - r.arrival_s, r.decode_steps - 1
                     )
+                    if (
+                        self.role == "prefill"
+                        and self.migrate is not None
+                        and self.migrate(self, entry, admitted)
+                    ):
+                        self.migrated_out += 1
+                        continue  # a decode worker owns it now
+                    self._admit_t[r.rid] = admitted
+                    self._last_tok_t[r.rid] = self.clock
+                    self.decoding[r.rid] = entry
         else:
             while True:
                 db = list(self.decoding.values())[: self.max_decode_batch]
@@ -618,7 +753,10 @@ class WorkerState:
         engine step packing decode tokens for every running request
         plus prefill chunks/finalizes for the admitted set."""
         self.clock = self.ready_time()
+        self._accept_inbound()
         self._admit_chunked()
+        if not self.decoding and not self.prefilling:
+            return  # only future inbound migrations
         while True:
             db = list(self.decoding.values())[: self.max_decode_batch]
             try:
@@ -688,15 +826,25 @@ class WorkerState:
                 )
                 self.backend.finish(req)
             else:
-                self._last_tok_t[req.rid] = self.clock
-                self.decoding[req.rid] = DecodeEntry(
+                entry = DecodeEntry(
                     req, self.clock - req.arrival_s, req.decode_steps - 1
                 )
+                if (
+                    self.role == "prefill"
+                    and self.migrate is not None
+                    and self.migrate(self, entry, admitted)
+                ):
+                    self.migrated_out += 1
+                    self._admit_t.pop(req.rid, None)
+                    continue  # a decode worker owns it now
+                self._last_tok_t[req.rid] = self.clock
+                self.decoding[req.rid] = entry
 
     def _admit_chunked(self) -> None:
         """Move due arrivals into the prefilling set, FIFO, while pool
         capacity allows — admission charges chunks, so an admitted
         request competes for the step budget from this tick on."""
+        self._check_role_waiting()
         while self.waiting:
             r = self.waiting[0]
             if r.arrival_s > self.clock:
@@ -770,6 +918,11 @@ class WorkerState:
             self._admit_t.pop(req.rid, None)
             self.backend.preempt(req)
         self.preempted += 1
+        if self.role == "decode":
+            # a migrated request evicted here re-prefills locally — its
+            # plan/session already live on this backend, and its source
+            # prefill worker evacuated it at handoff
+            self._preempt_ok.add(req.rid)
         bisect.insort(self.waiting, req)
 
     def cancel(self, rid: int) -> Optional[str]:

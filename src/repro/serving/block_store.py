@@ -86,6 +86,30 @@ class RequestReuse:
     prefix_len: int = 0
 
 
+@dataclass(frozen=True)
+class BlockPayload:
+    """One store block as it rides a KV migration: the content key plus
+    everything needed to re-insert on a destination-store miss, and the
+    SOURCE store's physical slot ids so the importer can translate the
+    migrating request's shared slot-table entries.  Content addressing
+    is what makes this a *tier* rather than a copy: the key travels
+    first, and a destination that already holds it never moves the
+    bytes."""
+
+    key: Tuple[str, str]
+    kind: str
+    slots: np.ndarray  # (n_tokens,) SOURCE physical slot ids
+    host_k: np.ndarray
+    host_v: np.ndarray
+    tokens: Optional[np.ndarray] = None
+    positions: Optional[np.ndarray] = None
+    pinned: bool = False
+
+    @property
+    def nbytes(self) -> int:
+        return self.host_k.nbytes + self.host_v.nbytes
+
+
 @dataclass
 class StoredBlock:
     key: Tuple[str, str]
@@ -326,6 +350,59 @@ class SharedBlockStore:
         """Land every deferred insert's bytes in ONE fused arena scatter."""
         self.pool.write_slots_batch(self._pending_writes)
         self._pending_writes = []
+
+    # ------------------------------ migration ------------------------------
+    def export_payload(self, key) -> Optional["BlockPayload"]:
+        """Snapshot one block as a migration payload riding its existing
+        content key.  Read-only; None for a key this store doesn't hold."""
+        blk = self.blocks.get(key)
+        if blk is None:
+            return None
+        return BlockPayload(
+            key=blk.key,
+            kind=blk.kind,
+            slots=np.asarray(blk.slots, np.int64),
+            host_k=blk.host_k,
+            host_v=blk.host_v,
+            tokens=blk.tokens,
+            positions=blk.positions,
+            pinned=blk.pinned,
+        )
+
+    def import_payload(
+        self, payload: "BlockPayload", keep_free: int = 0
+    ) -> Tuple[Optional[StoredBlock], bool]:
+        """Resolve a migration payload against THIS store.
+
+        -> (block holding the bytes with one reference taken for the
+        migrating request, digest_hit).  A digest hit — the destination
+        already holds the content key — pays zero transfer: the payload
+        bytes are dead weight the transport never had to move (the
+        beyond-prefix reuse fast path).  On a miss the payload is
+        inserted under its original key/tier/pinning (deferred write;
+        the importer flushes once per migration); a budget refusal
+        returns (None, False) and the caller privatizes those positions
+        instead.
+        """
+        blk = self.get(payload.key)
+        if blk is not None:
+            blk.refcount += 1
+            return blk, True
+        blk = self.insert(
+            payload.key,
+            payload.kind,
+            payload.host_k,
+            payload.host_v,
+            tokens=payload.tokens,
+            positions=payload.positions,
+            pinned=payload.pinned,
+            keep_free=keep_free,
+            defer_write=True,
+        )
+        if blk is None:
+            return None, False
+        blk.refcount += 1
+        return blk, False
 
     # -------------------------------- stats --------------------------------
     def stats(self) -> dict:

@@ -29,6 +29,7 @@ dedicated hardware (per-worker TTFT is each instance's own wall work).
 """
 from __future__ import annotations
 
+import time
 import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
@@ -43,14 +44,16 @@ from repro.core import scheduler as SCH
 from repro.data import synth as SY
 from repro.serving import api as API
 from repro.serving import workload as WL
-from repro.serving.batch_engine import BatchEngine
+from repro.serving.batch_engine import BatchEngine, RequestKV, migration_bytes
 from repro.serving.batching import (
     ClusterBatcher,
     Completion,
+    DecodeEntry,
     JaxEngineBackend,
     PendingRequest,
     WorkerState,
 )
+from repro.serving.kv_pool import PoolExhausted
 
 
 class ClusterWorkerBackend(JaxEngineBackend):
@@ -77,6 +80,14 @@ class ClusterWorkerBackend(JaxEngineBackend):
         # cross-shard pulls skipped because the worker's shared block
         # store already held the (previously transferred) item bytes
         self.transfers_avoided = 0
+        # KV-migration ledger (disaggregated serving): requests this
+        # worker received mid-flight, the pages/bytes that moved, the
+        # seconds billed, and store payloads skipped on a digest hit
+        self.migrations_in = 0
+        self.migrated_pages = 0
+        self.migration_bytes = 0
+        self.migration_seconds = 0.0
+        self.migration_digest_hits = 0
 
     def prefill(self, batch: Sequence[PendingRequest]) -> float:
         dt = super().prefill(batch)
@@ -104,6 +115,10 @@ class ClusterWorkerBackend(JaxEngineBackend):
         self.reuse.pop(req.rid, None)
         self.pending_transfer_s.pop(req.rid, None)
 
+    def evacuate(self, rid: int) -> None:
+        super().evacuate(rid)
+        self.pending_transfer_s.pop(rid, None)
+
 
 @dataclass
 class WorkerReport:
@@ -120,6 +135,14 @@ class WorkerReport:
     # shared-block-store tier stats when kv_reuse is on (None otherwise):
     # user/item tier hit rates + pages held + transfers avoided
     kv_reuse: Optional[dict] = None
+    # disaggregated serving: KV migrations this worker received
+    # (decode role) / handed off (prefill role), and what they cost
+    migrations: int = 0
+    migrated_out: int = 0
+    migrated_pages: int = 0
+    migration_bytes: int = 0
+    migration_s: float = 0.0
+    migration_digest_hits: int = 0
 
 
 @dataclass
@@ -278,6 +301,24 @@ class ClusterEngine:
             chunk_tokens=config.chunk_tokens,
             step_tokens=config.step_tokens,
         )
+        # disaggregated serving: type every worker, route admissions to
+        # the prefill side, and register the migration hook that hands
+        # finished prefills to a decode worker over the block-store
+        # transport (unified config leaves every worker untyped)
+        self.disagg = config.disagg
+        self._prefill_ids = list(range(k))
+        self._decode_ids: List[int] = []
+        if self.disagg.enabled:
+            self._prefill_ids = [
+                w for w in range(k) if self.disagg.role_of(w) == "prefill"
+            ]
+            self._decode_ids = [
+                w for w in range(k) if self.disagg.role_of(w) == "decode"
+            ]
+            for w, worker in enumerate(self.batcher.workers):
+                worker.role = self.disagg.role_of(w)
+                if worker.role == "prefill":
+                    worker.migrate = self._migrate
         self._trace_by_rid: Dict[int, object] = {}
         self.assigned: Dict[int, int] = {}
         self.hit_rate: Dict[int, float] = {}
@@ -287,10 +328,148 @@ class ClusterEngine:
         self, req: PendingRequest, t: float, workers: List[WorkerState]
     ) -> int:
         rq = self._trace_by_rid[req.rid]
-        depths = [w.backlog_seconds(t) for w in workers]
-        wid = self.scheduler.dispatch(rq.candidate_items, depths)
+        if self.disagg.enabled:
+            wid = self._dispatch_prefill(rq, t, workers)
+        else:
+            depths = [w.backlog_seconds(t) for w in workers]
+            wid = self.scheduler.dispatch(rq.candidate_items, depths)
         self._bind(req, rq, wid)
         return wid
+
+    def _dispatch_prefill(
+        self, rq, t: float, workers: List[WorkerState]
+    ) -> int:
+        """Admission routing under disaggregation: the configured policy
+        runs over the prefill workers only (decode workers never admit —
+        they receive requests through migration)."""
+        inds = self._prefill_ids
+        sch = self.scheduler
+        if sch.policy == "round_robin":
+            wid = inds[sch.state.rr_next % len(inds)]
+            sch.state.rr_next += 1
+            return wid
+        if sch.policy == "random":
+            return int(sch.rng.choice(inds))
+        depths = np.asarray(
+            [workers[w].backlog_seconds(t) for w in inds], float
+        )
+        if sch.policy == "least_loaded":
+            return inds[int(np.argmin(depths))]
+        hits = SCH.hit_vector(
+            np.asarray(rq.candidate_items), self.system.placement
+        )[inds]
+        hi = depths.max()
+        load = depths / hi if hi > 0 else np.zeros_like(depths)
+        if sch.policy == "hit_only":
+            score = hits - 1e-9 * load
+        elif sch.policy == "load_only":
+            score = -load
+        else:
+            score = sch.alpha * hits + sch.beta * (1.0 - load)  # Eq. 2
+        return inds[int(np.argmax(score))]
+
+    # ------------------------------ migration ------------------------------
+    def _migrate(
+        self, src: WorkerState, entry: DecodeEntry, admitted_s: float
+    ) -> bool:
+        """Hand one finished prefill from `src` to a decode worker.
+
+        Destination choice extends the Eq. 2 affinity score with a
+        migration-byte term: `mig_gamma * (1 - bytes/max_bytes)` where
+        each candidate's bytes are what it would *actually* move
+        (`batch_engine.migration_bytes` — a worker whose shared block
+        store already holds a payload's content key pays nothing for
+        it).  Candidates are tried best-first; `PoolExhausted` on import
+        rolls back and falls through to the next.  Returns False when no
+        decode worker can take the request, in which case it simply
+        decodes on the prefill worker (unified fallback).
+        """
+        rid = entry.req.rid
+        src_backend = self.backends[src.wid]
+        rec = src_backend.export_request_kv(rid)
+        rq = self._trace_by_rid[rid]
+        inds = self._decode_ids
+        t = src.clock
+        depths = np.asarray(
+            [self.batcher.workers[w].backlog_seconds(t) for w in inds], float
+        )
+        hi = depths.max()
+        load = depths / hi if hi > 0 else np.zeros_like(depths)
+        hits = SCH.hit_vector(
+            np.asarray(rq.candidate_items), self.system.placement
+        )[inds]
+        nbytes = np.asarray(
+            [
+                float(migration_bytes(rec, self.backends[w].engine.store))
+                for w in inds
+            ]
+        )
+        bmax = nbytes.max()
+        bnorm = nbytes / bmax if bmax > 0 else np.zeros_like(nbytes)
+        sch = self.scheduler
+        score = (
+            sch.alpha * hits
+            + sch.beta * (1.0 - load)
+            + self.disagg.mig_gamma * (1.0 - bnorm)
+        )
+        order = sorted(range(len(inds)), key=lambda i: (-score[i], inds[i]))
+        for i in order:
+            wid = inds[i]
+            dst_backend = self.backends[wid]
+            # snapshot what would travel BEFORE the import inserts the
+            # missed payloads into the destination store
+            store_d = dst_backend.engine.store
+            moved = [rec.export.page_k, rec.export.page_v]
+            for key, payload in rec.payloads.items():
+                if store_d is None or not store_d.has(key):
+                    moved += [payload.host_k, payload.host_v]
+            try:
+                counters = dst_backend.import_request_kv(rec)
+            except PoolExhausted:
+                continue
+            mig_s = self._migration_seconds(moved, src.wid, wid, counters)
+            dst_backend.migrations_in += 1
+            dst_backend.migrated_pages += counters["pages"]
+            dst_backend.migration_bytes += counters["bytes"]
+            dst_backend.migration_seconds += mig_s
+            dst_backend.migration_digest_hits += counters["digest_hits"]
+            self.batcher.workers[wid].receive_migration(
+                entry, src.clock + mig_s, admitted_s
+            )
+            src_backend.evacuate(rid)
+            return True
+        return False
+
+    def _migration_seconds(
+        self, arrs: List[np.ndarray], src_wid: int, dst_wid: int,
+        counters: Dict,
+    ) -> float:
+        """Bill one migration's transfer time: under a real mesh, the
+        measured wall time of `jax.device_put` moving the travelling
+        arrays (`arrs`, snapshotted pre-import) between the two workers'
+        home devices (the `ShardClient` pull idiom); otherwise the
+        modeled network time for the moved bytes on the paper's
+        interconnect.  Digest-hit payloads never travel, so they cost
+        nothing either way."""
+        if counters["bytes"] == 0:
+            return 0.0
+        if self.worker_devices is not None:
+            import jax
+
+            src_dev = self.worker_devices[src_wid]
+            dst_dev = self.worker_devices[dst_wid]
+            staged = [jax.device_put(a, src_dev) for a in arrs if a.size]
+            jax.block_until_ready(staged)
+            t0 = time.perf_counter()
+            moved = [jax.device_put(a, dst_dev) for a in staged]
+            jax.block_until_ready(moved)
+            return time.perf_counter() - t0
+        cfg = self.system.cfg
+        row_bytes = (
+            2 * cfg.n_layers * cfg.n_kv_heads * cfg.resolved_head_dim * 4
+        )
+        moved_tokens = int(np.ceil(counters["bytes"] / row_bytes))
+        return CM.fetch_time_s(cfg, self.hw, 0, moved_tokens)
 
     def _item_key(self, item: int) -> tuple:
         """Memoized content key of one catalog item's block (same token
@@ -423,6 +602,12 @@ class ClusterEngine:
                 busy_seconds=self.batcher.workers[w].busy_seconds,
                 preempted=self.batcher.workers[w].preempted,
                 kv_reuse=reuse_stats,
+                migrations=backend.migrations_in,
+                migrated_out=self.batcher.workers[w].migrated_out,
+                migrated_pages=backend.migrated_pages,
+                migration_bytes=backend.migration_bytes,
+                migration_s=backend.migration_seconds,
+                migration_digest_hits=backend.migration_digest_hits,
             )
             workers.append(report)
         return ClusterReport(

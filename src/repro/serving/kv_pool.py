@@ -92,6 +92,44 @@ class PoolStats:
         return 1.0 - self.tokens_resident / max(cap, 1)
 
 
+@dataclass(frozen=True)
+class KVExport:
+    """One request's pool state as a self-contained host-side record —
+    the page-granular unit of KV migration between workers.
+
+    The slot table is stored page-relatively: private entries carry an
+    (index into the exported pages, in-page offset) pair so they can be
+    rebound to whatever pages the destination pool hands out;
+    store-shared entries (`owner_page == -1`) carry the SOURCE pool's
+    physical slot id in `foreign_slots` and must be translated by the
+    importer through a source-slot -> destination-slot map (built from
+    the destination store's blocks).  `page_k`/`page_v` are the private
+    pages' full bytes, (P, page_size, L, Hkv, Dh) pre-RoPE — unused
+    slots ride along so the import is one fused scatter and the
+    round-trip is bitwise.
+    """
+
+    rid: int
+    seq_len: int
+    page_size: int
+    owner_page: np.ndarray     # (n_slots,) exported-page index, -1=shared
+    owner_off: np.ndarray      # (n_slots,) in-page offset where owned
+    foreign_slots: np.ndarray  # (n_slots,) source slot id where shared
+    spare_page: np.ndarray     # (n_spare,) exported-page index
+    spare_off: np.ndarray      # (n_spare,)
+    page_k: np.ndarray         # (P, page_size, L, Hkv, Dh)
+    page_v: np.ndarray
+
+    @property
+    def n_pages(self) -> int:
+        return self.page_k.shape[0]
+
+    @property
+    def nbytes(self) -> int:
+        """Private-page payload bytes (the part migration must move)."""
+        return self.page_k.nbytes + self.page_v.nbytes
+
+
 class PagedKVPool:
     """Fixed-page KV arena + free-list allocator + per-request slot tables.
 
@@ -453,6 +491,100 @@ class PagedKVPool:
         """Install arenas returned by the (donating) jitted decode step."""
         self.arena_k = arena_k
         self.arena_v = arena_v
+
+    # ------------------------------ migration ------------------------------
+    def export_request(self, rid: int) -> "KVExport":
+        """Read-only snapshot of one request's pool state for migration.
+
+        Captures the private pages' bytes (host readback), the slot
+        table re-expressed page-relatively (private entries become
+        (exported-page index, in-page offset) pairs; store-shared
+        entries stay as source-pool physical slot ids the importer must
+        translate), the spare-slot list and seq_len.  Nothing in the
+        source pool is mutated — the caller frees the source side only
+        after a successful `import_request` on the destination.
+        """
+        pages = self.page_tables[rid]
+        index = {p: i for i, p in enumerate(pages)}
+        table = self.slot_tables[rid]
+        t_page = table // self.page_size
+        t_off = table % self.page_size
+        owner_page = np.asarray(
+            [index.get(int(p), -1) for p in t_page], np.int64)
+        owner_off = np.where(owner_page >= 0, t_off, 0).astype(np.int64)
+        foreign_slots = np.where(owner_page < 0, table, -1).astype(np.int64)
+        spare = np.asarray(self._spare.get(rid, []), np.int64)
+        spare_page = np.asarray(
+            [index[int(s) // self.page_size] for s in spare], np.int64)
+        spare_off = (spare % self.page_size if len(spare)
+                     else np.zeros(0, np.int64))
+        page_idx = np.asarray(pages, np.int64)
+        page_k = np.asarray(self.arena_k[page_idx], np.float32) \
+            if len(pages) else np.zeros(
+                (0,) + self.arena_k.shape[1:], np.float32)
+        page_v = np.asarray(self.arena_v[page_idx], np.float32) \
+            if len(pages) else np.zeros(
+                (0,) + self.arena_v.shape[1:], np.float32)
+        return KVExport(rid=rid, seq_len=self.seq_lens[rid],
+                        page_size=self.page_size, owner_page=owner_page,
+                        owner_off=owner_off, foreign_slots=foreign_slots,
+                        spare_page=spare_page, spare_off=spare_off,
+                        page_k=page_k, page_v=page_v)
+
+    def import_request(self, export: "KVExport",
+                       foreign_slot_map: Optional[Dict[int, int]] = None
+                       ) -> List[int]:
+        """Materialize an exported request in THIS pool.
+
+        Allocates fresh private pages for every exported page, rewrites
+        the slot table against them, lands the page bytes in one fused
+        scatter and restores seq_len + spare slots.  Store-shared
+        entries are translated through `foreign_slot_map` (source
+        physical slot -> destination physical slot, built by the store
+        layer from its own blocks).  Transactional: every failure path
+        (`PoolExhausted`, an unmapped foreign slot, a duplicate rid) is
+        checked before the first mutation, so a failed import leaves the
+        destination pool untouched and `check_partition` holds on both
+        pools either way.
+        """
+        rid = export.rid
+        if export.page_size != self.page_size:
+            raise ValueError(
+                f"page_size mismatch: export {export.page_size}, "
+                f"pool {self.page_size}")
+        if rid in self.page_tables:
+            raise KeyError(f"request {rid} already allocated")
+        fmap = foreign_slot_map or {}
+        foreign = export.foreign_slots[export.owner_page < 0]
+        missing = [int(s) for s in foreign if int(s) not in fmap]
+        if missing:
+            raise KeyError(
+                f"import of request {rid}: no destination mapping for "
+                f"shared slots {missing[:4]}")
+        need = export.n_pages
+        if need > len(self._free):
+            raise PoolExhausted(
+                f"import needs {need} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(need)]
+        page_arr = np.asarray(pages, np.int64)
+        table = np.empty(len(export.owner_page), np.int64)
+        owned = export.owner_page >= 0
+        table[owned] = (page_arr[export.owner_page[owned]] * self.page_size
+                        + export.owner_off[owned])
+        table[~owned] = [fmap[int(s)] for s in export.foreign_slots[~owned]]
+        self.page_tables[rid] = pages
+        self.slot_tables[rid] = table
+        self.seq_lens[rid] = export.seq_len
+        self._spare[rid] = list(page_arr[export.spare_page] * self.page_size
+                                + export.spare_off)
+        if need:
+            self.write_slots(self.page_slots(pages),
+                             export.page_k.reshape(
+                                 (-1,) + export.page_k.shape[2:]),
+                             export.page_v.reshape(
+                                 (-1,) + export.page_v.shape[2:]))
+        self._bump_peak()
+        return pages
 
     # -------------------------------- reads --------------------------------
     def seq_len(self, rid: int) -> int:

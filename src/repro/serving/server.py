@@ -98,11 +98,12 @@ class Session:
         await self._done.wait()
         return self.completion
 
-    def cancel(self) -> None:
+    def cancel(self) -> str:
         """Ask the server to cancel this session at the next tick
         boundary (mid-prefill: chunk state and pages roll back through
-        `abort_prefill`; mid-decode: pages release through `finish`)."""
-        self._server.cancel(self.rid)
+        `abort_prefill`; mid-decode: pages release through `finish`).
+        Idempotent — see `AsyncSessionServer.cancel`."""
+        return self._server.cancel(self.rid)
 
     # -- server side -------------------------------------------------------
     def _emit(self, ev: StreamEvent) -> None:
@@ -228,9 +229,20 @@ class AsyncSessionServer:
         self._kick.set()
         return sess
 
-    def cancel(self, rid: int) -> None:
+    def cancel(self, rid: int) -> str:
+        """Request cancellation of one session.  Idempotent no-op on a
+        session the server doesn't know ("unknown") or one that already
+        finished ("done") — neither enqueues anything, so a stale cancel
+        can never reach the scheduler task or shoot down a later session
+        that reuses the rid.  -> "unknown" | "done" | "cancelling"."""
+        sess = self._sessions.get(rid)
+        if sess is None:
+            return "unknown"
+        if sess.state == "done":
+            return "done"
         self._cancels.add(rid)
         self._kick.set()
+        return "cancelling"
 
     async def start(self) -> "AsyncSessionServer":
         if self._task is not None:

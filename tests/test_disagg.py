@@ -1,0 +1,436 @@
+"""Disaggregated prefill/decode serving: KV migration correctness.
+
+Pins the tentpole invariants of role-typed serving:
+
+* `export_request` then `import_request` is a lossless round-trip at
+  the pool layer — arena bytes, slot-table semantics (private AND
+  store-shared entries), seq_len, spare slots and the ownership
+  partition all survive, including chunk-partial (truncated seq_len)
+  exports, across random layouts (seeded sweep + hypothesis variant);
+* a store payload rides its content key: a destination already holding
+  the digest takes a reference and moves zero bytes;
+* engine-level `import_request_kv` is transactional — `PoolExhausted`
+  rolls back every page and store reference it took;
+* a chunk-partial prefill handed to a *different* engine finalizes to
+  the exact logits the source engine would have produced;
+* the cluster decodes identical tokens with disaggregation on vs off
+  across {wave, chunked} x {kv-reuse on, off} on the heavy-tail trace,
+  and the unified default keeps every migration counter at zero;
+* the `DisaggConfig` surface validates its invariants and round-trips
+  through the `--config` grammar.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.serving import api as API
+from repro.serving import block_store as BS
+from repro.serving import workload as WL
+from repro.serving.batch_engine import (BatchEngine, BatchRequest, RequestKV,
+                                        migration_bytes)
+from repro.serving.block_store import SharedBlockStore, check_partition
+from repro.serving.cluster import ClusterEngine
+from repro.serving.kv_pool import PagedKVPool, PoolExhausted, pool_for
+
+L, HKV, DH, PS = 2, 2, 4, 4  # tiny arena geometry for the pool tests
+
+
+@pytest.fixture(scope="module")
+def tiny_system():
+    from repro.core.rcllm import make_tiny_system
+
+    return make_tiny_system(
+        n_items=60, n_requests_hist=30, k_instances=2, n_layers=2, d_model=32
+    )
+
+
+@pytest.fixture(scope="module")
+def heavy_workload(tiny_system):
+    """Heavy-tail trace (some long prompts) + plans + reuse metadata."""
+    system, pool_rv, prof, _ = tiny_system
+    trace = WL.heavy_tail_trace(system.catalog, pool_rv, prof, 6, qps=8.0,
+                                n_users=3, long_prompt_frac=0.4,
+                                long_prompt_reviews=6, seed=5)
+    pend, plans = WL.rcllm_workload(system, trace, decode_steps=3)
+    reuse = WL.rcllm_reuse_info(system, trace, plans)
+    return trace, pend, plans, reuse
+
+
+# ------------------------------------------- pool-layer round-trip
+def _mk_pool(n_pages=64):
+    pool = PagedKVPool(n_layers=L, n_kv_heads=HKV, head_dim=DH,
+                       page_size=PS, n_pages=n_pages)
+    return pool, SharedBlockStore(pool)
+
+
+def _rand_kv(rng, t):
+    return (rng.standard_normal((t, L, HKV, DH)).astype(np.float32),
+            rng.standard_normal((t, L, HKV, DH)).astype(np.float32))
+
+
+def _build_request(rng, pool, store, rid):
+    """One random request in `pool`: optionally a store-mapped prefix,
+    private tail bytes, random spare capacity, and (half the time) a
+    truncated seq_len simulating a chunk-partial prefill. -> held keys."""
+    n_tokens = int(rng.integers(5, 28))
+    held = []
+    t_blk = 0
+    if rng.integers(0, 2):
+        t_blk = int(rng.integers(1, n_tokens // 2 + 2))
+        key = (BS.ITEM_TIER, f"blk-{rid}-{t_blk}")
+        kb, vb = _rand_kv(rng, t_blk)
+        blk = store.insert(key, BS.ITEM_TIER, kb, vb)
+        assert blk is not None
+        blk.refcount += 1
+        held.append(key)
+        pool.alloc_mapped(rid, n_tokens, np.arange(t_blk),
+                          np.asarray(blk.slots, np.int64),
+                          extra_pages=int(rng.integers(0, 3)))
+    else:
+        pool.alloc(rid, n_tokens)
+    priv = np.arange(t_blk, n_tokens)
+    if len(priv):
+        kp, vp = _rand_kv(rng, len(priv))
+        pool.write_at(rid, priv, kp, vp)
+    else:
+        pool.seq_lens[rid] = t_blk
+    if rng.integers(0, 2):  # chunk-partial: decode hasn't caught up yet
+        pool.seq_lens[rid] = int(rng.integers(max(t_blk, 1), n_tokens + 1))
+    return held
+
+
+def _migrate(export, held, store_src, pool_dst, store_dst):
+    """The transport in miniature: resolve payloads by content key, then
+    import the pool snapshot under the slot translation map."""
+    fmap = {}
+    for key in held:
+        payload = store_src.export_payload(key)
+        blk, _hit = store_dst.import_payload(payload)
+        assert blk is not None
+        for old, new in zip(payload.slots, blk.slots):
+            fmap[int(old)] = int(new)
+    pages = pool_dst.import_request(export, fmap)
+    store_dst.flush_writes()
+    return pages
+
+
+def _roundtrip_case(rng):
+    pool_a, store_a = _mk_pool()
+    pool_b, store_b = _mk_pool()
+    held = {}
+    for rid in range(int(rng.integers(1, 4))):
+        held[rid] = _build_request(rng, pool_a, store_a, rid)
+    check_partition(pool_a, store_a)
+    for rid, keys in held.items():
+        export = pool_a.export_request(rid)
+        assert export.nbytes == export.page_k.nbytes + export.page_v.nbytes
+        _migrate(export, keys, store_a, pool_b, store_b)
+        # bytes: the visible KV is bitwise identical on both sides
+        ka, va = pool_a.gather(rid)
+        kb, vb = pool_b.gather(rid)
+        assert np.array_equal(ka, kb) and np.array_equal(va, vb)
+        # table semantics: length, seq watermark, spare capacity
+        assert pool_b.seq_lens[rid] == pool_a.seq_lens[rid]
+        assert len(pool_b.slot_tables[rid]) == len(pool_a.slot_tables[rid])
+        assert (len(pool_b._spare.get(rid, []))
+                == len(pool_a._spare.get(rid, [])))
+        # store-shared entries still point at store-owned slots
+        shared = np.where(export.owner_page < 0)[0]
+        store_slots = {
+            int(s) for blk in store_b.blocks.values() for s in blk.slots
+        }
+        for pos in shared:
+            assert int(pool_b.slot_tables[rid][pos]) in store_slots
+    check_partition(pool_a, store_a)
+    check_partition(pool_b, store_b)
+    # both sides tear down to empty pools (store pages stay store-owned)
+    for rid, keys in held.items():
+        pool_a.free(rid)
+        pool_b.free(rid)
+        store_a.release_all(keys)
+        store_b.release_all(keys)
+    assert pool_a.stats().pages_in_use == 0
+    assert pool_b.stats().pages_in_use == 0
+    check_partition(pool_a, store_a)
+    check_partition(pool_b, store_b)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_export_import_roundtrip_sweep(seed):
+    _roundtrip_case(np.random.default_rng(seed))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+def test_export_import_roundtrip_property(seed):
+    _roundtrip_case(np.random.default_rng(seed))
+
+
+def test_pool_import_validates_before_mutating():
+    rng = np.random.default_rng(3)
+    pool_a, store_a = _mk_pool()
+    held = _build_request(rng, pool_a, store_a, 0)
+    export = pool_a.export_request(0)
+
+    # duplicate rid: the destination already serves this request
+    pool_b, store_b = _mk_pool()
+    _migrate(export, held, store_a, pool_b, store_b)
+    with pytest.raises(KeyError):
+        pool_b.import_request(export, {})
+
+    # unmapped foreign slots (only when the export shares store rows)
+    if np.any(export.owner_page < 0):
+        pool_c, _ = _mk_pool()
+        free0 = pool_c.free_pages
+        with pytest.raises(KeyError):
+            pool_c.import_request(export, {})
+        assert pool_c.free_pages == free0
+        assert 0 not in pool_c.page_tables
+
+    # page-size mismatch is a geometry error, not silent corruption
+    pool_d = PagedKVPool(n_layers=L, n_kv_heads=HKV, head_dim=DH,
+                         page_size=2 * PS, n_pages=64)
+    with pytest.raises(ValueError, match="page_size"):
+        pool_d.import_request(export, {s: s for s in range(10**4)})
+
+
+def test_pool_import_exhaustion_leaves_destination_untouched():
+    rng = np.random.default_rng(5)
+    pool_a, store_a = _mk_pool()
+    pool_a.alloc(0, 24)  # 6 pages of private bytes
+    k, v = _rand_kv(rng, 24)
+    pool_a.write_at(0, np.arange(24), k, v)
+    export = pool_a.export_request(0)
+    pool_b, store_b = _mk_pool(n_pages=4)  # 3 usable pages < 6 needed
+    free0 = pool_b.free_pages
+    with pytest.raises(PoolExhausted):
+        pool_b.import_request(export, {})
+    assert pool_b.free_pages == free0
+    assert 0 not in pool_b.page_tables and 0 not in pool_b.slot_tables
+    check_partition(pool_b, store_b)
+
+
+# ---------------------------------------- payload tier economics
+def test_payload_digest_hit_moves_zero_bytes():
+    rng = np.random.default_rng(7)
+    pool_a, store_a = _mk_pool()
+    pool_b, store_b = _mk_pool()
+    key = (BS.ITEM_TIER, "shared-digest")
+    kb, vb = _rand_kv(rng, 6)
+    store_a.insert(key, BS.ITEM_TIER, kb, vb)
+    assert store_a.export_payload(("item", "nope")) is None
+    payload = store_a.export_payload(key)
+    assert payload.nbytes == payload.host_k.nbytes + payload.host_v.nbytes
+
+    blk1, hit1 = store_b.import_payload(payload)
+    store_b.flush_writes()
+    blk2, hit2 = store_b.import_payload(payload)
+    assert (hit1, hit2) == (False, True)
+    assert blk2 is blk1 and blk1.refcount == 2  # one ref per import
+    assert np.array_equal(blk1.host_k, kb)
+
+    # migration_bytes prices exactly what would travel
+    pool_src, _ = _mk_pool()
+    pool_src.alloc(0, 8)
+    kp, vp = _rand_kv(rng, 8)
+    pool_src.write_at(0, np.arange(8), kp, vp)
+    rec = RequestKV(rid=0, export=pool_src.export_request(0),
+                    held=[key], payloads={key: payload})
+    assert migration_bytes(rec, None) == rec.export.nbytes + payload.nbytes
+    assert migration_bytes(rec, store_b) == rec.export.nbytes  # digest hit
+
+
+# ------------------------------------- engine-layer handoff
+def _mk_engine(system, n_pages=512, with_store=True):
+    pool = pool_for(system.cfg, n_pages=n_pages)
+    return BatchEngine(system.params, system.cfg, pool=pool,
+                       store=SharedBlockStore(pool) if with_store else None,
+                       chunk_tokens=64)
+
+
+def test_chunk_partial_handoff_matches_single_engine(tiny_system,
+                                                     heavy_workload):
+    """A request exported mid-prefill (one chunk in) and imported into a
+    *different* engine finalizes to the exact logits a single engine
+    produces, with both pools' partitions intact and fully drained."""
+    system, *_ = tiny_system
+    _, _, plans, reuse = heavy_workload
+    rid = max(plans, key=lambda r: plans[r][0].n)  # longest: many chunks
+    plan, ck, cv, have = plans[rid]
+    req = BatchRequest(rid=rid, tokens=plan.tokens, plan=plan, cached_k=ck,
+                       cached_v=cv, have=have, n_reserve=2, reuse=reuse[rid])
+    eng_a = _mk_engine(system)
+    eng_b = _mk_engine(system)
+    eng_a.begin_prefill(req)
+    rep = eng_a.step(64, [], [], [rid])  # exactly one chunk lands
+    assert rid in eng_a.prefill_states and rid not in rep.finalized
+
+    rec = eng_a.export_request_kv(rid)
+    assert rec.prefill is not None  # chunk-partial: live scan state rides
+    counters = eng_b.import_request_kv(rec)
+    assert counters["pages"] >= rec.export.n_pages
+    assert counters["bytes"] >= rec.export.nbytes
+    eng_a.abort_prefill(rid)  # evacuate the source
+    assert eng_a.pool.stats().pages_in_use == 0
+    check_partition(eng_a.pool, eng_a.store)
+
+    got = None
+    for _ in range(64):
+        rep = eng_b.step(10_000, [], [], [rid])
+        if rid in rep.finalized:
+            got = rep.finalized[rid]
+            break
+    assert got is not None, "migrated prefill never finalized"
+    ref_eng = _mk_engine(system, with_store=False)
+    ref = ref_eng.prefill([dataclasses.replace(req, reuse=None)],
+                          mode="rcllm")
+    assert np.array_equal(got, ref[0])
+    eng_b.release(rid)
+    assert eng_b.pool.stats().pages_in_use == 0
+    check_partition(eng_b.pool, eng_b.store)
+
+
+def test_engine_import_rolls_back_on_exhaustion(tiny_system, heavy_workload):
+    """`import_request_kv` is transactional: a destination too small for
+    the export keeps zero pages and zero store references."""
+    system, *_ = tiny_system
+    _, _, plans, reuse = heavy_workload
+    rid = max(plans, key=lambda r: plans[r][0].n)
+    plan, ck, cv, have = plans[rid]
+    req = BatchRequest(rid=rid, tokens=plan.tokens, plan=plan, cached_k=ck,
+                       cached_v=cv, have=have, n_reserve=2, reuse=reuse[rid])
+    eng_a = _mk_engine(system)
+    eng_a.begin_prefill(req)
+    while rid in eng_a.prefill_states:
+        eng_a.step(10_000, [], [], [rid])
+    rec = eng_a.export_request_kv(rid)
+    assert rec.export.n_pages > 3
+
+    pool_b = pool_for(system.cfg, n_pages=4)
+    eng_b = BatchEngine(system.params, system.cfg, pool=pool_b,
+                        store=SharedBlockStore(pool_b), chunk_tokens=64)
+    free0 = pool_b.free_pages
+    with pytest.raises(PoolExhausted):
+        eng_b.import_request_kv(rec)
+    assert pool_b.free_pages >= free0 - 0  # no leaked private pages
+    assert rid not in pool_b.page_tables
+    assert rid not in eng_b.store_refs
+    for blk in eng_b.store.blocks.values():
+        assert blk.refcount == 0
+    check_partition(pool_b, eng_b.store)
+    eng_a.release(rid)
+
+
+# --------------------------------------- cluster-level parity
+def _run_cluster(system, trace, sched, kv_reuse, disagg=None):
+    cfg = API.ServeConfig(engine="jax", k=2, sched=sched, kv_reuse=kv_reuse,
+                          chunk_tokens=64,
+                          disagg=disagg if disagg else API.DisaggConfig())
+    eng = ClusterEngine(system, cfg)
+    rep = eng.run(trace, decode_steps=3)
+    for backend in eng.backends:
+        assert backend.engine.pool.stats().pages_in_use == 0
+        check_partition(backend.engine.pool, backend.engine.store)
+    return rep
+
+
+def _assert_parity(system, trace, sched, kv_reuse):
+    ref = _run_cluster(system, trace, sched, kv_reuse)
+    rep = _run_cluster(system, trace, sched, kv_reuse,
+                       disagg=API.DisaggConfig(prefill_workers=1,
+                                               decode_workers=1))
+    assert len(rep.completions) == len(trace)
+    for rid in range(len(trace)):
+        assert rep.generated[rid] == ref.generated[rid], (
+            f"request {rid} decoded differently under disagg "
+            f"(sched={sched}, kv_reuse={kv_reuse})"
+        )
+    # the unified reference never migrates; the split cluster moves
+    # every multi-step request from its prefill to its decode worker
+    assert all(w.migrations == 0 for w in ref.workers)
+    pre, dec = rep.workers[0], rep.workers[1]
+    assert pre.migrated_out > 0 and pre.migrations == 0
+    assert dec.migrations == pre.migrated_out
+    assert dec.migrated_pages > 0 and dec.migration_bytes > 0
+    assert dec.migration_s >= 0.0
+    if kv_reuse:
+        assert dec.migration_digest_hits > 0  # store keys dedup transfer
+    return rep
+
+
+def test_disagg_token_parity_chunked_reuse(tiny_system, heavy_workload):
+    """Fast tier-1 witness: the full migration path (export, payload
+    digest hits, import, decode handoff) decodes the unified tokens."""
+    system, *_ = tiny_system
+    trace, *_ = heavy_workload
+    _assert_parity(system, trace, "chunked", True)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("sched,kv_reuse",
+                         [("wave", False), ("wave", True),
+                          ("chunked", False)])
+def test_disagg_token_parity_matrix(tiny_system, heavy_workload, sched,
+                                    kv_reuse):
+    """Remaining {sched} x {kv-reuse} combos of the parity matrix."""
+    system, *_ = tiny_system
+    trace, *_ = heavy_workload
+    _assert_parity(system, trace, sched, kv_reuse)
+
+
+def test_unified_default_has_no_migration_machinery(tiny_system,
+                                                    heavy_workload):
+    """disagg off is byte-for-byte the pre-disagg cluster: every worker
+    unified, no migrate hook installed, all counters pinned to zero."""
+    system, *_ = tiny_system
+    trace, *_ = heavy_workload
+    cfg = API.ServeConfig(engine="jax", k=2, sched="chunked",
+                          chunk_tokens=64)
+    assert not cfg.disagg.enabled
+    eng = ClusterEngine(system, cfg)
+    for worker in eng.batcher.workers:
+        assert worker.role == "unified"
+        assert worker.migrate is None
+    rep = eng.run(trace, decode_steps=3)
+    for w in rep.workers:
+        assert (w.migrations, w.migrated_out, w.migrated_pages,
+                w.migration_bytes, w.migration_s,
+                w.migration_digest_hits) == (0, 0, 0, 0, 0.0, 0)
+
+
+# --------------------------------------------- config surface
+def test_disagg_config_validation():
+    with pytest.raises(ValueError, match="must be >= 0"):
+        API.DisaggConfig(prefill_workers=-1, decode_workers=2)
+    with pytest.raises(ValueError, match="both roles"):
+        API.DisaggConfig(prefill_workers=2, decode_workers=0)
+    with pytest.raises(ValueError, match="mig_gamma"):
+        API.DisaggConfig(prefill_workers=1, decode_workers=1,
+                         mig_gamma=-0.1)
+    off = API.DisaggConfig()
+    assert not off.enabled and off.role_of(0) == "unified"
+    d = API.DisaggConfig(prefill_workers=2, decode_workers=1)
+    assert d.enabled and d.n_workers == 3
+    assert [d.role_of(w) for w in range(3)] == ["prefill", "prefill",
+                                                "decode"]
+
+
+def test_disagg_serve_config_cross_validation_and_grammar():
+    with pytest.raises(ValueError, match="engine='jax'"):
+        API.ServeConfig(engine="sim", k=2,
+                        disagg=API.DisaggConfig(prefill_workers=1,
+                                                decode_workers=1))
+    with pytest.raises(ValueError, match="must equal"):
+        API.ServeConfig(engine="jax", k=3,
+                        disagg=API.DisaggConfig(prefill_workers=1,
+                                                decode_workers=1))
+    cfg = API.ServeConfig.parse(
+        "engine=jax,k=4,disagg.prefill_workers=2,disagg.decode_workers=2"
+    )
+    assert cfg.disagg == API.DisaggConfig(prefill_workers=2,
+                                          decode_workers=2)
+    assert API.ServeConfig.parse(cfg.render()) == cfg  # total grammar
+    with pytest.raises(ValueError, match="sub-config"):
+        API.ServeConfig.parse("disagg=2")

@@ -240,6 +240,31 @@ def test_cancel_mid_decode(tiny_system, heavy_workload):
     _assert_clean(engine)
 
 
+def test_cancel_after_completion_is_idempotent_noop(tiny_system,
+                                                    heavy_workload):
+    """Regression: cancelling a finished (or never-submitted) session is
+    a status-returning no-op.  A stale cancel used to enqueue the rid
+    unconditionally, where it could linger and shoot down a later
+    session reusing the id; now it reports 'done'/'unknown' and leaves
+    the cancel queue untouched."""
+    system, *_ = tiny_system
+    _, pend, plans, _ = heavy_workload
+    scfg = API.ServeConfig(engine="jax", sched="chunked", n_pages=256,
+                           chunk_tokens=64)
+    engine, backend = _build(system, scfg)
+    completions, server = serve_trace(backend, scfg, _submits(pend, plans))
+    assert len(completions) == len(pend)
+    for rid in completions:
+        assert server.cancel(rid) == "done"
+        assert server.cancel(rid) == "done"      # idempotent
+    assert server.cancel(10**9) == "unknown"     # never submitted
+    assert not server._cancels                   # nothing was enqueued
+    assert server.metrics.cancelled == 0
+    for comp in completions.values():
+        assert comp.reason == "length"           # nobody got shot down
+    _assert_clean(engine)
+
+
 # --------------------------------------- stop sequences / max_tokens
 @pytest.mark.parametrize("sched", ["wave", "chunked"])
 def test_stop_sequence_ends_stream(tiny_system, heavy_workload, sched):
