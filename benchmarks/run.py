@@ -18,6 +18,7 @@ default sizes reproduce the paper's structure in full.
   openloop    async session server: Poisson wall-clock arrivals, SLO curve
   mesh        tensor-parallel serving on forced host devices: TTFT vs tp
   disagg      disaggregated prefill/decode: KV migration vs re-prefill
+  tiered      tiered quantized store: host-RAM spill vs drop-on-evict
 
 Each entry also writes a JSON artifact into ``--out`` (see
 docs/benchmarks.md for the full flag and output reference).
@@ -36,8 +37,8 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default="all",
                     help="comma-separated subset of fig6|fig8_9|fig10|fig11|"
                          "tableIII|kernels|serving|cluster|attn_backend|"
-                         "reuse|chunked|paged_decode|openloop|mesh|disagg, "
-                         "or all")
+                         "reuse|chunked|paged_decode|openloop|mesh|disagg|"
+                         "tiered, or all")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--planted", action="store_true",
                     help="tableIII: train the planted-preference ranker")
@@ -91,6 +92,9 @@ def main(argv=None) -> int:
                 args.out, quick=args.quick),
         "disagg": lambda: __import__(
             "benchmarks.bench_disagg", fromlist=["run"]).run(
+                args.out, quick=args.quick),
+        "tiered": lambda: __import__(
+            "benchmarks.bench_tiered", fromlist=["run"]).run(
                 args.out, quick=args.quick),
     }
     only = {s.strip() for s in args.only.split(",") if s.strip()}

@@ -229,6 +229,15 @@ def run_jax_cluster(config: ServeConfig, args) -> dict:
             if config.disagg.enabled
             else None
         ),
+        "store": (
+            {
+                "kv_store_dtype": config.store.kv_store_dtype,
+                "spill_mb": config.store.spill_mb,
+                "prefetch_pages_per_tick": config.store.prefetch_pages_per_tick,
+            }
+            if config.store.enabled
+            else None
+        ),
         "policy": rep.policy,
         "requests": len(rep.completions),
         "decode_steps": config.decode_steps,
@@ -265,6 +274,11 @@ def run_jax_cluster(config: ServeConfig, args) -> dict:
                 "migration_mbytes": round(w.migration_bytes / 1e6, 3),
                 "migration_s": round(w.migration_s, 6),
                 "migration_digest_hits": w.migration_digest_hits,
+                "device_blocks": w.device_blocks,
+                "spill_blocks": w.spill_blocks,
+                "spill_hits": w.spill_hits,
+                "prefetch_promotions": w.prefetch_promotions,
+                "dequant_s": round(w.dequant_s, 6),
                 "kv_reuse": w.kv_reuse,
             }
             for w in rep.workers

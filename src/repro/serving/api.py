@@ -230,6 +230,58 @@ class DisaggConfig:
 
 
 @dataclass(frozen=True)
+class StoreConfig:
+    """The typed tiered-store surface: how the shared block store holds
+    its payload bytes and what happens to evicted blocks.
+
+    ``kv_store_dtype='int8'`` quantizes user/item block payloads to
+    symmetric per-(row, kv-head)-scaled int8 (~4x more catalog blocks
+    per host byte; dequantized on assembly, accuracy-gated).
+    ``spill_mb`` bounds a host-RAM spill tier that device-tier evictions
+    demote to instead of dropping; 0 keeps the legacy drop-on-evict.
+    ``prefetch_pages_per_tick`` budgets background promotion of
+    router-hinted spill blocks back to device pages, per chunked tick
+    (0 disables prefetch — spill hits then promote at insert time).
+    The default ``StoreConfig()`` is *disabled*: fp32 payloads,
+    drop-on-evict, no prefetch — byte-for-byte the pre-tier store.
+    """
+
+    kv_store_dtype: str = "fp32"
+    spill_mb: int = 0
+    prefetch_pages_per_tick: int = 0
+
+    def __post_init__(self):
+        def bad(msg: str):
+            raise ValueError(f"invalid StoreConfig: {msg}")
+
+        if self.kv_store_dtype not in ("fp32", "int8"):
+            bad(
+                f"kv_store_dtype={self.kv_store_dtype!r} not in "
+                "('fp32', 'int8')"
+            )
+        if self.spill_mb < 0:
+            bad(f"spill_mb={self.spill_mb} must be >= 0")
+        if self.prefetch_pages_per_tick < 0:
+            bad(
+                f"prefetch_pages_per_tick={self.prefetch_pages_per_tick} "
+                "must be >= 0"
+            )
+        if self.prefetch_pages_per_tick > 0 and self.spill_mb == 0:
+            bad(
+                f"prefetch_pages_per_tick={self.prefetch_pages_per_tick} "
+                "needs spill_mb > 0 (there is no spill tier to prefetch "
+                "from)"
+            )
+
+    @property
+    def enabled(self) -> bool:
+        """Does this config change the store at all?  The default
+        ``StoreConfig()`` is disabled — fp32 payloads and drop-on-evict,
+        preserving every existing bitwise invariant."""
+        return self.kv_store_dtype != "fp32" or self.spill_mb > 0
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     """Every serving knob, validated once, threaded everywhere.
 
@@ -258,6 +310,7 @@ class ServeConfig:
     r_rev: float = 0.3
     mesh: MeshConfig = field(default_factory=MeshConfig)
     disagg: DisaggConfig = field(default_factory=DisaggConfig)
+    store: StoreConfig = field(default_factory=StoreConfig)
 
     def __post_init__(self):
         def bad(msg: str):
@@ -345,6 +398,25 @@ class ServeConfig:
                     f"k={self.k} must equal disagg.prefill_workers + "
                     f"disagg.decode_workers = {self.disagg.n_workers} "
                     "(every cluster worker gets exactly one role)"
+                )
+        if not isinstance(self.store, StoreConfig):
+            bad(
+                f"store must be a StoreConfig, got "
+                f"{type(self.store).__name__}"
+            )
+        if self.store.enabled:
+            if self.engine != "jax":
+                bad(
+                    f"store.kv_store_dtype={self.store.kv_store_dtype!r}/"
+                    f"store.spill_mb={self.store.spill_mb} needs "
+                    f"engine='jax' (engine={self.engine!r} has no block "
+                    "store)"
+                )
+            if not self.kv_reuse:
+                bad(
+                    "store tiering configures the shared block store: "
+                    "set kv_reuse=on (the default store config is a "
+                    "no-op without it)"
                 )
         if self.mesh.tp > 1:
             # the Mosaic/Pallas kernels are single-device programs: under
@@ -455,14 +527,15 @@ class ServeConfig:
         by the field's declared type; booleans accept on/off/true/false.
         Sub-config fields nest with a dot (``mesh.tp=4``,
         ``mesh.mesh_shape=2x4``, ``mesh.axis_names=data+model``,
-        ``disagg.prefill_workers=2``); the grammar is total — `render`
-        emits a string this method parses back to an equal config.
+        ``disagg.prefill_workers=2``, ``store.spill_mb=64``); the
+        grammar is total — `render` emits a string this method parses
+        back to an equal config.
         """
         base = base if base is not None else cls()
         if not spec.strip():
             return base
         fields = {f.name: f for f in dataclasses.fields(cls)}
-        subs = {"mesh": MeshConfig, "disagg": DisaggConfig}
+        subs = {"mesh": MeshConfig, "disagg": DisaggConfig, "store": StoreConfig}
         sub_fields = {
             name: {f.name: f for f in dataclasses.fields(t)}
             for name, t in subs.items()
@@ -495,6 +568,8 @@ class ServeConfig:
                     "mesh.axis_names=data+model",
                     "disagg": "disagg.prefill_workers=2, "
                     "disagg.decode_workers=2, disagg.mig_gamma=0.25",
+                    "store": "store.kv_store_dtype=int8, store.spill_mb=64, "
+                    "store.prefetch_pages_per_tick=8",
                 }
                 raise ValueError(
                     f"--config {key} is a sub-config: set its fields as "
@@ -518,7 +593,7 @@ class ServeConfig:
         ``ServeConfig.parse(cfg.render()) == cfg`` for every valid
         config (the round-trip the grammar tests pin)."""
         parts = []
-        subs = {"mesh": MeshConfig, "disagg": DisaggConfig}
+        subs = {"mesh": MeshConfig, "disagg": DisaggConfig, "store": StoreConfig}
         for f in dataclasses.fields(self):
             v = getattr(self, f.name)
             if f.name in subs:
@@ -730,7 +805,14 @@ def build_engine(params, lm_cfg, config: ServeConfig, pool=None, sel=None):
         cfg,
         pool=pool,
         sel=sel,
-        store=SharedBlockStore(pool) if config.kv_reuse else None,
+        store=SharedBlockStore(
+            pool,
+            kv_store_dtype=config.store.kv_store_dtype,
+            spill_mb=config.store.spill_mb,
+            prefetch_pages_per_tick=config.store.prefetch_pages_per_tick,
+        )
+        if config.kv_reuse
+        else None,
         chunk_tokens=config.chunk_tokens,
         mesh=mesh,
     )

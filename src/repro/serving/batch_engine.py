@@ -154,7 +154,7 @@ def migration_bytes(rec: RequestKV, store: Optional[BS.SharedBlockStore]) -> int
     when its content key misses (the digest fast path)."""
     moved = rec.export.nbytes
     for key, payload in rec.payloads.items():
-        if store is None or not store.has(key):
+        if store is None or not store.resident(key):
             moved += payload.nbytes
     return moved
 
@@ -1116,6 +1116,11 @@ class BatchEngine:
         """
         rep = StepReport()
         if self.store is not None:
+            # drain router-hinted spill promotions (budgeted demand-swap:
+            # LRU refcount-0 victims demote to the spill tier to make
+            # room; a no-op unless store.prefetch_pages_per_tick>0),
+            # then land their deferred writes with this tick's flush
+            self.store.prefetch()
             self.store.flush_writes()
         if decode_rids:
             rep.decode_logits = self.decode(decode_rids, decode_tokens)

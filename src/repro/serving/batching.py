@@ -580,28 +580,39 @@ class WorkerState:
         if self.waiting:
             due.append(self.waiting[0].arrival_s)
         if self.inbound:
-            due.append(min(t for t, _, _ in self.inbound))
+            due.append(min(x[0] for x in self.inbound))
         if not due:
             return self.clock
         return max(self.clock, min(due))
 
     def receive_migration(
-        self, entry: DecodeEntry, available_t: float, admitted_s: float
+        self,
+        entry: DecodeEntry,
+        available_t: float,
+        admitted_s: float,
+        prefilling: bool = False,
     ) -> None:
         """Accept a migrated request: it joins the decode set at
         `available_t` (the source's handoff time plus the billed
-        transfer seconds), carrying its already-sampled first token."""
-        self.inbound.append((available_t, entry, admitted_s))
+        transfer seconds), carrying its already-sampled first token.
+        A chunk-partial handoff (`prefilling=True` — the live
+        `PrefillState` rode the KV record) joins the prefilling set
+        instead and resumes chunking on this worker's engine."""
+        self.inbound.append((available_t, entry, admitted_s, prefilling))
 
     def _accept_inbound(self) -> None:
-        """Move transfer-complete migrations into the decode set."""
+        """Move transfer-complete migrations into the decode (or, for
+        chunk-partial handoffs, prefilling) set."""
         due = [x for x in self.inbound if x[0] <= self.clock]
         if not due:
             return
         self.inbound = [x for x in self.inbound if x[0] > self.clock]
-        for t, entry, admitted_s in due:
+        for t, entry, admitted_s, prefilling in due:
             rid = entry.req.rid
             self._admit_t[rid] = admitted_s
+            if prefilling:
+                self.prefilling.append(entry.req)
+                continue
             self._last_tok_t[rid] = t
             self.decoding[rid] = entry
 
@@ -909,6 +920,24 @@ class WorkerState:
                 "alone — backend decode-page reservation is broken"
             )
         if any(r.rid == req.rid for r in self.prefilling):
+            if (
+                self.role == "prefill"
+                and self.migrate is not None
+                and self.migrate(
+                    self,
+                    DecodeEntry(req, 0.0, req.decode_steps),
+                    self._admit_t.get(req.rid, req.arrival_s),
+                )
+            ):
+                # chunk-partial handoff instead of preemption: the live
+                # PrefillState rode the KV record to a decode worker,
+                # which resumes chunking there; the migrate hook's
+                # evacuate already freed this worker's pages, so pool
+                # pressure is relieved without losing the scan progress
+                self.prefilling = [r for r in self.prefilling if r.rid != req.rid]
+                self._admit_t.pop(req.rid, None)
+                self.migrated_out += 1
+                return
             self.prefilling = [r for r in self.prefilling if r.rid != req.rid]
             self._admit_t.pop(req.rid, None)
             self.backend.preempt_prefill(req)

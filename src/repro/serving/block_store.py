@@ -25,12 +25,29 @@ tokens are bitwise identical with reuse on or off.  The store also
 keeps the host-side block bytes, so a cluster worker whose store holds
 an item block skips the cross-shard transfer entirely (a zero-latency
 hit in the ledger's terms).
+
+The store is additionally a *two-tier, optionally quantized* hierarchy:
+
+* **quantized payloads** (``kv_store_dtype="int8"``) — user/item block
+  bytes are held as symmetric per-(row, kv-head)-scaled int8
+  (`quantize_rows`), ~4x more catalog blocks per host byte, and
+  dequantized on assembly into the arena.  The default ``fp32`` keeps
+  every bitwise invariant; int8 is accuracy-gated (tableIII fidelity).
+* **host-RAM spill tier** (``spill_mb > 0``) — device-tier evictions
+  demote to a capacity-bounded, content-addressed host tier instead of
+  being dropped; a key hit there re-stages through the normal admission
+  path (`_promote`), avoiding re-transfer/recompute.  `prefetch` drains
+  router-issued affinity `hint`s into free headroom, budgeted pages per
+  chunked-scheduler tick, so queued requests find their blocks already
+  on device.
 """
 from __future__ import annotations
 
 import hashlib
+import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -57,6 +74,45 @@ def content_key(kind: str, *arrays) -> Tuple[str, str]:
         h.update(str(a.shape).encode())
         h.update(a.tobytes())
     return (kind, h.hexdigest())
+
+
+# --------------------------- quantized payloads ----------------------------
+def quantize_rows(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-(row, kv-head) int8 quantization of KV bytes.
+
+    ``x``: (t, L, Hkv, Dh) fp32.  The scale is the absmax over the head
+    dimension divided by 127 (so the largest element of every row maps
+    exactly to ±127), kept fp32 at shape (t, L, Hkv, 1).  All-zero rows
+    get scale 1.0 so dequantization is exact for them too.  The scheme
+    is *idempotent*: quantizing ``dequantize_rows(q, s)`` reproduces
+    (q, s) bitwise, so a block can hop store→payload→store any number
+    of times without drift.
+    """
+    x = np.ascontiguousarray(x, np.float32)
+    amax = np.max(np.abs(x), axis=-1, keepdims=True)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.rint(x / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize_rows(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    """Inverse of `quantize_rows`: (t, L, Hkv, Dh) fp32."""
+    return q.astype(np.float32) * scale
+
+
+def _dequant(
+    data: np.ndarray,
+    scale: Optional[np.ndarray],
+    store: Optional["SharedBlockStore"],
+) -> np.ndarray:
+    """Materialize a block's fp32 bytes, billing dequant wall time."""
+    if scale is None:
+        return data
+    t0 = time.perf_counter()
+    out = dequantize_rows(data, scale)
+    if store is not None:
+        store.dequant_s += time.perf_counter() - t0
+    return out
 
 
 @dataclass
@@ -112,22 +168,87 @@ class BlockPayload:
 
 @dataclass
 class StoredBlock:
+    """A device-tier block.  Payload bytes live in ``data_k``/``data_v``
+    — fp32, or per-row-scaled int8 when the store quantizes (then
+    ``scale_k``/``scale_v`` hold the fp32 scales).  ``host_k``/``host_v``
+    materialize the fp32 view on demand so every existing consumer
+    (staging, migration, arena writes) is representation-oblivious."""
+
     key: Tuple[str, str]
     kind: str
     pages: List[int]
     slots: np.ndarray  # (n_tokens,) physical slot ids, block-row order
-    host_k: np.ndarray  # host copies: staging + re-insert after eviction
-    host_v: np.ndarray
+    data_k: np.ndarray  # host copies: staging + re-insert after eviction
+    data_v: np.ndarray
+    scale_k: Optional[np.ndarray] = None  # None => data is fp32
+    scale_v: Optional[np.ndarray] = None
     tokens: Optional[np.ndarray] = None
     positions: Optional[np.ndarray] = None  # user tier: covered positions
     pinned: bool = False
     refcount: int = 0
     last_used: int = 0
     hits: int = 0
+    store: Optional["SharedBlockStore"] = field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def n_tokens(self) -> int:
         return len(self.slots)
+
+    @property
+    def nbytes(self) -> int:
+        n = self.data_k.nbytes + self.data_v.nbytes
+        if self.scale_k is not None:
+            n += self.scale_k.nbytes + self.scale_v.nbytes
+        return n
+
+    @property
+    def host_k(self) -> np.ndarray:
+        return _dequant(self.data_k, self.scale_k, self.store)
+
+    @property
+    def host_v(self) -> np.ndarray:
+        return _dequant(self.data_v, self.scale_v, self.store)
+
+
+@dataclass
+class SpilledBlock:
+    """A block demoted to the host-RAM spill tier: same (possibly
+    quantized) payload, no pool pages, no slots — it cannot back a
+    slot-table entry until promoted back to device.  ``last_used``
+    carries the device-tier LRU stamp across the hop so spill-capacity
+    trimming continues in true LRU order."""
+
+    key: Tuple[str, str]
+    kind: str
+    data_k: np.ndarray
+    data_v: np.ndarray
+    scale_k: Optional[np.ndarray] = None
+    scale_v: Optional[np.ndarray] = None
+    tokens: Optional[np.ndarray] = None
+    positions: Optional[np.ndarray] = None
+    last_used: int = 0
+    hits: int = 0
+
+    @property
+    def n_tokens(self) -> int:
+        return int(self.data_k.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        n = self.data_k.nbytes + self.data_v.nbytes
+        if self.scale_k is not None:
+            n += self.scale_k.nbytes + self.scale_v.nbytes
+        return n
+
+    @property
+    def host_k(self) -> np.ndarray:
+        return _dequant(self.data_k, self.scale_k, None)
+
+    @property
+    def host_v(self) -> np.ndarray:
+        return _dequant(self.data_v, self.scale_v, None)
 
 
 def user_reuse_positions(
@@ -154,8 +275,30 @@ class SharedBlockStore:
         pool: PagedKVPool,
         max_pages: Optional[int] = None,
         max_user_pages: Optional[int] = None,
+        *,
+        kv_store_dtype: str = "fp32",
+        spill_mb: int = 0,
+        prefetch_pages_per_tick: int = 0,
     ):
+        if kv_store_dtype not in ("fp32", "int8"):
+            raise ValueError(f"kv_store_dtype must be fp32|int8, got {kv_store_dtype}")
         self.pool = pool
+        self.kv_store_dtype = kv_store_dtype
+        # host-RAM spill tier: capacity-bounded demotion target for
+        # device-tier evictions (0 = drop-on-evict, the legacy behavior)
+        self.spill_cap = int(spill_mb) * 2**20
+        self.prefetch_pages_per_tick = int(prefetch_pages_per_tick)
+        self.spill: Dict[Tuple[str, str], SpilledBlock] = {}
+        self.spill_nbytes = 0
+        # affinity prefetch hints from the router, oldest first; bounded
+        # so a misbehaving scheduler can't grow it without limit
+        self._hints: Deque[Tuple[str, str]] = deque(maxlen=512)
+        # keys a bound-but-unadmitted request declared it will need:
+        # still device-resident when hinted, but if one is evicted before
+        # that request admits, the demotion auto-queues a prefetch hint
+        # so the block is swapped back ahead of the admission gate
+        self._interest: set = set()
+        self.dequant_s = 0.0
         # the store must never crowd requests out of their own pool:
         # total budget is half the pages (LRU keeps the hot set), and
         # PINNED pages — which eviction can never reclaim, so they can
@@ -187,15 +330,33 @@ class SharedBlockStore:
             "inserts": 0,
             "insert_skips": 0,
             "evictions": 0,
+            "spills": 0,
+            "insert_spills": 0,
+            "spill_drops": 0,
+            "spill_hits": 0,
+            "prefetch_promotions": 0,
         }
 
     # ------------------------------- lookup --------------------------------
     def has(self, key) -> bool:
+        """Device-tier membership ONLY: a spilled block has no slots, so
+        admission accounting and slot-table mapping must not see it."""
         return key in self.blocks
+
+    def in_spill(self, key) -> bool:
+        return key in self.spill
+
+    def resident(self, key) -> bool:
+        """Held in either tier — the bytes exist on this worker, so a
+        migration or transfer of this key moves zero bytes."""
+        return key in self.blocks or key in self.spill
 
     def peek(self, key) -> Optional[StoredBlock]:
         """Lookup without touching LRU state or counters (admission)."""
         return self.blocks.get(key)
+
+    def spill_peek(self, key) -> Optional[SpilledBlock]:
+        return self.spill.get(key)
 
     def get(self, key) -> Optional[StoredBlock]:
         blk = self.blocks.get(key)
@@ -209,6 +370,7 @@ class SharedBlockStore:
         for the holder's lifetime).  Counts a tier hit/miss."""
         blk = self.get(key)
         kind = key[0]
+        self._interest.discard(key)          # demand arrived; hint served
         if blk is None:
             self.counters[f"misses_{kind}"] += 1
             return None
@@ -252,7 +414,12 @@ class SharedBlockStore:
         )
 
     def _evict_lru(self) -> bool:
-        """Evict the least-recently-used unpinned, unreferenced block."""
+        """Evict the least-recently-used unpinned, unreferenced block.
+
+        With a spill tier configured the victim's payload is demoted to
+        host RAM (pages freed, bytes kept) instead of dropped; the spill
+        tier itself trims oldest-first — the device LRU stamp rides the
+        hop — whenever the demotion pushes it over capacity."""
         victims = [b for b in self.blocks.values() if not b.pinned and b.refcount == 0]
         if not victims:
             return False
@@ -260,8 +427,44 @@ class SharedBlockStore:
         del self.blocks[victim.key]
         self.pool.release_pages(victim.pages)
         self.counters["evictions"] += 1
+        if self.spill_cap > 0:
+            self._spill_put(
+                SpilledBlock(
+                    key=victim.key,
+                    kind=victim.kind,
+                    data_k=victim.data_k,
+                    data_v=victim.data_v,
+                    scale_k=victim.scale_k,
+                    scale_v=victim.scale_v,
+                    tokens=victim.tokens,
+                    positions=victim.positions,
+                    last_used=victim.last_used,
+                    hits=victim.hits,
+                )
+            )
+            if victim.key in self._interest:
+                # a bound-but-unadmitted request declared it needs this
+                # block: queue it for prefetch promotion right away
+                self._interest.discard(victim.key)
+                self._hints.append(victim.key)
         self.version += 1
         return True
+
+    def _spill_put(self, sp: SpilledBlock) -> None:
+        """Land one encoded payload in the host tier (replacing any stale
+        entry under the same key) and trim oldest-first back under
+        capacity."""
+        old = self.spill.pop(sp.key, None)
+        if old is not None:
+            self.spill_nbytes -= old.nbytes
+        self.spill[sp.key] = sp
+        self.spill_nbytes += sp.nbytes
+        self.counters["spills"] += 1
+        while self.spill_nbytes > self.spill_cap and self.spill:
+            drop = min(self.spill.values(), key=lambda s: s.last_used)
+            del self.spill[drop.key]
+            self.spill_nbytes -= drop.nbytes
+            self.counters["spill_drops"] += 1
 
     def evict_for(self, n_pages: int) -> bool:
         """LRU-evict until `n_pages` are free in the pool.  -> success."""
@@ -298,53 +501,227 @@ class SharedBlockStore:
         """
         if key in self.blocks:
             return self.blocks[key]
-        n = k.shape[0]
+        n = np.asarray(k).shape[0]
         if n == 0:
             return None
+        if key in self.spill:
+            # content addressing: same key = same bytes, so the spilled
+            # payload (already quantized) is the block — promote it
+            # instead of re-quantizing the caller's copy
+            blk = self._promote(key, keep_free=keep_free, defer_write=defer_write)
+            if blk is not None:
+                self.counters["spill_hits"] += 1
+                return blk
+            self.counters["insert_skips"] += 1
+            return None
+        data_k, scale_k = self._quant(kind, k)
+        data_v, scale_v = self._quant(kind, v)
+        blk = self._admit(
+            key,
+            kind,
+            data_k,
+            data_v,
+            scale_k,
+            scale_v,
+            tokens=tokens,
+            positions=positions,
+            pinned=pinned,
+            keep_free=keep_free,
+            defer_write=defer_write,
+        )
+        if blk is None:
+            if self.spill_cap > 0:
+                # write-around: the device tier refused the bytes (tier
+                # budget / pinned cap / keep_free), but the host tier can
+                # still keep the encoded payload — a revisit then stages
+                # from RAM instead of re-pulling across shards or
+                # recomputing, and a prefetch hint can promote it later
+                self._tick += 1
+                self._spill_put(
+                    SpilledBlock(
+                        key=key,
+                        kind=kind,
+                        data_k=data_k,
+                        data_v=data_v,
+                        scale_k=scale_k,
+                        scale_v=scale_v,
+                        tokens=tokens,
+                        positions=positions,
+                        last_used=self._tick,
+                    )
+                )
+                self.counters["insert_spills"] += 1
+            self.counters["insert_skips"] += 1
+            return None
+        self.counters["inserts"] += 1
+        return blk
+
+    def _quant(
+        self, kind: str, arr: np.ndarray
+    ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Store-tier representation of incoming bytes.  Only the user
+        and item tiers quantize: the prefix tier's shared content IS the
+        recomputed content (admission credits it without a steal
+        allowance), so it must stay bit-exact fp32."""
+        arr = np.asarray(arr, np.float32)
+        if self.kv_store_dtype == "int8" and kind != PREFIX_TIER:
+            return quantize_rows(arr)
+        return arr, None
+
+    def _admit(
+        self,
+        key,
+        kind: str,
+        data_k: np.ndarray,
+        data_v: np.ndarray,
+        scale_k: Optional[np.ndarray],
+        scale_v: Optional[np.ndarray],
+        tokens: Optional[np.ndarray],
+        positions: Optional[np.ndarray],
+        pinned: bool,
+        keep_free: int,
+        defer_write: bool,
+        hits: int = 0,
+    ) -> Optional[StoredBlock]:
+        """Budget gates + page allocation + arena write for an already
+        store-encoded payload.  Shared by fresh inserts and spill
+        promotions.  -> None on any budget refusal (caller counts it)."""
+        n = data_k.shape[0]
         need = self.pool.pages_for(n)
         if kind == USER_TIER:
             if self.pages_held(USER_TIER) + need > self.max_user_pages:
-                self.counters["insert_skips"] += 1
                 return None
         if pinned:
             held = sum(
                 len(b.pages) for b in self.blocks.values() if b.pinned
             )
             if held + need > self.max_pinned_pages:
-                self.counters["insert_skips"] += 1
                 return None
         while self.pages_held() + need > self.max_pages:
             if not self._evict_lru():
-                self.counters["insert_skips"] += 1
                 return None
         if not self.evict_for(need + keep_free):
-            self.counters["insert_skips"] += 1
             return None
         pages = self.pool.alloc_pages(need)
         slots = self.pool.page_slots(pages)[:n]
-        host_k = np.asarray(k, np.float32)
-        host_v = np.asarray(v, np.float32)
-        if defer_write:
-            self._pending_writes.append((slots, host_k, host_v))
-        else:
-            self.pool.write_slots(slots, host_k, host_v)
         self._tick += 1
         blk = StoredBlock(
             key=key,
             kind=kind,
             pages=pages,
             slots=slots,
-            host_k=host_k,
-            host_v=host_v,
+            data_k=data_k,
+            data_v=data_v,
+            scale_k=scale_k,
+            scale_v=scale_v,
             tokens=tokens,
             positions=positions,
             pinned=pinned,
             last_used=self._tick,
+            hits=hits,
+            store=self,
         )
+        # the arena always holds the fp32 view the engine reads; under
+        # int8 that is dequantize(quantize(x)) — the accuracy-gated path
+        if defer_write:
+            self._pending_writes.append((slots, blk.host_k, blk.host_v))
+        else:
+            self.pool.write_slots(slots, blk.host_k, blk.host_v)
         self.blocks[key] = blk
-        self.counters["inserts"] += 1
         self.version += 1
         return blk
+
+    def _promote(
+        self, key, keep_free: int = 0, defer_write: bool = True
+    ) -> Optional[StoredBlock]:
+        """Re-stage a spilled block into device pages under its existing
+        key.  The spill entry is only removed on success — a refusal
+        leaves the bytes in the spill tier for a later attempt.  (The
+        admission path may itself spill other victims and trim the spill
+        tier, so the entry is re-popped defensively afterwards.)"""
+        sp = self.spill.get(key)
+        if sp is None:
+            return None
+        blk = self._admit(
+            key,
+            sp.kind,
+            sp.data_k,
+            sp.data_v,
+            sp.scale_k,
+            sp.scale_v,
+            tokens=sp.tokens,
+            positions=sp.positions,
+            pinned=False,
+            keep_free=keep_free,
+            defer_write=defer_write,
+            hits=sp.hits,
+        )
+        if blk is None:
+            return None
+        gone = self.spill.pop(key, None)
+        if gone is not None:
+            self.spill_nbytes -= gone.nbytes
+        return blk
+
+    # ------------------------------- prefetch -------------------------------
+    def hint(self, keys: Sequence) -> None:
+        """Affinity prefetch hints: content keys a queued request will
+        need on this worker (the Eq. 2 router knows the destination
+        before admission).  A key already in the spill tier queues for
+        promotion directly; a still-resident (or absent) key registers
+        *interest* — if churn demotes it before the hinting request
+        admits, the eviction auto-queues the prefetch hint, so the
+        bytes are swapped back ahead of the admission gate instead of
+        re-entering through the insert path.  Duplicates are cheap
+        no-ops at promote time."""
+        for key in keys:
+            if key in self.spill and key not in self.blocks:
+                self._hints.append(key)
+            else:
+                self._interest.add(key)
+                if len(self._interest) > 4 * (self._hints.maxlen or 512):
+                    self._interest.clear()     # advisory state: shed, don't grow
+
+    def prefetch(self, budget_pages: Optional[int] = None) -> int:
+        """Promote hinted spill blocks to device, oldest hint first,
+        within a per-tick page budget.  A promotion may demand-swap:
+        the admission gates inside `_promote` evict LRU refcount-0
+        blocks to make room, and with the spill tier on those victims
+        demote to host RAM instead of dropping — the device tier is
+        reordered toward hinted (imminently demanded) bytes, nothing is
+        lost, and pinned or in-use pages are never touched.  A hint
+        needing more pages than a whole tick's budget is dropped; so is
+        one whose promotion is refused (every resident block still
+        referenced) — the insert path promotes it on demand instead.
+        -> promotions.
+        """
+        budget = (
+            self.prefetch_pages_per_tick if budget_pages is None else budget_pages
+        )
+        if budget <= 0:
+            return 0
+        promoted = 0
+        remaining = int(budget)
+        while self._hints and remaining > 0:
+            key = self._hints[0]
+            sp = self.spill.get(key)
+            if sp is None or key in self.blocks:
+                self._hints.popleft()
+                continue
+            need = self.pool.pages_for(sp.n_tokens)
+            if need > budget:
+                self._hints.popleft()
+                continue
+            if need > remaining:
+                break
+            if self._promote(key, defer_write=True) is None:
+                self._hints.popleft()
+                continue
+            self._hints.popleft()
+            self.counters["prefetch_promotions"] += 1
+            promoted += 1
+            remaining -= need
+        return promoted
 
     def flush_writes(self) -> None:
         """Land every deferred insert's bytes in ONE fused arena scatter."""
@@ -388,6 +765,17 @@ class SharedBlockStore:
         if blk is not None:
             blk.refcount += 1
             return blk, True
+        if payload.key in self.spill:
+            # spill hit: the bytes are already on this worker's host RAM
+            # — re-stage them through the normal admission path instead
+            # of consuming the transported payload (still a digest hit:
+            # the transport never needed to move the bytes)
+            blk = self._promote(payload.key, keep_free=keep_free, defer_write=True)
+            if blk is None:
+                return None, False
+            self.counters["spill_hits"] += 1
+            blk.refcount += 1
+            return blk, True
         blk = self.insert(
             payload.key,
             payload.kind,
@@ -411,6 +799,10 @@ class SharedBlockStore:
         misses = sum(self.counters[f"misses_{t}"] for t in tiers)
         return {
             "blocks": len(self.blocks),
+            "device_blocks": len(self.blocks),
+            "spill_blocks": len(self.spill),
+            "spill_mbytes": self.spill_nbytes / 2**20,
+            "dequant_s": self.dequant_s,
             "pages_user": self.pages_held(USER_TIER),
             "pages_item": self.pages_held(ITEM_TIER),
             "pages_prefix": self.pages_held(PREFIX_TIER),
@@ -536,6 +928,8 @@ def check_partition(
             claim(page, f"request {rid}")
     store_pages = set()
     if store is not None:
+        both = set(store.blocks) & set(store.spill)
+        assert not both, f"keys in both device and spill tiers: {both}"
         for blk in store.blocks.values():
             assert blk.refcount >= 0, f"{blk.key}: negative refcount"
             assert len(blk.pages) == pool.pages_for(blk.n_tokens)

@@ -143,6 +143,13 @@ class WorkerReport:
     migration_bytes: int = 0
     migration_s: float = 0.0
     migration_digest_hits: int = 0
+    # tiered store: device/spill occupancy and tier-traffic counters
+    # (zero everywhere unless kv_reuse is on)
+    device_blocks: int = 0
+    spill_blocks: int = 0
+    spill_hits: int = 0
+    prefetch_promotions: int = 0
+    dequant_s: float = 0.0
 
 
 @dataclass
@@ -421,7 +428,9 @@ class ClusterEngine:
             store_d = dst_backend.engine.store
             moved = [rec.export.page_k, rec.export.page_v]
             for key, payload in rec.payloads.items():
-                if store_d is None or not store_d.has(key):
+                # resident() covers the spill tier too: a spilled key
+                # re-stages from host RAM, so the transport moves nothing
+                if store_d is None or not store_d.resident(key):
                     moved += [payload.host_k, payload.host_v]
             try:
                 counters = dst_backend.import_request_kv(rec)
@@ -434,7 +443,10 @@ class ClusterEngine:
             dst_backend.migration_seconds += mig_s
             dst_backend.migration_digest_hits += counters["digest_hits"]
             self.batcher.workers[wid].receive_migration(
-                entry, src.clock + mig_s, admitted_s
+                entry,
+                src.clock + mig_s,
+                admitted_s,
+                prefilling=rec.prefill is not None,
             )
             src_backend.evacuate(rid)
             return True
@@ -510,9 +522,22 @@ class ClusterEngine:
         store = backend.engine.store
         staged: Dict[int, IC.ItemBlock] = {}
         to_stage = []
+        hint_keys = []
         for it in items:
             it = int(it)
-            blk_s = store.peek(self._item_key(it)) if store else None
+            key = self._item_key(it) if store else None
+            if store is not None and store.spill_cap > 0:
+                # declare this request's item keys to the store now (the
+                # Eq. 2 router just fixed the destination worker): a key
+                # already in the spill tier queues for prefetch promotion,
+                # a still-resident one registers interest so churn before
+                # this request's admission auto-queues the hint
+                hint_keys.append(key)
+            blk_s = store.peek(key) if store else None
+            if blk_s is None and store is not None:
+                # spill tier: the bytes are still on this worker's host
+                # RAM — stage from there (no cross-shard pull)
+                blk_s = store.spill_peek(key)
             if blk_s is not None:
                 staged[it] = IC.ItemBlock(
                     item_id=it,
@@ -524,6 +549,8 @@ class ClusterEngine:
                     backend.transfers_avoided += 1
             else:
                 to_stage.append(it)
+        if hint_keys:
+            store.hint(hint_keys)
         pulled, moved_tokens = backend.shard.stage(to_stage)
         staged.update(pulled)
         ck, cv, have = ASM.gather_cached_kv(
@@ -608,6 +635,17 @@ class ClusterEngine:
                 migration_bytes=backend.migration_bytes,
                 migration_s=backend.migration_seconds,
                 migration_digest_hits=backend.migration_digest_hits,
+                device_blocks=(
+                    reuse_stats["device_blocks"] if reuse_stats else 0
+                ),
+                spill_blocks=(
+                    reuse_stats["spill_blocks"] if reuse_stats else 0
+                ),
+                spill_hits=reuse_stats["spill_hits"] if reuse_stats else 0,
+                prefetch_promotions=(
+                    reuse_stats["prefetch_promotions"] if reuse_stats else 0
+                ),
+                dequant_s=reuse_stats["dequant_s"] if reuse_stats else 0.0,
             )
             workers.append(report)
         return ClusterReport(

@@ -188,6 +188,14 @@ class PagedKVPool:
         return -(-max(n_tokens, 1) // self.page_size)
 
     @property
+    def bytes_per_token(self) -> int:
+        """fp32 K+V bytes one token row occupies across all layers —
+        the unit spill-tier capacity and transfer modeling price in."""
+        return int(
+            2 * self.arena_k.dtype.itemsize * np.prod(self.arena_k.shape[2:])
+        )
+
+    @property
     def free_pages(self) -> int:
         return len(self._free)
 

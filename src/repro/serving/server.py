@@ -162,6 +162,11 @@ class OnlineMetrics:
                 h = stats.get(f"hits_{tier}", 0)
                 m = stats.get(f"misses_{tier}", 0)
                 snap[f"store_{tier}_hit_rate"] = round(h / max(h + m, 1), 4)
+            snap["store_device_blocks"] = stats["device_blocks"]
+            snap["store_spill_blocks"] = stats["spill_blocks"]
+            snap["store_spill_hits"] = stats["spill_hits"]
+            snap["store_prefetch_promotions"] = stats["prefetch_promotions"]
+            snap["store_dequant_s"] = round(stats["dequant_s"], 6)
         return snap
 
 

@@ -380,6 +380,58 @@ def test_disagg_token_parity_matrix(tiny_system, heavy_workload, sched,
     _assert_parity(system, trace, sched, kv_reuse)
 
 
+def test_cluster_mid_chunk_migration_token_parity(tiny_system,
+                                                  heavy_workload):
+    """Cluster-path chunk-partial handoff: pool pressure mid-prefill on
+    a prefill-role worker migrates the LIVE PrefillState to the decode
+    worker (instead of preempting), which resumes chunking, finalizes
+    on its own engine, and decodes the unified reference's tokens.
+
+    Organic admission accounting never overcommits a prefill worker, so
+    the pressure is injected: the prefill backend's step raises
+    `PoolExhausted` once, the first time a request is mid-scan."""
+    system, *_ = tiny_system
+    trace, *_ = heavy_workload
+    ref = _run_cluster(system, trace, "chunked", True)
+
+    cfg = API.ServeConfig(engine="jax", k=2, sched="chunked", kv_reuse=True,
+                          chunk_tokens=64,
+                          disagg=API.DisaggConfig(prefill_workers=1,
+                                                  decode_workers=1))
+    eng = ClusterEngine(system, cfg)
+    w0 = eng.batcher.workers[0]
+    assert w0.role == "prefill"
+    orig_step = w0.backend.step
+    forced = {"done": False}
+
+    def pressured_step(budget, decode_batch, prefilling):
+        if not forced["done"] and any(
+            w0.backend.engine.prefill_states.get(r.rid) is not None
+            and w0.backend.engine.prefill_states[r.rid].started
+            for r in prefilling
+        ):
+            forced["done"] = True
+            raise PoolExhausted("injected mid-chunk pool pressure")
+        return orig_step(budget, decode_batch, prefilling)
+
+    w0.backend.step = pressured_step
+    rep = eng.run(trace, decode_steps=3)
+    assert forced["done"], "pressure was never injected"
+    for backend in eng.backends:
+        assert backend.engine.pool.stats().pages_in_use == 0
+        check_partition(backend.engine.pool, backend.engine.store)
+    assert len(rep.completions) == len(trace)
+    for rid in range(len(trace)):
+        assert rep.generated[rid] == ref.generated[rid], (
+            f"request {rid} decoded differently after mid-chunk migration"
+        )
+    # the injected pressure migrated a mid-scan request without burning
+    # a preemption: the victim's scan progress survived the hop
+    pre = rep.workers[0]
+    assert pre.migrated_out > 0
+    assert w0.preempted == 0
+
+
 def test_unified_default_has_no_migration_machinery(tiny_system,
                                                     heavy_workload):
     """disagg off is byte-for-byte the pre-disagg cluster: every worker
